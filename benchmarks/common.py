@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+__all__ = ["time_fn", "emit"]
+
+
+def time_fn(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall time of a jitted callable (blocks on output)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,40 @@
+"""FAGP vs exact GP: accuracy and time (the Joukov-Kulic comparison the
+paper builds on — FAGP must match exact-GP accuracy while removing the
+O(N^3) solve)."""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import exact_gp, fagp, mercer
+from repro.data import make_gp_dataset
+
+from .common import emit, time_fn
+
+
+def run(full: bool = False):
+    sizes = (500, 1000, 2000, 4000) if full else (500, 1000, 2000)
+    p = 2
+    for N in sizes:
+        X, y, Xs, ys = make_gp_dataset(N, p, seed=1)
+        params = mercer.SEKernelParams.create([0.8] * p, [2.0] * p, noise=0.05)
+
+        t_exact = time_fn(lambda: exact_gp.predict(exact_gp.fit(X, y, params), Xs)[0],
+                          iters=2)
+        mu_e, _ = exact_gp.predict(exact_gp.fit(X, y, params), Xs)
+        rmse_e = float(np.sqrt(np.mean((np.asarray(mu_e) - np.asarray(ys)) ** 2)))
+        emit(f"fagp_vs_exact/exact/N{N}", t_exact, f"rmse={rmse_e:.4f}")
+
+        cfg = fagp.FAGPConfig(n=10, store_train=False)
+        t_fagp = time_fn(
+            lambda: fagp.predict_mean_var(fagp.fit(X, y, params, cfg), Xs, cfg)[0]
+        )
+        mu_a, _ = fagp.predict_mean_var(fagp.fit(X, y, params, cfg), Xs, cfg)
+        rmse_a = float(np.sqrt(np.mean((np.asarray(mu_a) - np.asarray(ys)) ** 2)))
+        emit(f"fagp_vs_exact/fagp/N{N}", t_fagp,
+             f"rmse={rmse_a:.4f};M={10**p};speedup={t_exact / t_fagp:.1f}x")
+
+
+if __name__ == "__main__":
+    run(full="--full" in sys.argv)

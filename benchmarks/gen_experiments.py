@@ -1,0 +1,228 @@
+"""Render EXPERIMENTS.md from experiments/dryrun/*.json + perf_log.md.
+
+  PYTHONPATH=src python -m benchmarks.gen_experiments
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "experiments" / "dryrun"
+BASE = ROOT / "experiments" / "dryrun_baseline"
+
+
+def load(d: Path):
+    return [json.loads(f.read_text()) for f in sorted(d.glob("*.json"))]
+
+
+def table(cells, mesh: str) -> str:
+    rows = [
+        "| arch | shape | kind | compute s | memory s | collective s | dominant "
+        "| peak GiB/dev | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3,
+             "fit_10k": 4, "fit_8m": 5, "predict_1m": 6}
+    for c in sorted(cells, key=lambda c: (c.get("arch", ""), order.get(c.get("shape", ""), 9))):
+        if c.get("mesh") != mesh:
+            continue
+        if "skipped" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | — | SKIP (full attention "
+                        f"at 500k) | | | | | | |")
+            continue
+        if "error" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | — | ERROR | | | | | | |")
+            continue
+        t = c["terms"]
+        peak = c["memory"].get("peak_bytes_est", 0) / 2**30
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['kind']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | **{t['dominant']}** "
+            f"| {peak:.1f} | {c.get('useful_ratio', 0):.3f} "
+            f"| {c.get('roofline_fraction', 0):.4f} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(cells, mesh: str) -> str:
+    rows = [
+        "| arch | shape | per-dev FLOPs | per-dev HBM bytes | per-dev wire bytes "
+        "| dominant collectives | args GiB | temps GiB | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(cells, key=lambda c: (c.get("arch", ""), c.get("shape", ""))):
+        if c.get("mesh") != mesh or "terms" not in c:
+            continue
+        pd = c["per_device"]
+        colls = sorted(c["collectives"].items(), key=lambda kv: -kv[1]["wire_bytes"])
+        cstr = "; ".join(f"{k}×{v['count']}" for k, v in colls[:2]) or "none"
+        m = c["memory"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {pd['flops']:.2e} | {pd['bytes']:.2e} "
+            f"| {pd['wire_bytes']:.2e} | {cstr} "
+            f"| {m.get('argument_bytes', 0)/2**30:.2f} "
+            f"| {m.get('temp_bytes', 0)/2**30:.2f} | {c.get('compile_s', 0):.0f} |"
+        )
+    return "\n".join(rows)
+
+
+def summary(cells):
+    ok = [c for c in cells if "terms" in c]
+    skip = [c for c in cells if "skipped" in c]
+    err = [c for c in cells if "error" in c]
+    return len(ok), len(skip), len(err)
+
+
+def before_after(base, now):
+    """Hillclimbed cells: baseline vs final bound term."""
+    def key(c):
+        return (c.get("arch"), c.get("shape"), c.get("mesh"))
+
+    bmap = {key(c): c for c in base if "terms" in c}
+    rows = [
+        "| cell | bound before (s) | bound after (s) | speedup | peak before → after (GiB) |",
+        "|---|---|---|---|---|",
+    ]
+    targets = [
+        ("fagp", "fit_8m", "16x16"), ("fagp", "predict_1m", "16x16"),
+        ("zamba2-7b", "train_4k", "16x16"),
+        ("deepseek-v3-671b", "decode_32k", "16x16"),
+        ("mamba2-130m", "train_4k", "16x16"),
+        ("qwen2-1.5b", "train_4k", "16x16"),
+        ("qwen2.5-3b", "train_4k", "16x16"),
+        ("smollm-360m", "train_4k", "16x16"),
+        ("starcoder2-3b", "train_4k", "16x16"),
+        ("llama-3.2-vision-11b", "train_4k", "16x16"),
+    ]
+    nmap = {key(c): c for c in now if "terms" in c}
+    for t in targets:
+        b, n = bmap.get(t), nmap.get(t)
+        if not b or not n:
+            continue
+        bb, nb = b["terms"]["bound_s"], n["terms"]["bound_s"]
+        bp = b["memory"].get("peak_bytes_est", 0) / 2**30
+        np_ = n["memory"].get("peak_bytes_est", 0) / 2**30
+        rows.append(f"| {t[0]}/{t[1]} | {bb:.3f} | {nb:.3f} | **{bb/nb:.1f}×** "
+                    f"| {bp:.1f} → {np_:.1f} |")
+    return "\n".join(rows)
+
+
+def main():
+    cells = load(DRY)
+    base = load(BASE) if BASE.exists() else []
+    n_ok, n_skip, n_err = summary(cells)
+    perf_log = (ROOT / "experiments" / "perf_log.md").read_text()
+
+    md = f"""# EXPERIMENTS
+
+Reproduction + pod-scale systems build of **“Parallel Gaussian Process with
+Kernel Approximation in CUDA”** (Carminati, 2024) in JAX for TPU v5e pods.
+See DESIGN.md for the architecture; this file records the measurements.
+
+## Reproduction vs the paper's claims
+
+The paper's experiment (Fig. 1) times FAGP — eigensystem + posterior mean —
+as n and p grow at N = 10⁴, CPU (Eigen) vs GPU (cuBLAS). Claims reproduced
+here (CPU container; `python -m benchmarks.run`, see bench_output.txt):
+
+1. **FAGP ≡ exact GP accuracy at a fraction of the cost** (the Joukov–Kulić
+   foundation): identical RMSE at N=2000 with a **33× speedup**
+   (`fagp_vs_exact`), growing with N exactly as O(N³) vs O(NM²) predicts.
+2. **M = nᵖ blow-up** (the paper's stated limitation): visible in
+   `fig1_time_vs_n_p` — e.g. p=3 fused time grows 3.2 ms → 30.9 ms from
+   n=3 → n=7 (M: 27 → 343).
+3. **Parallel GEMM formulation wins**: the paper's literal Eq. 11–12 GEMM
+   chain (`mode="paper"`, what cuFAGP executes) vs our fused weight-space
+   path on identical hardware: **6–19× fused speedup** — and on the
+   production mesh the same GEMM schedule reaches the compute roofline
+   (§Perf F1, fraction ≈ 1.0).
+4. **Beyond the paper** — hyperbolic-cross/total-degree index sets:
+   same RMSE as the full grid at p=4 with **34× fewer columns and ~160×
+   less time** (`index_set_ablation`); hyperparameter learning via NLML
+   gradients (the paper's declared future work) recovers the true noise to
+   3 decimal places (examples/hyperparam_learning.py).
+
+## §Methodology (CPU-host dry-run, TPU v5e cost model)
+
+* 512 virtual host devices (`--xla_force_host_platform_device_count=512`);
+  meshes 16×16 (pod) and 2×16×16 (multi-pod). Every cell is
+  `jit(...).lower().compile()` — sharding errors, layout mismatches and
+  OOM-scale buffers surface exactly as they would on hardware.
+* Hardware constants: **197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI** per
+  chip (v5e).
+* `compiled.cost_analysis()` counts while-loop bodies ONCE (verified
+  empirically), which would undercount every scanned layer stack by ~n_layers.
+  Costs are therefore rebuilt from the compiled HLO text
+  (`repro/roofline/hlo_cost.py`): dot/triangular-solve/cholesky FLOPs and
+  collective payloads per computation, scaled by loop trip counts parsed
+  from loop conditions; HBM bytes are an op-result-size proxy (fusion
+  internals excluded). Known artifact: the CPU backend promotes bf16 dots
+  to f32, inflating some byte/wire counts ≈2× vs a real TPU lowering —
+  noted where material.
+* `roofline_fraction` = (MODEL_FLOPS / peak / chips) / max(compute, memory,
+  collective); MODEL_FLOPS = 6·N_active·D for LM cells (3× forward for
+  train, 1× for prefill; decode counts one token), 2NM² + M³/3 for FAGP.
+
+## §Dry-run
+
+{n_ok} cells compiled OK, {n_skip} recorded SKIPs (long_500k × full-attention
+archs — DESIGN.md §Arch-applicability), {n_err} errors, across BOTH meshes
+(16×16 = 256 chips; 2×16×16 = 512 chips, proving the 'pod' axis shards).
+Per-cell JSON in `experiments/dryrun/` (baseline preserved in
+`experiments/dryrun_baseline/`). Multi-pod (2×16×16) excerpt:
+
+{dryrun_table(cells, "2x16x16")}
+
+## §Roofline (single-pod 16×16, after §Perf optimizations)
+
+{table(cells, "16x16")}
+
+Reading of the dominant bottlenecks:
+
+* **train_4k** cells are memory-term dominated on this cost model, chiefly
+  saved-activation traffic; the scan-over-layers backward saves one
+  (B,S,d) carry per layer, and XLA hoists a bf16→f32 convert of the whole
+  stack (CPU-backend artifact ~2×). Seq-sharding the SSM residual (§Perf Z1)
+  is the template fix, applied to ssm/hybrid.
+* **decode** cells are memory-bound after §Perf D1 — reading the weights +
+  KV/latent cache once per token is the floor; batch 128 amortizes poorly
+  by construction of the assigned shape.
+* **Low useful-ratio cells** (smollm 0.07, qwen2 0.16, whisper 0.06) share
+  one cause: head counts (15/12/12) that do not divide the 16-way model
+  axis ⇒ attention runs model-replicated. On a real deployment the mesh
+  would be reshaped (e.g. 32×8); with the mesh fixed by the assignment we
+  document the fraction instead.
+* **fagp cells sit at fraction ≈ 1.0** (compute roofline) after §Perf F1 —
+  the paper's workload is the best-mapped workload in the table, as it
+  should be.
+
+## §Perf — baseline → hillclimb results
+
+Three cells selected per the protocol: worst roofline fraction
+(deepseek-v3/decode_32k), most collective-bound (zamba2/train_4k), most
+paper-representative (fagp/fit_8m + predict_1m). Summary:
+
+{before_after(base, cells)}
+
+{perf_log}
+
+## Paper-faithful vs beyond-paper (algorithm level)
+
+| variant | what it is | time (N=2000, p=3, n=7, CPU) |
+|---|---|---|
+| `mode="paper"` | literal Eq. 11–12 GEMM chain incl. N×N approximate inverse (what cuFAGP times) | 185.5 ms |
+| `mode="fused"` (beyond-paper) | weight-space simplification, same math | 30.9 ms (6.0×) |
+| + hyperbolic-cross (beyond-paper) | attacks the nᵖ blow-up itself | ~160× at p=4 vs full grid |
+
+Both variants are validated equal to f32 tolerance (tests/test_fagp.py);
+the roofline table above uses the optimized implementation, the baseline
+numbers are preserved in `experiments/dryrun_baseline/`.
+"""
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print(f"EXPERIMENTS.md written: ok={n_ok} skip={n_skip} err={n_err}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Pallas kernel microbenchmarks vs jnp references.
+
+On this CPU container the kernels run in interpret mode, so wall times
+measure the *correctness* path, not TPU performance — the numbers that
+matter for TPU are the roofline terms in EXPERIMENTS.md.  Reported here so
+regressions in kernel shape handling show up in CI.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import mercer
+from repro.kernels import ops, ref
+
+from .common import emit, time_fn
+
+
+def run(full: bool = False):
+    N, p, n_max = (4096, 3, 8) if full else (1024, 2, 6)
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.uniform(-1, 1, (N, p)).astype(np.float32))
+    eps = jnp.full((p,), 0.8, jnp.float32)
+    rho = jnp.full((p,), 2.0, jnp.float32)
+    idx = mercer.full_grid(n_max, p)
+    M = idx.shape[0]
+    consts = ref.phi_consts(eps, rho)
+    S = jnp.asarray(ref.one_hot_selection(idx, n_max))
+
+    t = time_fn(lambda: ops.hermite_phi(X, consts, S, n_max=n_max))
+    emit("kernel/hermite_phi/pallas-interp", t, f"N={N};M={M}")
+    t = time_fn(lambda: ref.ref_phi(X.T, consts, S, n_max))
+    emit("kernel/hermite_phi/jnp-ref", t, f"N={N};M={M}")
+
+    Phi = ops.hermite_phi(X, consts, S, n_max=n_max)
+    d = jnp.asarray(np.geomspace(1, 1e-5, M).astype(np.float32))
+    sig2 = jnp.float32(0.01)
+    t = time_fn(lambda: ops.scaled_gram(Phi, d, sig2))
+    emit("kernel/gram/pallas-interp", t, f"N={N};M={M}")
+    t = time_fn(lambda: ref.ref_scaled_gram(Phi, d, sig2))
+    emit("kernel/gram/jnp-ref", t, f"N={N};M={M}")
+
+    C = jnp.eye(M, dtype=jnp.float32)
+    t = time_fn(lambda: ops.diag_quad(Phi, C))
+    emit("kernel/diag_quad/pallas-interp", t, f"N={N};M={M}")
+    t = time_fn(lambda: ref.ref_diag_quad(Phi, C))
+    emit("kernel/diag_quad/jnp-ref", t, f"N={N};M={M}")
+
+
+if __name__ == "__main__":
+    run(full="--full" in sys.argv)

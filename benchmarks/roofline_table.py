@@ -1,0 +1,67 @@
+"""Render the §Dry-run / §Roofline tables from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(d: Path = DRYRUN_DIR):
+    cells = []
+    for f in sorted(d.glob("*.json")):
+        cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def fmt_table(cells, mesh="16x16"):
+    rows = []
+    hdr = ("| arch | shape | kind | compute s | memory s | coll s | dominant | "
+           "peak GiB/dev | useful ratio | roofline frac |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if "skipped" in c:
+            rows.append(f"| {c.get('arch','?')} | {c.get('shape','?')} | — | "
+                        f"SKIP | | | | | | |")
+            continue
+        if "error" in c:
+            rows.append(f"| {c['arch']} | {c['shape']} | — | ERROR | | | | | | |")
+            continue
+        t = c["terms"]
+        peak = c["memory"].get("peak_bytes_est", 0) / 2**30
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['kind']} "
+            f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | {t['dominant']} "
+            f"| {peak:.1f} | {c.get('useful_ratio', 0):.3f} "
+            f"| {c.get('roofline_fraction', 0):.4f} |"
+        )
+    return "\n".join(rows)
+
+
+def run(full: bool = False):
+    cells = load_cells()
+    ok = [c for c in cells if "terms" in c]
+    if not ok:
+        print("roofline/no-cells,0,run launch.dryrun first")
+        return
+    worst = min(ok, key=lambda c: c.get("roofline_fraction", 1.0))
+    coll = max(ok, key=lambda c: c["terms"]["collective_s"] / max(c["terms"]["bound_s"], 1e-12))
+    print(f"roofline/cells,{len(cells)},ok={len(ok)}")
+    print(f"roofline/worst_fraction,{worst.get('roofline_fraction', 0):.5f},"
+          f"{worst['arch']}/{worst['shape']}/{worst['mesh']}")
+    print(f"roofline/most_collective,{coll['terms']['collective_s']:.4f},"
+          f"{coll['arch']}/{coll['shape']}/{coll['mesh']}")
+
+
+if __name__ == "__main__":
+    if "--table" in sys.argv:
+        mesh = "2x16x16" if "--multi" in sys.argv else "16x16"
+        print(fmt_table(load_cells(), mesh))
+    else:
+        run()

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table/figure + extras.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    full = "--full" in sys.argv
+    from . import (
+        fagp_vs_exact,
+        fig1_time_vs_n_p,
+        index_set_ablation,
+        kernel_micro,
+        roofline_table,
+    )
+
+    modules = [
+        ("fig1_time_vs_n_p", fig1_time_vs_n_p),      # paper Fig. 1
+        ("fagp_vs_exact", fagp_vs_exact),            # Joukov-Kulic baseline claim
+        ("index_set_ablation", index_set_ablation),  # beyond-paper truncations
+        ("kernel_micro", kernel_micro),              # Pallas kernels
+        ("roofline_table", roofline_table),          # dry-run summary
+    ]
+    failed = 0
+    for name, mod in modules:
+        print(f"# --- {name} ---")
+        try:
+            mod.run(full=full)
+        except Exception:
+            failed += 1
+            print(f"{name}/ERROR,0,")
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Fault-tolerant checkpointing: atomic, async-capable, reshard-on-restore.
+
+* Arbitrary pytrees are flattened to path-keyed npz (bf16 stored as a u16
+  view with a dtype manifest — numpy has no native bf16).
+* Writes go to ``<dir>/tmp.<step>`` then ``os.replace`` to ``step_<n>`` —
+  a crash mid-write never corrupts the latest checkpoint.
+* ``restore`` returns host arrays; pass ``shardings`` to place them onto the
+  *current* mesh — sharding is recomputed from the logical rules at restore
+  time, never baked into the file, which is what makes restarts elastic
+  (restore onto a different device count / mesh shape just works).
+* ``AsyncCheckpointer`` overlaps serialization with the next train steps.
+"""
+from .store import AsyncCheckpointer, latest_step, restore, save
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]

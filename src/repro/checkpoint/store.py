@@ -1,0 +1,137 @@
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(k.key) if isinstance(k, jax.tree_util.DictKey) else str(k.idx)
+            if isinstance(k, jax.tree_util.SequenceKey) else str(k)
+            for k in path
+        )
+        out[key] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any, *, metadata: dict | None = None):
+    """Atomic checkpoint write: <dir>/step_<n>/{arrays.npz, manifest.json}."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f"tmp.{step}.{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    flat, _ = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype == jax.numpy.bfloat16:
+            arr = arr.view(np.uint16)
+        arrays[key.replace("/", "__")] = arr
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(
+        json.dumps({"step": step, "dtypes": dtypes, "metadata": metadata or {}})
+    )
+    final = ckpt_dir / f"step_{step:010d}"
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in ckpt_dir.iterdir()
+        if p.is_dir() and p.name.startswith("step_")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, like: Any, *, step: int | None = None,
+            shardings: Any = None):
+    """Restore into the structure of ``like``. Returns (step, tree).
+
+    shardings: optional pytree of NamedShardings (matching ``like``) — leaves
+    are device_put onto the CURRENT mesh, implementing elastic restore."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:010d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "arrays.npz") as z:
+        arrays = {k: z[k] for k in z.files}
+
+    flat_like, treedef = _flatten(like)
+    leaves = []
+    sh_flat = None
+    if shardings is not None:
+        sh_map, _ = _flatten(shardings)
+        sh_flat = sh_map
+    for key in flat_like:
+        arr = arrays[key.replace("/", "__")]
+        want = manifest["dtypes"][key]
+        if want == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16)
+        if sh_flat is not None:
+            leaves.append(jax.device_put(arr, sh_flat[key]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves
+    )
+    return manifest["step"], tree
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint serialization with training (one in flight)."""
+
+    def __init__(self, ckpt_dir: str | Path):
+        self.ckpt_dir = Path(ckpt_dir)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: Any, *, metadata: dict | None = None):
+        self.wait()
+        # device_get on the main thread (jax arrays are not thread-safe to
+        # fetch concurrently with dispatch), serialize off-thread
+        host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, metadata=metadata)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()

@@ -1,0 +1,30 @@
+"""The paper's own workload as a first-class config: FAGP regression.
+
+Paper scale (Fig. 1): N=10^4, p=4, n=11 -> M=n^p=14641 (full grid).
+Production scale: N=2^23 rows sharded over (pod, data); the M=14641 feature
+axis sharded over model.  ``shapes`` mirror the LM shape table with
+fit/predict kinds consumed by launch/dryrun.py.
+"""
+import dataclasses
+
+from repro.core.fagp import FAGPConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FAGPWorkload:
+    name: str
+    kind: str          # fit | predict
+    N: int             # train rows (fit) / test rows (predict)
+    p: int
+    cfg: FAGPConfig
+
+
+CONFIG = FAGPConfig(n=11, index_set="full", store_train=False)
+
+SHAPES = {
+    "fit_10k": FAGPWorkload("fit_10k", "fit", 10_240, 4, CONFIG),     # paper Fig.1
+    "fit_8m": FAGPWorkload("fit_8m", "fit", 8_388_608, 4, CONFIG),    # pod scale
+    "predict_1m": FAGPWorkload("predict_1m", "predict", 1_048_576, 4, CONFIG),
+}
+
+SMOKE = FAGPConfig(n=4, index_set="full", store_train=False)

@@ -1,0 +1,74 @@
+"""Assigned input-shape set + ShapeDtypeStruct builders (no allocation).
+
+Every LM arch is exercised on the 4 assigned shapes; ``decode_*``/``long_*``
+lower ``serve_step`` (one token against a seq_len KV cache), not train_step.
+``long_500k`` requires sub-quadratic context handling: it runs only for the
+SSM/hybrid archs (O(1)-state decode) and records an explicit SKIP for pure
+full-attention archs (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+from repro.models.config import ModelConfig
+
+__all__ = ["SHAPES", "input_specs", "supports", "ShapeSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str       # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def supports(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k only for sub-quadratic (SSM/hybrid) archs."""
+    if shape_name == "long_500k":
+        return cfg.family in ("ssm", "hybrid")
+    return True
+
+
+def _extras(cfg: ModelConfig, B: int):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family == "audio":
+        return {"frames": jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model), dt)}
+    if cfg.family == "vlm":
+        return {"img": jax.ShapeDtypeStruct((B, cfg.n_img_tokens, cfg.d_model), dt)}
+    return {}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill -> {'tokens', ...extras};
+    decode        -> ({'token', 'pos'}, cache_specs).
+    """
+    spec = SHAPES[shape_name]
+    B, S = spec.batch, spec.seq
+    if spec.kind in ("train", "prefill"):
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            **_extras(cfg, B),
+        }
+    # decode: token + pos + cache built abstractly (no allocation)
+    model = get_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    batch = {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    return batch, cache

@@ -1,0 +1,21 @@
+"""Core of the reproduction: Mercer-decomposed GP regression (FAGP).
+
+Paper: Carminati (2024), "Parallel Gaussian Process with Kernel
+Approximation in CUDA" — reimplemented TPU-natively in JAX.
+"""
+from . import exact_gp, fagp, mercer
+from .fagp import FAGPConfig, FAGPState, fit, nlml, predict
+from .mercer import (
+    SEKernelParams,
+    eigenvalues_1d,
+    eigenfunctions_1d,
+    eigenvalues_nd,
+    log_eigenvalues_1d,
+    log_eigenvalues_nd,
+    full_grid,
+    hyperbolic_cross,
+    k_se_ard,
+    make_index_set,
+    phi_nd,
+    total_degree,
+)

@@ -1,0 +1,297 @@
+"""Distributed FAGP over the (pod, data, model) production mesh.
+
+The paper parallelizes the FAGP posterior on ONE GPU with cuBLAS GEMMs.
+At pod scale the data no longer fits one device, so the algorithm becomes:
+
+  * X, y row-sharded over (pod, data) — each chip owns N/dp rows;
+  * Phi built block-streamed (never materialized for the full N);
+  * the two sufficient statistics G = Phi^T Phi (M x M) and b = Phi^T y (M)
+    are partial-summed locally and combined by ONE all-reduce each —
+    communication volume O(M^2), independent of N (the communication-
+    optimal schedule for tall-skinny Gram matrices);
+  * G/B kept row-sharded over 'model'; the M x M Cholesky solve runs on the
+    gathered matrix (M <= ~16k => <1 GB f32, affordable once per fit);
+  * prediction: Phi* row-sharded over (pod, data), mean/variance local per
+    shard — embarrassingly parallel, zero collectives after the broadcast
+    of (chol, u).
+
+Everything is pjit + sharding constraints: the all-reduces appear in the
+lowered HLO (verified by the dry-run's collective parse).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel import hints
+from . import mercer
+from .fagp import FAGPConfig
+from .mercer import SEKernelParams, log_eigenvalues_nd, phi_nd
+
+__all__ = ["fit_distributed", "predict_distributed", "lower_fit", "lower_predict"]
+
+
+@partial(jax.jit, static_argnames=("n_max", "nblk", "n_valid"))
+def _fit_fn(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
+            n_valid: int | None = None):
+    N = X.shape[0]
+    M = idx.shape[0]
+    sig2 = params.noise**2
+    loglam = log_eigenvalues_nd(idx, params)
+    sqrtlam = jnp.exp(0.5 * loglam)
+
+    block = N // nblk
+    Xb = hints.constrain(X.reshape(nblk, block, -1), (None, "dp", None))
+    yb = hints.constrain(y.reshape(nblk, block), (None, "dp"))
+
+    def step(carry, inp):
+        G, b = carry
+        i, Xi, yi = inp
+        Xi = hints.constrain(Xi, ("dp", None))
+        Phi_i = phi_nd(Xi, idx, params, n_max)           # rows sharded over dp
+        if n_valid is not None and n_valid < N:          # mask padded rows
+            mask = ((i * block + jnp.arange(block)) < n_valid).astype(Phi_i.dtype)
+            Phi_i = Phi_i * mask[:, None]
+            yi = yi * mask
+        G = G + hints.constrain(Phi_i.T @ Phi_i, ("model", None))
+        b = b + Phi_i.T @ yi
+        return (G, b), None
+
+    G0 = hints.constrain(jnp.zeros((M, M), X.dtype), ("model", None))
+    (G, b), _ = jax.lax.scan(
+        step, (G0, jnp.zeros((M,), X.dtype)), (jnp.arange(nblk), Xb, yb)
+    )
+
+    B = jnp.eye(M, dtype=G.dtype) + (sqrtlam[:, None] * G * sqrtlam[None, :]) / sig2
+    B = hints.constrain(B, ("model", None))
+    chol = jnp.linalg.cholesky(B)
+    u = sqrtlam * jax.scipy.linalg.cho_solve((chol, True), sqrtlam * b) / sig2
+    return u, chol, sqrtlam
+
+
+@partial(jax.jit, static_argnames=("n_max",))
+def _predict_fn(Xs, u, chol, sqrtlam, params: SEKernelParams, idx, n_max: int):
+    Xs = hints.constrain(Xs, ("dp", None))
+    Phis = phi_nd(Xs, idx, params, n_max)                # (N*, M) rows over dp
+    mu = Phis @ u
+    PhisD = Phis * sqrtlam[None, :]
+    V = jax.scipy.linalg.solve_triangular(chol, PhisD.T, lower=True)
+    var = jnp.sum(V * V, axis=0)
+    return hints.constrain(mu, ("dp",)), hints.constrain(var, ("dp",))
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in hints.dp_axes(mesh)]))
+
+
+def _pick_nblk(N: int, M: int, dp: int = 1) -> tuple[int, int]:
+    """(nblk, N_padded): row blocks ~100 MB f32 of Phi per device, with
+    N padded so blocks exist and every block divides the dp axis."""
+    target_rows = max(dp, int(100e6 / 4 / max(M, 1)) * dp)
+    nblk = max(1, N // target_rows)
+    nblk = min(nblk, 256)
+    quantum = nblk * dp
+    N_pad = (N + quantum - 1) // quantum * quantum
+    return nblk, N_pad
+
+
+def fit_distributed(X, y, params: SEKernelParams, cfg: FAGPConfig, mesh):
+    N, p = X.shape
+    idx = jnp.asarray(cfg.indices(p))
+    nblk, N_pad = _pick_nblk(N, idx.shape[0], _dp_size(mesh))
+    if N_pad != N:
+        X = jnp.pad(X, ((0, N_pad - N), (0, 0)))
+        y = jnp.pad(y, (0, N_pad - N))
+    with jax.set_mesh(mesh), hints.activate(mesh):
+        dp = hints.dp_axes(mesh)
+        f = jax.jit(
+            partial(_fit_fn, n_max=cfg.n, nblk=nblk,
+                    n_valid=N if N_pad != N else None),
+            in_shardings=(
+                NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp)),
+                None, None,
+            ),
+        )
+        return f(X, y, params, idx)
+
+
+def predict_distributed(Xs, state_tuple, params, cfg: FAGPConfig, mesh):
+    u, chol, sqrtlam = state_tuple
+    N = Xs.shape[0]
+    idx = jnp.asarray(cfg.indices(Xs.shape[1]))
+    dpn = _dp_size(mesh)
+    N_pad = (N + dpn - 1) // dpn * dpn
+    if N_pad != N:
+        Xs = jnp.pad(Xs, ((0, N_pad - N), (0, 0)))
+    with jax.set_mesh(mesh), hints.activate(mesh):
+        dp = hints.dp_axes(mesh)
+        f = jax.jit(
+            partial(_predict_fn, n_max=cfg.n),
+            in_shardings=(
+                NamedSharding(mesh, P(dp, None)), None, None, None, None, None,
+            ),
+        )
+        mu, var = f(Xs, u, chol, sqrtlam, params, idx)
+    return mu[:N], var[:N]
+
+
+# ---------------------------------------------------------------------------
+# v2 schedule (§Perf iteration 1): explicit shard_map
+#
+# Baseline (v1) constrained G to ("model", None) every scan step, which made
+# XLA all-gather each Phi block over dp and reshard the Gram each iteration:
+# 439 GB of wire per device for fit_8m (collective term 8.78 s) and 16-32x
+# redundant compute.  v2 shards rows over EVERY mesh axis, streams the local
+# Gram in-shard, and reduces ONCE:  wire = 2 x |G| = 1.7 GB -> ~34 ms, and
+# compute = 2NM^2 / n_chips exactly.  Prediction is fully local per shard
+# (u, Binv replicated): zero per-row collectives.
+# ---------------------------------------------------------------------------
+
+
+def _fit_fn_v2(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
+               mesh, n_valid: int | None = None):
+    N = X.shape[0]
+    M = idx.shape[0]
+    sig2 = params.noise**2
+    loglam = log_eigenvalues_nd(idx, params)
+    sqrtlam = jnp.exp(0.5 * loglam)
+    axes = tuple(mesh.axis_names)
+    n_chips = int(np.prod([mesh.shape[a] for a in axes]))
+    N_l = N // n_chips
+    block = max(1, N_l // nblk)
+
+    def local(Xl, yl, eps, rho):
+        lo = jax.lax.axis_index(axes[0])
+        for a in axes[1:]:
+            lo = lo * mesh.shape[a] + jax.lax.axis_index(a)
+        row0 = lo * N_l
+        p_loc = SEKernelParams(eps=eps, rho=rho, noise=jnp.asarray(0.0))
+
+        def step(carry, inp):
+            G, b = carry
+            i, Xi, yi = inp
+            Phi_i = phi_nd(Xi, idx, p_loc, n_max)
+            if n_valid is not None and n_valid < N:
+                mask = ((row0 + i * block + jnp.arange(block)) < n_valid)
+                Phi_i = Phi_i * mask.astype(Phi_i.dtype)[:, None]
+                yi = yi * mask.astype(yi.dtype)
+            return (G + Phi_i.T @ Phi_i, b + Phi_i.T @ yi), None
+
+        nb = N_l // block
+        (G_l, b_l), _ = jax.lax.scan(
+            step,
+            (jnp.zeros((M, M), Xl.dtype), jnp.zeros((M,), Xl.dtype)),
+            (jnp.arange(nb), Xl.reshape(nb, block, -1), yl.reshape(nb, block)),
+        )
+        G = jax.lax.psum(G_l, axes)        # THE one collective (M x M)
+        b = jax.lax.psum(b_l, axes)
+        return G, b
+
+    G, b = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes), P(axes), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )(X.reshape(N, -1), y, params.eps, params.rho)
+
+    B = jnp.eye(M, dtype=G.dtype) + (sqrtlam[:, None] * G * sqrtlam[None, :]) / sig2
+    chol = jnp.linalg.cholesky(B)
+    u = sqrtlam * jax.scipy.linalg.cho_solve((chol, True), sqrtlam * b) / sig2
+    return u, chol, sqrtlam
+
+
+def _predict_fn_v2(Xs, u, chol, sqrtlam, params: SEKernelParams, idx, n_max: int,
+                   mesh):
+    """Fully local per row: Binv replicated, var = rowsum((Phi D Binv)*(Phi D))."""
+    M = idx.shape[0]
+    Binv = jax.scipy.linalg.cho_solve((chol, True), jnp.eye(M, dtype=chol.dtype))
+    axes = tuple(mesh.axis_names)
+
+    def local(Xl, u_, Binv_, sqrtlam_, eps, rho):
+        p_loc = SEKernelParams(eps=eps, rho=rho, noise=jnp.asarray(0.0))
+        Phis = phi_nd(Xl, idx, p_loc, n_max)
+        mu = Phis @ u_
+        PD = Phis * sqrtlam_[None, :]
+        var = jnp.sum((PD @ Binv_) * PD, axis=1)
+        return mu, var
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes), P(), P(), P(), P(), P()),
+        out_specs=(P(axes), P(axes)),
+        check_vma=False,
+    )(Xs, u, Binv, sqrtlam, params.eps, params.rho)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run lowering (ShapeDtypeStructs only, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _abstract_params(p: int) -> SEKernelParams:
+    f32 = jnp.float32
+    return SEKernelParams(
+        eps=jax.ShapeDtypeStruct((p,), f32),
+        rho=jax.ShapeDtypeStruct((p,), f32),
+        noise=jax.ShapeDtypeStruct((), f32),
+    )
+
+
+def _n_chips(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))
+
+
+def lower_fit(wl, mesh, *, schedule: str = "v2"):
+    idx_np = wl.cfg.indices(wl.p)
+    idx = jnp.asarray(idx_np)
+    if schedule == "v2":
+        quantum = _n_chips(mesh) * 16
+        N_pad = (wl.N + quantum - 1) // quantum * quantum
+        X = jax.ShapeDtypeStruct((N_pad, wl.p), jnp.float32)
+        y = jax.ShapeDtypeStruct((N_pad,), jnp.float32)
+        return jax.jit(
+            partial(_fit_fn_v2, n_max=wl.cfg.n, nblk=16, mesh=mesh,
+                    n_valid=wl.N if N_pad != wl.N else None),
+        ).lower(X, y, _abstract_params(wl.p), idx)
+    nblk, N_pad = _pick_nblk(wl.N, idx_np.shape[0], _dp_size(mesh))
+    X = jax.ShapeDtypeStruct((N_pad, wl.p), jnp.float32)
+    y = jax.ShapeDtypeStruct((N_pad,), jnp.float32)
+    dp = hints.dp_axes(mesh)
+    return jax.jit(
+        partial(_fit_fn, n_max=wl.cfg.n, nblk=nblk,
+                n_valid=wl.N if N_pad != wl.N else None),
+        in_shardings=(
+            NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp)),
+            None, None,
+        ),
+    ).lower(X, y, _abstract_params(wl.p), idx)
+
+
+def lower_predict(wl, mesh, *, schedule: str = "v2"):
+    idx_np = wl.cfg.indices(wl.p)
+    M = idx_np.shape[0]
+    idx = jnp.asarray(idx_np)
+    u = jax.ShapeDtypeStruct((M,), jnp.float32)
+    chol = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    sqrtlam = jax.ShapeDtypeStruct((M,), jnp.float32)
+    if schedule == "v2":
+        quantum = _n_chips(mesh)
+        N_pad = (wl.N + quantum - 1) // quantum * quantum
+        Xs = jax.ShapeDtypeStruct((N_pad, wl.p), jnp.float32)
+        return jax.jit(
+            partial(_predict_fn_v2, n_max=wl.cfg.n, mesh=mesh),
+        ).lower(Xs, u, chol, sqrtlam, _abstract_params(wl.p), idx)
+    dpn = _dp_size(mesh)
+    N_pad = (wl.N + dpn - 1) // dpn * dpn
+    Xs = jax.ShapeDtypeStruct((N_pad, wl.p), jnp.float32)
+    dp = hints.dp_axes(mesh)
+    return jax.jit(
+        partial(_predict_fn, n_max=wl.cfg.n),
+        in_shardings=(
+            NamedSharding(mesh, P(dp, None)), None, None, None, None, None,
+        ),
+    ).lower(Xs, u, chol, sqrtlam, _abstract_params(wl.p), idx)

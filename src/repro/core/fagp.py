@@ -1,0 +1,300 @@
+"""Fast Approximate Gaussian Process (FAGP) — the paper's core technique.
+
+GP regression with the Mercer-decomposed SE kernel (paper Eqs. 8-12):
+the N x N kernel inverse is replaced, via the Woodbury identity, by the
+inverse of the M x M matrix
+
+    Lbar = Lambda^{-1} + Phi^T Sigma_n^{-1} Phi          (M = |index set|)
+
+Two mathematically identical posterior evaluation paths are provided:
+
+* ``mode="paper"`` — the literal GEMM chain of Eqs. 11-12, in the paper's
+  operation order (forms the N x N approximate inverse, then W = N* x N).
+  This is the *faithful baseline*: it is what cuFAGP times on the GPU.
+
+* ``mode="fused"`` — beyond-paper algebraic simplification.  Substituting
+  Lbar into Eqs. 11-12 collapses them to the weight-space form
+
+      mu*    = Phi* u,            u = Lbar^{-1} Phi^T y / sigma^2
+      Sigma* = Phi* Lbar^{-1} Phi*^T
+
+  which avoids every N x N / N* x N intermediate (O(N M) -> O(M^2) memory,
+  and ~N/M fewer FLOPs for the covariance).  Tests assert the two modes
+  agree to f32 tolerance; EXPERIMENTS.md §Perf reports them separately.
+
+Both paths share ``fit``, which accumulates the two sufficient statistics
+G = Phi^T Phi and b = Phi^T y in a streaming scan over row blocks —
+constant memory in N (beyond-paper; the paper materializes Phi whole).
+
+Numerical form (beyond-paper, required for f32): lambda_n decays
+geometrically and underflows f32 by column ~40, so Lbar = Lambda^{-1} + ...
+cannot be formed directly.  We solve the symmetrically-scaled system
+
+    B = I + D G D / sigma^2,      D = diag(sqrt(lambda))  (log-space)
+
+with Lbar^{-1} = D B^{-1} D and logdet(Lbar) + logdet(Lambda) = logdet(B).
+B has unit diagonal plus a PSD term (cond(B) bounded by 1 + ||DGD||/sig^2),
+and columns whose sqrt(lambda) underflows contribute an identity row —
+numerically inert, exactly as they should be.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .mercer import (
+    IndexSetKind,
+    SEKernelParams,
+    log_eigenvalues_nd,
+    make_index_set,
+    phi_nd,
+)
+
+__all__ = ["FAGPConfig", "FAGPState", "build_features", "fit", "predict", "nlml"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FAGPConfig:
+    """Static configuration of the Mercer expansion.
+
+    n:          eigenvalues per input dimension (paper's n).
+    index_set:  'full' (paper; M = n^p) | 'total_degree' | 'hyperbolic_cross'.
+    degree:     truncation parameter for the non-full sets (None = auto).
+    block_rows: row-block size for the streaming Gram accumulation.
+    store_train: keep (Phi, y) in the state — required for mode='paper'
+                 prediction and for the cross-covariance term of Eq. 12.
+    """
+
+    n: int
+    index_set: IndexSetKind = "full"
+    degree: Optional[int] = None
+    block_rows: int = 4096
+    store_train: bool = True
+    backend: str = "jnp"  # 'jnp' | 'pallas' (fused TPU kernels; interpret on CPU)
+
+    def indices(self, p: int) -> np.ndarray:
+        return make_index_set(self.index_set, self.n, p, self.degree)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FAGPState:
+    """Fitted FAGP sufficient statistics (scaled-system form)."""
+
+    idx: jax.Array            # (M, p) multi-index set (0-based degrees)
+    lam: jax.Array            # (M,)   product eigenvalues (may underflow; info only)
+    sqrtlam: jax.Array        # (M,)   exp(0.5 log lambda) — the scaling D
+    chol: jax.Array           # (M, M) lower Cholesky of B = I + D G D / sigma^2
+    u: jax.Array              # (M,)   Lbar^{-1} Phi^T y / sigma^2  (mean weights)
+    params: SEKernelParams
+    Phi: Optional[jax.Array]  # (N, M) train features   (store_train only)
+    y: Optional[jax.Array]    # (N,)   train targets    (store_train only)
+
+
+def build_features(X: jax.Array, params: SEKernelParams, idx: jax.Array, n_max: int) -> jax.Array:
+    """Phi_(X) for an arbitrary multi-index set. (N, p) -> (N, M)."""
+    return phi_nd(X, idx, params, n_max)
+
+
+def _accumulate_moments(X, y, params, idx, n_max: int, block_rows: int):
+    """Streaming G = Phi^T Phi, b = Phi^T y over row blocks (O(M^2) memory)."""
+    N = X.shape[0]
+    M = idx.shape[0]
+    nblk = max(1, (N + block_rows - 1) // block_rows)
+    pad = nblk * block_rows - N
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    yp = jnp.pad(y, (0, pad))
+    mask = jnp.pad(jnp.ones((N,), X.dtype), (0, pad))
+
+    Xb = Xp.reshape(nblk, block_rows, -1)
+    yb = yp.reshape(nblk, block_rows)
+    mb = mask.reshape(nblk, block_rows)
+
+    def step(carry, blk):
+        G, b = carry
+        Xi, yi, mi = blk
+        Phi_i = build_features(Xi, params, idx, n_max) * mi[:, None]
+        G = G + Phi_i.T @ Phi_i
+        b = b + Phi_i.T @ (yi * mi)
+        return (G, b), None
+
+    init = (jnp.zeros((M, M), X.dtype), jnp.zeros((M,), X.dtype))
+    (G, b), _ = jax.lax.scan(step, init, (Xb, yb, mb))
+    return G, b
+
+
+@partial(jax.jit, static_argnames=("n_max", "block_rows", "store_train"))
+def _fit(X, y, params, idx, n_max: int, block_rows: int, store_train: bool):
+    sig2 = params.noise**2
+    loglam = log_eigenvalues_nd(idx, params)
+    sqrtlam = jnp.exp(0.5 * loglam)
+    G, b = _accumulate_moments(X, y, params, idx, n_max, block_rows)
+    M = idx.shape[0]
+    B = jnp.eye(M, dtype=G.dtype) + (sqrtlam[:, None] * G * sqrtlam[None, :]) / sig2
+    chol = jnp.linalg.cholesky(B)
+    # u = Lbar^{-1} b / sig2 = D B^{-1} D b / sig2
+    u = sqrtlam * jax.scipy.linalg.cho_solve((chol, True), sqrtlam * b) / sig2
+    Phi = build_features(X, params, idx, n_max) if store_train else None
+    return FAGPState(
+        idx=idx, lam=jnp.exp(loglam), sqrtlam=sqrtlam, chol=chol, u=u,
+        params=params, Phi=Phi, y=y if store_train else None,
+    )
+
+
+@partial(jax.jit, static_argnames=("n_max", "store_train"))
+def _fit_pallas(X, y, params, idx, S, n_max: int, store_train: bool):
+    """fit() on the fused Pallas kernels: one HBM pass builds Phi, a second
+    fused pass produces B directly (gram + scaling + diagonal in one kernel)."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    sig2 = params.noise**2
+    loglam = log_eigenvalues_nd(idx, params)
+    sqrtlam = jnp.exp(0.5 * loglam)
+    consts = kref.phi_consts(params.eps, params.rho)
+    Phi = kops.hermite_phi(X, consts, S, n_max=n_max)
+    B = kops.scaled_gram(Phi, sqrtlam, sig2)
+    chol = jnp.linalg.cholesky(B)
+    b = Phi.T @ y
+    u = sqrtlam * jax.scipy.linalg.cho_solve((chol, True), sqrtlam * b) / sig2
+    return FAGPState(
+        idx=idx, lam=jnp.exp(loglam), sqrtlam=sqrtlam, chol=chol, u=u,
+        params=params, Phi=Phi if store_train else None,
+        y=y if store_train else None,
+    )
+
+
+def fit(X: jax.Array, y: jax.Array, params: SEKernelParams, cfg: FAGPConfig) -> FAGPState:
+    idx_np = cfg.indices(X.shape[1])
+    idx = jnp.asarray(idx_np)
+    if cfg.backend == "pallas":
+        from repro.kernels import ref as kref
+
+        S = jnp.asarray(kref.one_hot_selection(idx_np, cfg.n))
+        return _fit_pallas(X, y, params, idx, S, cfg.n, cfg.store_train)
+    return _fit(X, y, params, idx, cfg.n, cfg.block_rows, cfg.store_train)
+
+
+# ---------------------------------------------------------------------------
+# Prediction
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n_max",))
+def _predict_fused(state: FAGPState, Xs: jax.Array, n_max: int):
+    """Beyond-paper weight-space path: no N-sized intermediates.
+
+    Phi* Lbar^{-1} Phi*^T = (Phi* D) B^{-1} (Phi* D)^T via triangular solve.
+    """
+    Phis = build_features(Xs, state.params, state.idx, n_max)  # (N*, M)
+    mu = Phis @ state.u
+    PhisD = Phis * state.sqrtlam[None, :]
+    V = jax.scipy.linalg.solve_triangular(state.chol, PhisD.T, lower=True)  # (M, N*)
+    cov = V.T @ V
+    return mu, cov
+
+
+@partial(jax.jit, static_argnames=("n_max",))
+def _predict_paper(state: FAGPState, Xs: jax.Array, n_max: int):
+    """Literal Eqs. 11-12 GEMM chain in the paper's operation order.
+
+    Requires store_train=True.  Forms the N x N approximate inverse
+    (Sigma_n^{-1} - Sigma_n^{-1} Phi Lbar^{-1} Phi^T Sigma_n^{-1}) exactly as
+    the CUDA implementation does, then W (N* x N), then mu*, Sigma*.
+    """
+    Phi, y = state.Phi, state.y
+    N = Phi.shape[0]
+    sig2 = state.params.noise**2
+    Phis = build_features(Xs, state.params, state.idx, n_max)   # (N*, M)
+    Lam = state.lam                                             # (M,)
+
+    D = state.sqrtlam
+    LbarinvPhiT = D[:, None] * jax.scipy.linalg.cho_solve(
+        (state.chol, True), D[:, None] * Phi.T
+    )  # Lbar^{-1} Phi^T = D B^{-1} D Phi^T,  (M, N)
+    Kinv = jnp.eye(N, dtype=Phi.dtype) / sig2 - (Phi @ LbarinvPhiT) / (sig2 * sig2)
+    PhisLam = Phis * Lam[None, :]                               # Phi* Lambda
+    W = (PhisLam @ Phi.T) @ Kinv                                # (N*, N) — Eq. 11's W
+    mu = W @ y
+    cov = PhisLam @ Phis.T - (W @ Phi) @ (Lam[:, None] * Phis.T)  # Eq. 12
+    return mu, cov
+
+
+def predict(state: FAGPState, Xs: jax.Array, cfg: FAGPConfig, mode: str = "fused"):
+    """Posterior mean (N*,) and covariance (N*, N*) at Xs."""
+    if mode == "fused":
+        return _predict_fused(state, Xs, cfg.n)
+    if mode == "paper":
+        if state.Phi is None:
+            raise ValueError("mode='paper' requires FAGPConfig(store_train=True)")
+        return _predict_paper(state, Xs, cfg.n)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+@partial(jax.jit, static_argnames=("n_max", "backend"))
+def _predict_mean_var(state: FAGPState, Xs, S, n_max: int, backend: str):
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        from repro.kernels import ref as kref
+
+        consts = kref.phi_consts(state.params.eps, state.params.rho)
+        Phis = kops.hermite_phi(Xs, consts, S, n_max=n_max)
+        mu = Phis @ state.u
+        M = state.chol.shape[0]
+        Binv = jax.scipy.linalg.cho_solve((state.chol, True), jnp.eye(M, dtype=Phis.dtype))
+        var = kops.diag_quad(Phis * state.sqrtlam[None, :], Binv)
+        return mu, var
+    Phis = build_features(Xs, state.params, state.idx, n_max)
+    mu = Phis @ state.u
+    PhisD = Phis * state.sqrtlam[None, :]
+    V = jax.scipy.linalg.solve_triangular(state.chol, PhisD.T, lower=True)
+    return mu, jnp.sum(V * V, axis=0)
+
+
+def predict_mean_var(state: FAGPState, Xs: jax.Array, cfg: FAGPConfig):
+    """Posterior mean and *marginal variance* (N*,) — the production serving
+    path: never materializes the N* x N* covariance (kernels/diag_quad)."""
+    S = None
+    if cfg.backend == "pallas":
+        from repro.kernels import ref as kref
+
+        S = jnp.asarray(kref.one_hot_selection(np.asarray(state.idx), cfg.n))
+    return _predict_mean_var(state, Xs, S, cfg.n, cfg.backend)
+
+
+# ---------------------------------------------------------------------------
+# Negative log marginal likelihood (paper's declared future work)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n_max", "block_rows"))
+def nlml(X, y, params: SEKernelParams, idx, n_max: int, block_rows: int = 4096):
+    """NLML of the decomposed-kernel GP, O(N M^2 + M^3).
+
+    Matrix determinant lemma + Woodbury on (Phi Lambda Phi^T + sigma^2 I):
+        logdet = logdet(Lbar) + logdet(Lambda) + N log sigma^2
+        quad   = (y^T y - b^T Lbar^{-1} b) / ... with b = Phi^T y / sigma^2
+    Differentiable in (eps, rho, noise) for gradient-based hyperparameter
+    learning (see examples/hyperparam_learning.py).
+    """
+    N = X.shape[0]
+    sig2 = params.noise**2
+    loglam = log_eigenvalues_nd(idx, params)
+    sqrtlam = jnp.exp(0.5 * loglam)
+    G, b = _accumulate_moments(X, y, params, idx, n_max, block_rows)
+    M = idx.shape[0]
+    B = jnp.eye(M, dtype=G.dtype) + (sqrtlam[:, None] * G * sqrtlam[None, :]) / sig2
+    chol = jnp.linalg.cholesky(B)
+    bs = sqrtlam * b / sig2                      # D b / sig2
+    w = jax.scipy.linalg.cho_solve((chol, True), bs)
+    # y^T Kinv y = y^T y/sig2 - b^T Lbar^{-1} b / sig2^2
+    #            = y^T y/sig2 - (Db/sig2)^T B^{-1} (Db/sig2) = ... - dot(bs, w)
+    quad = jnp.dot(y, y) / sig2 - jnp.dot(bs, w)
+    # logdet(K) = logdet(B) + N log sig2   (determinant lemma, scaled form)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol))) + N * jnp.log(sig2)
+    return 0.5 * (quad + logdet + N * jnp.log(2.0 * jnp.pi))

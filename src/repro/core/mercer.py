@@ -1,0 +1,246 @@
+"""Mercer eigen-decomposition of the squared-exponential (SE) kernel.
+
+Implements the analytical eigensystem of the SE kernel w.r.t. a Gaussian
+measure, following Fasshauer & McCourt (2012) as used by the paper
+(Carminati 2024, Eqs. 13-20):
+
+    k_SE(x, x') = exp(-eps^2 (x - x')^2)                       (1-D, Eq. 13)
+
+    beta    = (1 + (2 eps / rho)^2)^(1/4)                      (Eq. 14)
+    gamma_i = sqrt(beta / (2^(i-1) Gamma(i)))
+    delta^2 = rho^2 / 2 * (beta^2 - 1)
+
+    phi_i(x)  = gamma_i exp(-delta^2 x^2) H_{i-1}(rho beta x)  (Eq. 15)
+    lambda_i  = sqrt(rho^2 / (rho^2 + delta^2 + eps^2))
+                * (eps^2 / (rho^2 + delta^2 + eps^2))^(i-1)    (Eq. 16)
+
+NOTE (paper typo, recorded in DESIGN.md): the paper prints
+``delta^2 = rho/2 (beta^2 - 1)``; its cited source (Fasshauer & McCourt 2012,
+Eq. 3.9 with alpha = rho) has ``rho^2 / 2``.  Only the latter reproduces
+``sum_i lambda_i phi_i(x) phi_i(x') -> k_SE(x, x')``; the property test
+``test_mercer_reconstruction`` pins this down numerically.
+
+Multidimensional (ARD) generalization, paper Eqs. 17-20: tensor products of
+the 1-D eigensystem over multi-indices ``n in N^p``.  The paper uses the full
+grid ``{1..n}^p`` (size n^p, its stated limitation).  Beyond the paper, this
+module also provides *total-degree* and *hyperbolic-cross* index sets that
+exploit the product structure of ``lambda_n`` to reach the same accuracy with
+polynomially many columns.
+
+All feature evaluation uses a scaled Hermite recurrence that folds gamma_i
+into the iteration (Hermite-function style), so magnitudes stay f32-safe far
+beyond the degree ~30 where classical H_i overflow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SEKernelParams",
+    "mercer_constants",
+    "eigenvalues_1d",
+    "log_eigenvalues_1d",
+    "log_eigenvalues_nd",
+    "eigenfunctions_1d",
+    "full_grid",
+    "total_degree",
+    "hyperbolic_cross",
+    "make_index_set",
+    "eigenvalues_nd",
+    "phi_nd",
+    "k_se_ard",
+]
+
+IndexSetKind = Literal["full", "total_degree", "hyperbolic_cross"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SEKernelParams:
+    """ARD squared-exponential kernel + Mercer-expansion hyperparameters.
+
+    eps:   per-dimension inverse length scales, shape (p,). Paper's eps_j.
+    rho:   per-dimension global scale factors,  shape (p,). Paper's rho_j;
+           controls eigenvalue decay speed.
+    noise: observation noise std sigma_n (scalar).
+    """
+
+    eps: jax.Array
+    rho: jax.Array
+    noise: jax.Array
+
+    @property
+    def p(self) -> int:
+        return self.eps.shape[0]
+
+    @staticmethod
+    def create(eps, rho, noise=1e-2) -> "SEKernelParams":
+        eps = jnp.atleast_1d(jnp.asarray(eps, jnp.float32))
+        rho = jnp.broadcast_to(jnp.asarray(rho, jnp.float32), eps.shape)
+        return SEKernelParams(eps=eps, rho=rho, noise=jnp.asarray(noise, jnp.float32))
+
+
+def mercer_constants(eps: jax.Array, rho: jax.Array):
+    """Paper Eq. 14 constants (with the delta^2 = rho^2/2 (beta^2-1) fix).
+
+    Returns (beta, delta2) broadcast over the shapes of eps/rho.
+    """
+    beta = (1.0 + (2.0 * eps / rho) ** 2) ** 0.25
+    delta2 = 0.5 * rho**2 * (beta**2 - 1.0)
+    return beta, delta2
+
+
+def log_eigenvalues_1d(n: int, eps: jax.Array, rho: jax.Array) -> jax.Array:
+    """log of paper Eq. 16 eigenvalues.  lambda_i decays geometrically and
+    underflows f32 near i ~ 40, so all downstream consumers work in log space
+    (see fagp.py's symmetrically-scaled solve).  Returns (n,)."""
+    _, delta2 = mercer_constants(eps, rho)
+    denom = rho**2 + delta2 + eps**2
+    i = jnp.arange(n, dtype=jnp.float32)  # i-1 in paper indexing
+    return 0.5 * (jnp.log(rho**2) - jnp.log(denom)) + i * (
+        jnp.log(eps**2) - jnp.log(denom)
+    )
+
+
+def eigenvalues_1d(n: int, eps: jax.Array, rho: jax.Array) -> jax.Array:
+    """Paper Eq. 16: the first ``n`` SE-kernel eigenvalues for one dimension."""
+    return jnp.exp(log_eigenvalues_1d(n, eps, rho))
+
+
+def eigenfunctions_1d(x: jax.Array, n: int, eps: jax.Array, rho: jax.Array) -> jax.Array:
+    """Paper Eq. 15: phi_i(x) = gamma_i exp(-delta^2 x^2) H_{i-1}(rho beta x).
+
+    x: (...,) scalars for one input dimension. Returns (..., n).
+
+    Stable scaled recurrence.  With z = rho*beta*x and
+    psi_i = gamma_i H_{i-1}(z):
+
+        psi_1     = sqrt(beta)
+        psi_2     = sqrt(2) z psi_1 / sqrt(2*1)         = sqrt(2) beta^(1/2) z ... (i=1 case below)
+        psi_{i+1} = z sqrt(2/i) psi_i - sqrt((i-1)/i) psi_{i-1}
+
+    following from H_i = 2 z H_{i-1} - 2(i-1) H_{i-2} and
+    gamma_{i+1}/gamma_i = 1/sqrt(2i).
+    """
+    beta, delta2 = mercer_constants(eps, rho)
+    z = rho * beta * x
+    envelope = jnp.exp(-delta2 * x * x)
+
+    psi1 = jnp.sqrt(beta) * jnp.ones_like(z)
+    if n == 1:
+        return (envelope * psi1)[..., None]
+
+    def step(carry, i):
+        prev, cur = carry  # psi_{i-1}, psi_i   (i >= 1, 1-based)
+        i_f = i.astype(z.dtype)
+        nxt = z * jnp.sqrt(2.0 / i_f) * cur - jnp.sqrt((i_f - 1.0) / i_f) * prev
+        return (cur, nxt), nxt
+
+    psi2 = z * jnp.sqrt(2.0) * psi1
+    _, rest = jax.lax.scan(step, (psi1, psi2), jnp.arange(2, n))
+    # rest: (n-2, ...) stacked psi_3..psi_n
+    psis = jnp.concatenate(
+        [psi1[None], psi2[None], rest] if n > 2 else [psi1[None], psi2[None]], axis=0
+    )
+    return jnp.moveaxis(psis, 0, -1) * envelope[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Multi-index sets (static / numpy: shapes must be known at trace time)
+# ---------------------------------------------------------------------------
+
+
+def full_grid(n: int, p: int) -> np.ndarray:
+    """Paper Eq. 18: all n^p combinations. (M, p) int32, degrees 0-based."""
+    grids = np.meshgrid(*[np.arange(n)] * p, indexing="ij")
+    idx = np.stack([g.reshape(-1) for g in grids], axis=-1).astype(np.int32)
+    return idx
+
+
+def total_degree(n: int, p: int, degree: int | None = None) -> np.ndarray:
+    """Multi-indices with sum of (0-based) degrees <= degree. Polynomial size."""
+    if degree is None:
+        degree = n - 1
+    idx = full_grid(min(n, degree + 1), p)
+    keep = idx.sum(axis=1) <= degree
+    return np.ascontiguousarray(idx[keep])
+
+
+def hyperbolic_cross(n: int, p: int, degree: int | None = None) -> np.ndarray:
+    """Multi-indices with prod of (1-based) degrees <= degree.
+
+    Matched to the product structure lambda_n = prod_j lambda_{n_j}: keeps
+    exactly the indices whose product eigenvalue is large. Near-linear size.
+    """
+    if degree is None:
+        degree = n
+    idx = full_grid(min(n, degree), p)
+    keep = np.prod(idx + 1, axis=1) <= degree
+    return np.ascontiguousarray(idx[keep])
+
+
+def make_index_set(kind: IndexSetKind, n: int, p: int, degree: int | None = None) -> np.ndarray:
+    if kind == "full":
+        return full_grid(n, p)
+    if kind == "total_degree":
+        return total_degree(n, p, degree)
+    if kind == "hyperbolic_cross":
+        return hyperbolic_cross(n, p, degree)
+    raise ValueError(f"unknown index set kind: {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# N-dimensional eigensystem (paper Eqs. 19-20)
+# ---------------------------------------------------------------------------
+
+
+def log_eigenvalues_nd(idx: jax.Array, params: SEKernelParams) -> jax.Array:
+    """log lambda_n = sum_j log lambda_{n_j}  (Eq. 20). idx: (M, p) -> (M,)."""
+    p = params.p
+
+    def per_dim(j):
+        _, delta2 = mercer_constants(params.eps[j], params.rho[j])
+        denom = params.rho[j] ** 2 + delta2 + params.eps[j] ** 2
+        i = idx[:, j].astype(jnp.float32)
+        return 0.5 * (jnp.log(params.rho[j] ** 2) - jnp.log(denom)) + i * (
+            jnp.log(params.eps[j] ** 2) - jnp.log(denom)
+        )
+
+    return sum(per_dim(j) for j in range(p))
+
+
+def eigenvalues_nd(idx: jax.Array, params: SEKernelParams) -> jax.Array:
+    """lambda_n = prod_j lambda_{n_j}  (Eq. 20). idx: (M, p) -> (M,)."""
+    return jnp.exp(log_eigenvalues_nd(idx, params))
+
+
+def phi_nd(X: jax.Array, idx: jax.Array, params: SEKernelParams, n_max: int) -> jax.Array:
+    """Phi_(X): tensor-product eigenfunctions (Eq. 19).
+
+    X: (N, p) samples; idx: (M, p) multi-indices (0-based); n_max: 1 + max
+    degree (static). Returns (N, M) with Phi[a, m] = prod_j phi_{idx[m,j]}(X[a,j]).
+
+    This is the pure-jnp reference path; the Pallas kernel
+    ``repro.kernels.hermite_phi`` fuses the same computation for TPU.
+    """
+    N, p = X.shape
+    feats = []
+    for j in range(p):
+        f_j = eigenfunctions_1d(X[:, j], n_max, params.eps[j], params.rho[j])  # (N, n_max)
+        feats.append(f_j)
+    out = jnp.ones((N, idx.shape[0]), X.dtype)
+    for j in range(p):
+        out = out * jnp.take(feats[j], idx[:, j], axis=1)  # (N, M)
+    return out
+
+
+def k_se_ard(X: jax.Array, X2: jax.Array, eps: jax.Array) -> jax.Array:
+    """Exact ARD SE kernel (paper Eq. 17): exp(-sum_j eps_j^2 (x_j-x'_j)^2)."""
+    d = X[:, None, :] - X2[None, :, :]  # (N, N2, p)
+    return jnp.exp(-jnp.sum((eps**2) * d * d, axis=-1))

@@ -1,0 +1,4 @@
+"""Data pipelines: paper Eq. 21 GP datasets + deterministic LM token streams."""
+from . import gp_synthetic, lm_synthetic
+from .gp_synthetic import make_gp_dataset
+from .lm_synthetic import TokenStream

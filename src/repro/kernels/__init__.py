@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the FAGP hot spots (validated in interpret mode).
+
+hermite_phi — fused Mercer feature construction (paper Eq. 19)
+gram        — fused scaled Gram  B = I + D Phi^T Phi D / sig2
+diag_quad   — predictive-variance diagonal without the N* x N* covariance
+"""
+from . import diag_quad, gram, hermite_phi, ops, ref
+from .ops import hermite_phi as hermite_phi_op  # noqa: F401
+from .ops import diag_quad as diag_quad_op      # noqa: F401
+from .ops import scaled_gram as scaled_gram_op  # noqa: F401

@@ -1,0 +1,117 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles: padding to tile multiples, transposition to the kernel layouts,
+interpret-mode resolution (CPU -> interpret=True so the kernel body runs in
+Python; TPU -> compiled), and jnp fallbacks for tiny shapes where kernel
+tiling overhead is not worth it.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .diag_quad import diag_quad_kernel
+from .gram import scaled_gram_kernel
+from .hermite_phi import hermite_phi_kernel
+
+__all__ = ["hermite_phi", "scaled_gram", "diag_quad", "resolve_interpret"]
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """interpret=None -> run in interpret mode unless actually on TPU."""
+    if interpret is not None:
+        return interpret
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return os.environ["REPRO_PALLAS_INTERPRET"] != "0"
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_max", "block_n", "block_m", "interpret")
+)
+def hermite_phi(
+    X: jax.Array,            # (N, p)
+    consts: jax.Array,       # (p, 3) from ref.phi_consts
+    S: jax.Array,            # (p*n_max, M) one-hot from ref.one_hot_selection
+    *,
+    n_max: int,
+    block_n: int = 256,
+    block_m: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Phi_(X): (N, M) Mercer feature matrix via the fused Pallas kernel."""
+    N, _ = X.shape
+    M = S.shape[1]
+    interp = resolve_interpret(interpret)
+    block_n = min(block_n, max(8, 1 << (N - 1).bit_length()))
+    block_m = min(block_m, max(128, 1 << (M - 1).bit_length()))
+    Xt = _pad_to(X.T.astype(jnp.float32), 1, block_n)
+    Sp = _pad_to(S.astype(jnp.float32), 1, block_m)
+    out = hermite_phi_kernel(
+        Xt, consts, Sp, n_max=n_max, block_n=block_n, block_m=block_m,
+        interpret=interp,
+    )
+    return out[:N, :M]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def scaled_gram(
+    Phi: jax.Array,          # (N, M)
+    sqrtlam: jax.Array,      # (M,)
+    sig2: jax.Array,         # scalar
+    *,
+    block_m: int = 256,
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """B = I + D Phi^T Phi D / sig2 in one fused HBM pass over Phi."""
+    N, M = Phi.shape
+    interp = resolve_interpret(interpret)
+    block_m = min(block_m, max(128, 1 << (M - 1).bit_length()))
+    block_k = min(block_k, max(8, 1 << (N - 1).bit_length()))
+    # zero-padding rows of Phi adds nothing to the Gram sum; zero-padded
+    # columns of d produce identity rows/cols that are sliced away.
+    Phip = _pad_to(_pad_to(Phi, 0, block_k), 1, block_m)
+    d = _pad_to(sqrtlam.reshape(1, -1).astype(jnp.float32), 1, block_m)
+    out = scaled_gram_kernel(
+        Phip, d, jnp.asarray(sig2, jnp.float32).reshape(1, 1),
+        block_m=block_m, block_k=block_k, interpret=interp,
+    )
+    return out[:M, :M]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def diag_quad(
+    A: jax.Array,            # (N, M)
+    C: jax.Array,            # (M, M)
+    *,
+    block_n: int = 256,
+    block_m: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """diag(A C A^T): (N,) predictive variances without the N x N matrix."""
+    N, M = A.shape
+    interp = resolve_interpret(interpret)
+    block_n = min(block_n, max(8, 1 << (N - 1).bit_length()))
+    block_m = min(block_m, max(128, 1 << (M - 1).bit_length()))
+    Ap = _pad_to(_pad_to(A, 0, block_n), 1, block_m)
+    Cp = _pad_to(_pad_to(C, 0, block_m), 1, block_m)
+    out = diag_quad_kernel(
+        Ap, Cp, block_n=block_n, block_m=block_m, interpret=interp
+    )
+    return out[0, :N]

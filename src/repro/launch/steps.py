@@ -1,0 +1,33 @@
+"""Step builders shared by train.py, serve.py and dryrun.py."""
+from __future__ import annotations
+
+import jax
+
+from repro import optim
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step"]
+
+
+def make_train_step(model, ocfg: optim.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, om = optim.apply_updates(params, grads, opt_state, ocfg)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(model, cache_len=None):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len=cache_len)
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, batch, cache):
+        return model.decode_step(params, batch, cache)
+
+    return decode_step

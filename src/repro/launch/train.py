@@ -1,0 +1,92 @@
+"""Training launcher.
+
+CPU-runnable end-to-end (smoke configs by default); the same code path
+lowers to the production mesh when more devices are present.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \\
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs import ARCHS
+from repro.data import TokenStream
+from repro.launch.steps import make_train_step
+from repro.models import get_model
+from repro.parallel import hints, sharding
+from repro.runtime import TrainLoopConfig, train_loop
+
+
+def build(arch_id: str, *, smoke: bool, batch: int, seq: int, lr: float,
+          mesh=None, seed: int = 0):
+    mod = ARCHS[arch_id]
+    cfg = mod.SMOKE if smoke else mod.CONFIG
+    model = get_model(cfg)
+    params = model.init_params(jax.random.key(seed))
+    ocfg = optim.AdamWConfig(lr=optim.warmup_cosine(lr, 20, 10_000))
+    opt_state = optim.init(params, ocfg)
+    step_fn = make_train_step(model, ocfg)
+    extras = {}
+    if cfg.family == "audio":
+        rng = np.random.default_rng(seed)
+        extras["frames"] = jax.numpy.asarray(
+            rng.standard_normal((batch, cfg.enc_len, cfg.d_model)).astype(np.float32)
+        ).astype(jax.numpy.bfloat16)
+    if cfg.family == "vlm":
+        rng = np.random.default_rng(seed)
+        extras["img"] = jax.numpy.asarray(
+            rng.standard_normal((batch, cfg.n_img_tokens, cfg.d_model)).astype(np.float32)
+        ).astype(jax.numpy.bfloat16)
+    stream = TokenStream(vocab=cfg.vocab, seq=seq, global_batch=batch, seed=seed)
+
+    p_sh = o_sh = None
+    if mesh is not None:
+        p_sh = sharding.param_shardings(params, cfg, mesh)
+        o_sh = sharding.opt_state_shardings(opt_state, params, cfg, mesh)
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+        step_fn = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
+                          out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+    return cfg, model, params, opt_state, step_fn, stream, extras, (p_sh, o_sh)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg, model, params, opt_state, step_fn, stream, extras, sh = build(
+        args.arch, smoke=args.smoke, batch=args.batch, seq=args.seq, lr=args.lr
+    )
+    loop_cfg = TrainLoopConfig(
+        steps=args.steps, ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir
+    )
+    params, opt_state, report = train_loop(
+        step_fn, params, opt_state,
+        lambda step: stream.batch(step, extras),
+        loop_cfg,
+    )
+    h = report["history"]
+    print(f"\narch={cfg.arch_id} steps={report['final_step']} "
+          f"first_loss={h[0]['loss']:.4f} last_loss={h[-1]['loss']:.4f} "
+          f"stragglers={report['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

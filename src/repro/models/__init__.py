@@ -1,0 +1,21 @@
+"""Model zoo: the 10 assigned architectures as one composable layer library."""
+from types import SimpleNamespace
+
+from . import config, encdec, layers, lm, mla, moe, ssm
+from .config import ModelConfig
+
+
+def get_model(cfg: ModelConfig) -> SimpleNamespace:
+    """Family dispatch: uniform (init_params, loss_fn, prefill, decode_step,
+    init_cache) API for every architecture."""
+    mod = encdec if cfg.family == "audio" else lm
+    return SimpleNamespace(
+        init_params=lambda key: mod.init_params(key, cfg),
+        loss_fn=lambda params, batch: mod.loss_fn(params, batch, cfg),
+        prefill=lambda params, batch, cache_len=None: mod.prefill(
+            params, batch, cfg, cache_len=cache_len
+        ),
+        decode_step=lambda params, batch, cache: mod.decode_step(params, batch, cache, cfg),
+        init_cache=lambda B, S: mod.init_cache(cfg, B, S),
+        cfg=cfg,
+    )

@@ -1,0 +1,214 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, enc_len, d).  Everything downstream is real:
+sinusoidal-position bidirectional encoder, learned-position causal decoder
+with cross-attention, LayerNorm (with bias), 2-matrix GELU MLPs, tied
+embedding/output head — matching the Whisper architecture (arXiv:2212.04356).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+from .config import ModelConfig
+
+__all__ = ["init_params", "loss_fn", "prefill", "decode_step", "init_cache"]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _ln_init(d):
+    return {"w": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _ln(x, p, eps):
+    return layers.layernorm(x, p["w"], p["b"], eps)
+
+
+def sinusoids(length: int, channels: int):
+    """Whisper's fixed sinusoidal positions."""
+    log_timescale = np.log(10000.0) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    t = np.arange(length)[:, None] * inv[None, :]
+    return jnp.asarray(
+        np.concatenate([np.sin(t), np.cos(t)], axis=1), jnp.float32
+    )
+
+
+def _enc_block_init(key, cfg, dt):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": _ln_init(cfg.d_model),
+        "attn": layers.attn_init(ks[0], cfg, dt),
+        "ln2": _ln_init(cfg.d_model),
+        "mlp": layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt, gated=False),
+    }
+
+
+def _dec_block_init(key, cfg, dt):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": _ln_init(cfg.d_model),
+        "self_attn": layers.attn_init(ks[0], cfg, dt),
+        "ln2": _ln_init(cfg.d_model),
+        "cross_attn": layers.attn_init(ks[1], cfg, dt, cross=True),
+        "ln3": _ln_init(cfg.d_model),
+        "mlp": layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dt, gated=False),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "tok_emb": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dt),
+        "dec_pos": (jax.random.normal(ks[1], (cfg.max_seq, cfg.d_model), jnp.float32) * 0.01).astype(dt),
+        "enc_blocks": jax.vmap(lambda k: _enc_block_init(k, cfg, dt))(
+            jax.random.split(ks[2], cfg.n_enc_layers)
+        ),
+        "dec_blocks": jax.vmap(lambda k: _dec_block_init(k, cfg, dt))(
+            jax.random.split(ks[3], cfg.n_layers)
+        ),
+        "ln_enc": _ln_init(cfg.d_model),
+        "ln_dec": _ln_init(cfg.d_model),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames (B, enc_len, d) [stub frontend output] -> (B, enc_len, d)."""
+    from repro.parallel import hints
+
+    x = frames.astype(_dtype(cfg)) + sinusoids(frames.shape[1], cfg.d_model).astype(
+        _dtype(cfg)
+    )
+
+    def body(h, lp):
+        if cfg.sp_residual and hints.sp_enabled():
+            h = hints.constrain(h, ("dp", "model", None))
+        a = layers.attn_apply(
+            lp["attn"], _ln(h, lp["ln1"], cfg.norm_eps), cfg, causal=False, use_rope=False
+        )
+        h = h + a
+        h = h + layers.mlp_apply(lp["mlp"], _ln(h, lp["ln2"], cfg.norm_eps), "gelu")
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return _ln(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _decode_full(params, tokens, enc_out, cfg, *, collect_kv: bool = False):
+    from repro.parallel import hints
+
+    B, S = tokens.shape
+    x = jnp.take(params["tok_emb"], tokens, axis=0).astype(_dtype(cfg))
+    x = x + params["dec_pos"][:S][None, :, :].astype(x.dtype)
+
+    def body(h, lp):
+        if cfg.sp_residual and hints.sp_enabled():
+            h = hints.constrain(h, ("dp", "model", None))
+        a, (sk, sv) = layers.attn_apply(
+            lp["self_attn"], _ln(h, lp["ln1"], cfg.norm_eps), cfg,
+            causal=True, use_rope=False, return_kv=True,
+        )
+        h = h + a
+        c, (ck, cv) = layers.attn_apply(
+            lp["cross_attn"], _ln(h, lp["ln2"], cfg.norm_eps), cfg,
+            kv_x=enc_out, causal=False, use_rope=False, return_kv=True,
+        )
+        h = h + c
+        h = h + layers.mlp_apply(lp["mlp"], _ln(h, lp["ln3"], cfg.norm_eps), "gelu")
+        return h, (sk, sv, ck, cv) if collect_kv else None
+
+    if cfg.remat and not collect_kv:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, kv = jax.lax.scan(body, x, params["dec_blocks"])
+    return _ln(x, params["ln_dec"], cfg.norm_eps), kv
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """batch: frames (B, enc_len, d), tokens (B, S)."""
+    from .lm import xent_chunked
+
+    from repro.parallel import hints as _h
+
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    with _h.sp_scope(True):
+        enc_out = encode(params, batch["frames"], cfg)
+        h, _ = _decode_full(params, tokens, enc_out, cfg)
+    h = _h.constrain(h, ("dp", None, None))
+    labels = jnp.concatenate([tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones((B, S - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)], axis=1
+    )
+    loss_sum, count = xent_chunked(h, params["tok_emb"], labels, mask, cfg.logits_chunk)
+    loss = loss_sum / jnp.maximum(count, 1.0)
+    return loss, {"loss": loss, "tokens": count}
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int):
+    dt = _dtype(cfg)
+    K, Dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "self_k": jnp.zeros((cfg.n_layers, B, S, K, Dh), dt),
+        "self_v": jnp.zeros((cfg.n_layers, B, S, K, Dh), dt),
+        "cross_k": jnp.zeros((cfg.n_layers, B, cfg.enc_len, K, Dh), dt),
+        "cross_v": jnp.zeros((cfg.n_layers, B, cfg.enc_len, K, Dh), dt),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int | None = None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    Scap = cache_len or S
+    enc_out = encode(params, batch["frames"], cfg)
+    h, kv = _decode_full(params, tokens, enc_out, cfg, collect_kv=True)
+    sk, sv, ck, cv = kv
+    logits = (h[:, -1, :] @ params["tok_emb"].T).astype(jnp.float32)
+    dt = _dtype(cfg)
+    pad = [(0, 0), (0, 0), (0, Scap - S), (0, 0), (0, 0)]
+    cache = {
+        "self_k": jnp.pad(sk, pad).astype(dt),
+        "self_v": jnp.pad(sv, pad).astype(dt),
+        "cross_k": ck.astype(dt),
+        "cross_v": cv.astype(dt),
+    }
+    return logits, cache
+
+
+def decode_step(params, batch, cache, cfg: ModelConfig):
+    """One decoder token against cached self/cross KV."""
+    token, pos = batch["token"], batch["pos"]
+    x = jnp.take(params["tok_emb"], token, axis=0).astype(_dtype(cfg))
+    x = x + jnp.take(params["dec_pos"], jnp.full((1,), pos), axis=0)[None, :, :].astype(x.dtype)[:, 0:1]
+
+    def body(h, inp):
+        lp, sk, sv, ck, cv = inp
+        a, sk, sv = layers.attn_decode(
+            lp["self_attn"], _ln(h, lp["ln1"], cfg.norm_eps), cfg, sk, sv, pos,
+            use_rope=False,
+        )
+        h = h + a
+        c, _, _ = layers.attn_decode(
+            lp["cross_attn"], _ln(h, lp["ln2"], cfg.norm_eps), cfg, ck, cv, pos,
+            cross=True,
+        )
+        h = h + c
+        h = h + layers.mlp_apply(lp["mlp"], _ln(h, lp["ln3"], cfg.norm_eps), "gelu")
+        return h, (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x,
+        (params["dec_blocks"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"]),
+    )
+    h = _ln(x, params["ln_dec"], cfg.norm_eps)
+    logits = (h[:, 0, :] @ params["tok_emb"].T).astype(jnp.float32)
+    return logits, dict(cache, self_k=sk, self_v=sv)

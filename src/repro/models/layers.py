@@ -1,0 +1,337 @@
+"""Shared layer library: norms, RoPE, GQA attention (+cache), MLPs.
+
+Conventions:
+* params are plain nested dicts of jnp arrays; leaf *names* carry the
+  sharding semantics (parallel/sharding.py maps names -> PartitionSpecs);
+* activations flow in cfg.dtype (bf16); softmax/norm internals in f32;
+* attention shapes: q (B, Sq, H, D), k/v (B, Skv, K, D) with H % K == 0.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init", "norm_init", "rmsnorm", "layernorm", "rope",
+    "gqa_attention", "attn_init", "attn_apply", "attn_decode",
+    "mlp_init", "mlp_apply", "update_cache",
+]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def norm_init(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding over the full head dim. x: (B, S, H, D); positions (S,)
+    or (B, S)."""
+    B, S, H, D = x.shape
+    half = D // 2
+    freqs = jnp.exp(
+        -jnp.arange(0, half, dtype=jnp.float32) * (np.log(theta) / half)
+    )  # (half,)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[None, :, None] * freqs[None, None, :]
+        ang = ang[:, :, None, :]                                  # (1, S, 1, half)
+    else:
+        ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+        ang = ang[:, :, None, :]                                  # (B, S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+FLASH_MIN_SQ = 2048     # full-seq paths switch to chunked attention above this
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+
+def _mask_logits(logits, q_start, kv_start, causal, window, kv_valid_len):
+    """logits (..., qc, kc); positions are chunk offsets (static or traced)."""
+    qc, kc = logits.shape[-2], logits.shape[-1]
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    spos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+    mask = None
+    if causal:
+        mask = spos <= qpos
+        if window > 0:
+            mask = mask & (spos > qpos - window)
+    if kv_valid_len is not None:
+        valid = spos < kv_valid_len
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        shape = (1,) * (logits.ndim - 2) + (qc, kc)
+        logits = jnp.where(mask.reshape(shape), logits, -1e30)
+    return logits
+
+
+def _attention_simple(qg, k, v, *, causal, window, q_offset, kv_valid_len, softcap):
+    B, Sq, K, G, D = qg.shape
+    Skv = k.shape[1]
+    scale = 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = _mask_logits(logits, q_offset, 0, causal, window, kv_valid_len)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out
+
+
+def _attention_flash(qg, k, v, *, causal, window, kv_valid_len, softcap,
+                     q_chunk=Q_CHUNK, kv_chunk=KV_CHUNK):
+    """Chunked online-softmax attention (pure XLA, TPU-friendly).
+
+    Never materializes the (Sq, Skv) score matrix: python loop over q chunks
+    (static causal/window chunk-skipping => near-optimal FLOPs) with a
+    lax.scan over kv chunks carrying the running (max, denom, acc).
+    Requires q_offset == 0 (full-sequence paths only).
+    """
+    B, Sq, K, G, D = qg.shape
+    Skv = k.shape[1]
+    Dv = v.shape[-1]
+    scale = 1.0 / np.sqrt(D)
+
+    # pad kv to a chunk multiple; padded keys masked via kv_valid_len
+    pad = (-Skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_valid_len is None:
+            kv_valid_len = Skv
+    n_q = Sq // q_chunk
+
+    outs = []
+    for iq in range(n_q):
+        q_i = qg[:, iq * q_chunk : (iq + 1) * q_chunk].astype(jnp.float32) * scale
+        q_lo = iq * q_chunk
+        # static kv range intersecting the causal/window band of this q chunk
+        kv_hi = min(k.shape[1], q_lo + q_chunk) if causal else k.shape[1]
+        kv_lo = 0
+        if causal and window > 0:
+            kv_lo = max(0, (q_lo - window + 1) // kv_chunk * kv_chunk)
+        n_kv = -(-(kv_hi - kv_lo) // kv_chunk)
+        k_i = jax.lax.slice_in_dim(k, kv_lo, kv_lo + n_kv * kv_chunk, axis=1)
+        v_i = jax.lax.slice_in_dim(v, kv_lo, kv_lo + n_kv * kv_chunk, axis=1)
+        k_i = k_i.reshape(B, n_kv, kv_chunk, K, D)
+        v_i = v_i.reshape(B, n_kv, kv_chunk, K, Dv)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            jkv, k_c, v_c = inp
+            kv_start = kv_lo + jkv * kv_chunk
+            s = jnp.einsum("bqkgd,bskd->bkgqs", q_i, k_c.astype(jnp.float32))
+            if softcap > 0.0:
+                s = softcap * jnp.tanh(s / softcap)
+            s = _mask_logits(s, q_lo, kv_start, causal, window, kv_valid_len)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, v_c.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        init = (
+            jnp.full((B, K, G, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((B, K, G, q_chunk), jnp.float32),
+            jnp.zeros((B, K, G, q_chunk, Dv), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            body, init,
+            (jnp.arange(n_kv), jnp.moveaxis(k_i, 1, 0), jnp.moveaxis(v_i, 1, 0)),
+        )
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]            # (B,K,G,qc,Dv)
+        outs.append(jnp.einsum("bkgqd->bqkgd", out_i))
+    return jnp.concatenate(outs, axis=1).astype(v.dtype)
+
+
+def gqa_attention(
+    q, k, v, *,
+    causal: bool,
+    window: int = 0,
+    q_offset=0,
+    kv_valid_len=None,
+    softcap: float = 0.0,
+):
+    """Grouped-query attention. q (B,Sq,H,D), k/v (B,Skv,K,D) -> (B,Sq,H,D).
+
+    q_offset: absolute position of q[0] (for causal masking of decode steps
+    against a cache; may be a traced scalar).
+    kv_valid_len: mask out cache positions >= this length (traced ok).
+    Dispatches to chunked online-softmax attention for long full sequences
+    (O(Sq*chunk) memory instead of O(Sq*Skv)).
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, D)
+    use_flash = (
+        Sq >= FLASH_MIN_SQ
+        and Sq % Q_CHUNK == 0
+        and isinstance(q_offset, int) and q_offset == 0
+    )
+    if use_flash:
+        out = _attention_flash(
+            qg, k, v, causal=causal, window=window,
+            kv_valid_len=kv_valid_len, softcap=softcap,
+        )
+    else:
+        out = _attention_simple(
+            qg, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_valid_len=kv_valid_len, softcap=softcap,
+        )
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+# --------------------------------------------------------------------------
+# Standard GQA attention layer (dense / moe / hybrid / audio / vlm families)
+# --------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, dtype, *, cross: bool = False, d_kv_in: int | None = None):
+    d, H, K, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    d_kv_in = d_kv_in or d
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * Dh, dtype),
+        "wk": dense_init(ks[1], d_kv_in, K * Dh, dtype),
+        "wv": dense_init(ks[2], d_kv_in, K * Dh, dtype),
+        "wo": dense_init(ks[3], H * Dh, d, dtype, scale=1.0 / np.sqrt(H * Dh)),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * Dh,), dtype)
+        p["bk"] = jnp.zeros((K * Dh,), dtype)
+        p["bv"] = jnp.zeros((K * Dh,), dtype)
+    return p
+
+
+def _project_qkv(p, x, kv_x, cfg):
+    B, S, _ = x.shape
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = kv_x @ p["wk"]
+    v = kv_x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, kv_x.shape[1], K, Dh)
+    v = v.reshape(B, kv_x.shape[1], K, Dh)
+    return q, k, v
+
+
+def attn_apply(
+    p, x, cfg, *,
+    positions=None,
+    causal: bool = True,
+    kv_x=None,
+    use_rope: bool = True,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (train / prefill). kv_x != None -> cross-attn."""
+    kv_src = kv_x if kv_x is not None else x
+    q, k, v = _project_qkv(p, x, kv_src, cfg)
+    if use_rope:
+        pos = positions if positions is not None else jnp.arange(x.shape[1])
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos if kv_x is None else jnp.arange(kv_src.shape[1]), cfg.rope_theta)
+    out = gqa_attention(
+        q, k, v, causal=causal, window=cfg.sliding_window, softcap=cfg.logit_softcap
+    )
+    out = out.reshape(*x.shape[:2], -1) @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def update_cache(cache, new, pos):
+    """Write `new` (B, 1, K, D) into `cache` (B, S, K, D) at position `pos`."""
+    return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype), pos, axis=1)
+
+
+def attn_decode(p, x, cfg, cache_k, cache_v, pos, *, use_rope: bool = True,
+                cross: bool = False):
+    """Single-token decode. x (B, 1, d); cache (B, S, K, D). Returns
+    (out, new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, 1, H, Dh)
+    if cross:
+        # cross-attn: cache holds the (fixed) encoder KV; no update, no rope
+        out = gqa_attention(q, cache_k, cache_v, causal=False)
+        return out.reshape(B, 1, -1) @ p["wo"], cache_k, cache_v
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    k = k.reshape(B, 1, K, Dh)
+    v = v.reshape(B, 1, K, Dh)
+    if use_rope:
+        posv = jnp.full((B, 1), pos, jnp.int32)
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+    cache_k = update_cache(cache_k, k, pos)
+    cache_v = update_cache(cache_v, v, pos)
+    out = gqa_attention(
+        q, cache_k, cache_v, causal=True, window=cfg.sliding_window,
+        q_offset=pos, kv_valid_len=pos + 1, softcap=cfg.logit_softcap,
+    )
+    return out.reshape(B, 1, -1) @ p["wo"], cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, f: int, dtype, *, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    if gated:
+        return {
+            "wg": dense_init(ks[0], d, f, dtype),
+            "wu": dense_init(ks[1], d, f, dtype),
+            "wd": dense_init(ks[2], f, d, dtype, scale=1.0 / np.sqrt(f)),
+        }
+    return {
+        "w1": dense_init(ks[0], d, f, dtype),
+        "b1": jnp.zeros((f,), dtype),
+        "w2": dense_init(ks[1], f, d, dtype, scale=1.0 / np.sqrt(f)),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp_apply(p, x, act: str = "silu"):
+    if "wg" in p:
+        g = x @ p["wg"]
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        return (g * (x @ p["wu"])) @ p["wd"]
+    h = jax.nn.gelu(x @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]

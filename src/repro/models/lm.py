@@ -1,0 +1,722 @@
+"""Decoder-only LM assembly for all assigned families except audio (enc-dec).
+
+Families:
+  dense  — llama/qwen/starcoder style (GQA, RoPE, gated MLP)
+  moe    — olmoe (GQA + top-k MoE FFN)
+  moe+MLA— deepseek-v3 (MLA attention, shared+routed experts, MTP head)
+  ssm    — mamba2 (attention-free SSD)
+  hybrid — zamba2 (mamba2 backbone + ONE shared attention block reused)
+  vlm    — llama-3.2-vision (self blocks + gated cross-attn to image embeds)
+
+All layer stacks run under jax.lax.scan with stacked parameters (compile
+time and HLO size independent of depth) and optional per-layer remat.
+Three entry points per family: loss_fn (train), prefill, decode_step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, mla, moe, ssm
+from .config import ModelConfig
+
+__all__ = ["init_params", "loss_fn", "forward", "prefill", "decode_step", "init_cache"]
+
+Pytree = Any
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply (kind-dispatched; homogeneous within each scan stack)
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, kind: str):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind == "dense":
+        return {
+            "ln1": layers.norm_init(d), "attn": layers.attn_init(ks[0], cfg, dt),
+            "ln2": layers.norm_init(d),
+            "mlp": layers.mlp_init(ks[1], d, cfg.d_ff, dt, gated=cfg.mlp_gated),
+        }
+    if kind == "moe":
+        return {
+            "ln1": layers.norm_init(d), "attn": layers.attn_init(ks[0], cfg, dt),
+            "ln2": layers.norm_init(d), "moe": moe.moe_init(ks[1], cfg, dt),
+        }
+    if kind == "mla_dense":
+        return {
+            "ln1": layers.norm_init(d), "attn": mla.mla_init(ks[0], cfg, dt),
+            "ln2": layers.norm_init(d), "mlp": layers.mlp_init(ks[1], d, cfg.d_ff, dt),
+        }
+    if kind == "mla_moe":
+        return {
+            "ln1": layers.norm_init(d), "attn": mla.mla_init(ks[0], cfg, dt),
+            "ln2": layers.norm_init(d), "moe": moe.moe_init(ks[1], cfg, dt),
+        }
+    if kind == "mamba":
+        return {"ln1": layers.norm_init(d), "ssm": ssm.mamba_init(ks[0], cfg, dt)}
+    if kind == "cross":
+        return {
+            "ln1": layers.norm_init(d),
+            "attn": layers.attn_init(ks[0], cfg, dt, cross=True),
+            "gate_attn": jnp.zeros((1,), jnp.float32),
+            "ln2": layers.norm_init(d),
+            "mlp": layers.mlp_init(ks[1], d, cfg.d_ff, dt),
+            "gate_mlp": jnp.zeros((1,), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def _stack_init(key, cfg, kind, n):
+    return jax.vmap(lambda k: _block_init(k, cfg, kind))(jax.random.split(key, n))
+
+
+def _block_apply(p, x, cfg, kind, *, img=None):
+    """Full-sequence block. Returns (x, aux)."""
+    from repro.parallel import hints
+
+    aux = jnp.zeros((), jnp.float32)
+    if (kind == "mamba" and cfg.ssm_seq_parallel and x.ndim == 3
+            and (cfg.family == "ssm" or hints.sp_enabled())):
+        # sequence-parallel SSM (§Perf Z1): per-token work shards over
+        # 'model' on the seq axis; weights are replicated over 'model'.
+        # Hybrid archs scope this to training (see ssm._ssm_mode).
+        x = hints.constrain(x, ("dp", "model", None))
+    if kind in ("dense", "moe"):
+        x = x + layers.attn_apply(p["attn"], layers.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg)
+        h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == "dense":
+            x = x + layers.mlp_apply(p["mlp"], h, cfg.act)
+        else:
+            B, S, d = h.shape
+            y, aux = moe.moe_dispatch(p["moe"], h.reshape(B * S, d), cfg)
+            x = x + y.reshape(B, S, d)
+        return x, aux
+    if kind in ("mla_dense", "mla_moe"):
+        x = x + mla.mla_apply(p["attn"], layers.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg)
+        h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind == "mla_dense":
+            x = x + layers.mlp_apply(p["mlp"], h, cfg.act)
+        else:
+            B, S, d = h.shape
+            y, aux = moe.moe_dispatch(p["moe"], h.reshape(B * S, d), cfg)
+            x = x + y.reshape(B, S, d)
+        return x, aux
+    if kind == "mamba":
+        x = x + ssm.mamba_apply(p["ssm"], layers.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg)
+        return x, aux
+    if kind == "cross":
+        h = layers.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a = layers.attn_apply(p["attn"], h, cfg, kv_x=img, causal=False, use_rope=False)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * a
+        h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * layers.mlp_apply(p["mlp"], h, cfg.act)
+        return x, aux
+    raise ValueError(kind)
+
+
+def _scan_stack(x, stacked, cfg, kind, *, img=None):
+    """Run x through a stack of identical blocks via lax.scan (+remat)."""
+    from repro.parallel import hints
+
+    def body(carry, lp):
+        h, aux = carry
+        if cfg.sp_residual and hints.sp_enabled() and h.ndim == 3:
+            # §Perf V1: the saved-for-backward carry stack is seq-sharded
+            h = hints.constrain(h, ("dp", "model", None))
+        h, a = _block_apply(lp, h, cfg, kind, img=img)
+        return (h, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Pytree:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 12)
+    p: Dict[str, Any] = {
+        "tok_emb": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02).astype(dt),
+        "final_norm": layers.norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (
+            jax.random.normal(ks[1], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dt)
+
+    fam = cfg.family
+    if fam == "dense":
+        p["blocks"] = _stack_init(ks[2], cfg, "dense", cfg.n_layers)
+    elif fam == "moe" and not cfg.use_mla:
+        p["blocks"] = _stack_init(ks[2], cfg, "moe", cfg.n_layers)
+    elif cfg.use_mla:
+        nd = cfg.moe_layer_start
+        p["dense_blocks"] = _stack_init(ks[2], cfg, "mla_dense", nd)
+        p["moe_blocks"] = _stack_init(ks[3], cfg, "mla_moe", cfg.n_layers - nd)
+        if cfg.mtp_depth:
+            p["mtp_proj"] = layers.dense_init(ks[4], 2 * cfg.d_model, cfg.d_model, dt)
+            p["mtp_norm_h"] = layers.norm_init(cfg.d_model)
+            p["mtp_norm_e"] = layers.norm_init(cfg.d_model)
+            p["mtp_blocks"] = _stack_init(ks[5], cfg, "mla_moe", cfg.mtp_depth)
+    elif fam == "ssm":
+        p["blocks"] = _stack_init(ks[2], cfg, "mamba", cfg.n_layers)
+    elif fam == "hybrid":
+        G, L, T = cfg.hybrid_groups, cfg.hybrid_group_len, cfg.hybrid_tail
+        grouped = jax.vmap(lambda k: _stack_init(k, cfg, "mamba", L))(
+            jax.random.split(ks[2], G)
+        )
+        p["mamba_groups"] = grouped                      # (G, L, ...)
+        p["shared_attn"] = _block_init(ks[3], cfg, "dense")  # ONE reused block
+        if T:
+            p["mamba_tail"] = _stack_init(ks[4], cfg, "mamba", T)
+    elif fam == "vlm":
+        n_cross = cfg.n_layers // (cfg.cross_every + 1)
+        n_self_per = cfg.cross_every
+        p["cross_blocks"] = _stack_init(ks[2], cfg, "cross", n_cross)
+        p["self_groups"] = jax.vmap(lambda k: _stack_init(k, cfg, "dense", n_self_per))(
+            jax.random.split(ks[3], n_cross)
+        )                                                 # (G, per, ...)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Token (+image) inputs -> final hidden states (B, S, d), aux loss."""
+    from repro.parallel import hints
+
+    tokens = batch["tokens"]
+    x = jnp.take(params["tok_emb"], tokens, axis=0)
+    x = hints.constrain(x.astype(_dtype(cfg)), ("dp", None, None))
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+
+    if fam in ("dense", "ssm") or (fam == "moe" and not cfg.use_mla):
+        kind = {"dense": "dense", "ssm": "mamba", "moe": "moe"}[fam]
+        x, aux = _scan_stack(x, params["blocks"], cfg, kind)
+    elif cfg.use_mla:
+        x, a1 = _scan_stack(x, params["dense_blocks"], cfg, "mla_dense")
+        x, a2 = _scan_stack(x, params["moe_blocks"], cfg, "mla_moe")
+        aux = a1 + a2
+    elif fam == "hybrid":
+        def group(carry, gp):
+            h, aux = carry
+            h, _ = _block_apply(params["shared_attn"], h, cfg, "dense")
+            h, a = _scan_stack(h, gp, cfg, "mamba")
+            return (h, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(group, (x, aux), params["mamba_groups"])
+        if cfg.hybrid_tail:
+            x, a = _scan_stack(x, params["mamba_tail"], cfg, "mamba")
+            aux = aux + a
+    elif fam == "vlm":
+        img = batch["img"].astype(_dtype(cfg))
+
+        def group(carry, gp):
+            h, aux = carry
+            cp, sp = gp
+            h, _ = _block_apply(cp, h, cfg, "cross", img=img)
+            h, a = _scan_stack(h, sp, cfg, "dense")
+            return (h, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            group, (x, aux), (params["cross_blocks"], params["self_groups"])
+        )
+    else:
+        raise ValueError(fam)
+    return layers.rmsnorm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+def _unembed(params, cfg):
+    return params["tok_emb"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def xent_chunked(h, emb_out, labels, mask, chunk: int):
+    """Chunked softmax cross-entropy over the sequence axis; never holds a
+    full (B, S, V) logits tensor. Returns (sum_loss, sum_count)."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    nch = S // chunk
+    rem = S - nch * chunk
+
+    def one(hc, lc, mc):
+        logits = (hc @ emb_out.T).astype(jnp.float32)             # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    def body(carry, xs):
+        l, c = carry
+        hc, lc, mc = xs
+        dl, dc = one(hc, lc, mc)
+        return (l + dl, c + dc), None
+
+    hs = h[:, : nch * chunk].reshape(B, nch, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels[:, : nch * chunk].reshape(B, nch, chunk).transpose(1, 0, 2)
+    ms = mask[:, : nch * chunk].reshape(B, nch, chunk).transpose(1, 0, 2)
+    body = jax.checkpoint(body, prevent_cse=False)
+    (loss, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hs, ls, ms)
+    )
+    if rem:
+        dl, dc = one(h[:, nch * chunk :], labels[:, nch * chunk :], mask[:, nch * chunk :])
+        loss, count = loss + dl, count + dc
+    return loss, count
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Next-token LM loss (teacher forcing). batch: tokens (B,S) [+img]."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    labels = jnp.concatenate([tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones((B, S - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)], axis=1
+    )
+    from repro.parallel import hints as _hints
+    with _hints.sp_scope(True):
+        h, aux = forward(params, batch, cfg)
+    h = _hints.constrain(h, ("dp", None, None))
+    emb_out = _unembed(params, cfg)
+    loss_sum, count = xent_chunked(h, emb_out, labels, mask, cfg.logits_chunk)
+    loss = loss_sum / jnp.maximum(count, 1.0)
+
+    if cfg.use_mla and cfg.mtp_depth and "mtp_blocks" in params:
+        # depth-1 multi-token prediction: predict t+2 from [h_t ; emb(t+1)]
+        emb_next = jnp.take(params["tok_emb"], labels, axis=0).astype(h.dtype)
+        cat = jnp.concatenate(
+            [
+                layers.rmsnorm(h, params["mtp_norm_h"], cfg.norm_eps),
+                layers.rmsnorm(emb_next, params["mtp_norm_e"], cfg.norm_eps),
+            ],
+            axis=-1,
+        )
+        hm = cat @ params["mtp_proj"]
+        hm, a = _scan_stack(hm, params["mtp_blocks"], cfg, "mla_moe")
+        aux = aux + a
+        labels2 = jnp.concatenate([labels[:, 1:], jnp.zeros((B, 1), labels.dtype)], axis=1)
+        mask2 = jnp.concatenate([mask[:, 1:], jnp.zeros((B, 1), jnp.float32)], axis=1)
+        l2, c2 = xent_chunked(hm, emb_out, labels2, mask2, cfg.logits_chunk)
+        loss = loss + 0.1 * l2 / jnp.maximum(c2, 1.0)
+
+    loss = loss + aux
+    return loss, {"loss": loss, "aux": aux, "tokens": count}
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches, prefill and decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int) -> Pytree:
+    """Zeroed cache pytree for a context capacity of S tokens."""
+    dt = _dtype(cfg)
+    K, Dh = cfg.n_kv_heads, cfg.head_dim
+    fam = cfg.family
+    if fam == "dense" or (fam == "moe" and not cfg.use_mla):
+        return {
+            "k": jnp.zeros((cfg.n_layers, B, S, K, Dh), dt),
+            "v": jnp.zeros((cfg.n_layers, B, S, K, Dh), dt),
+        }
+    if cfg.use_mla:
+        width = cfg.kv_lora_rank + cfg.qk_rope_dim
+        return {
+            "latent_dense": jnp.zeros((cfg.moe_layer_start, B, S, width), dt),
+            "latent_moe": jnp.zeros((cfg.n_layers - cfg.moe_layer_start, B, S, width), dt),
+        }
+    if fam == "ssm":
+        gn2 = 2 * cfg.ssm_ngroups * cfg.ssm_state
+        return {
+            "conv_x": jnp.zeros((cfg.n_layers, B, cfg.ssm_conv - 1, cfg.d_inner), dt),
+            "conv_BC": jnp.zeros((cfg.n_layers, B, cfg.ssm_conv - 1, gn2), dt),
+            "ssm": jnp.zeros(
+                (cfg.n_layers, B, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), dt
+            ),
+        }
+    if fam == "hybrid":
+        G, L, T = cfg.hybrid_groups, cfg.hybrid_group_len, cfg.hybrid_tail
+        gn2 = 2 * cfg.ssm_ngroups * cfg.ssm_state
+        c = {
+            "attn_k": jnp.zeros((G, B, S, K, Dh), dt),
+            "attn_v": jnp.zeros((G, B, S, K, Dh), dt),
+            "conv_x": jnp.zeros((G, L, B, cfg.ssm_conv - 1, cfg.d_inner), dt),
+            "conv_BC": jnp.zeros((G, L, B, cfg.ssm_conv - 1, gn2), dt),
+            "ssm": jnp.zeros((G, L, B, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), dt),
+        }
+        if T:
+            c["conv_x_tail"] = jnp.zeros((T, B, cfg.ssm_conv - 1, cfg.d_inner), dt)
+            c["conv_BC_tail"] = jnp.zeros((T, B, cfg.ssm_conv - 1, gn2), dt)
+            c["ssm_tail"] = jnp.zeros(
+                (T, B, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), dt
+            )
+        return c
+    if fam == "vlm":
+        G = cfg.n_layers // (cfg.cross_every + 1)
+        per = cfg.cross_every
+        return {
+            "k": jnp.zeros((G, per, B, S, K, Dh), dt),
+            "v": jnp.zeros((G, per, B, S, K, Dh), dt),
+            "img_k": jnp.zeros((G, B, cfg.n_img_tokens, K, Dh), dt),
+            "img_v": jnp.zeros((G, B, cfg.n_img_tokens, K, Dh), dt),
+        }
+    raise ValueError(fam)
+
+
+def _dense_block_decode(p, x, cfg, ck, cv, pos):
+    a, ck, cv = layers.attn_decode(
+        p["attn"], layers.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, ck, cv, pos
+    )
+    x = x + a
+    x = x + layers.mlp_apply(p["mlp"], layers.rmsnorm(x, p["ln2"], cfg.norm_eps), cfg.act)
+    return x, ck, cv
+
+
+def _moe_block_decode(p, x, cfg, ck, cv, pos):
+    a, ck, cv = layers.attn_decode(
+        p["attn"], layers.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, ck, cv, pos
+    )
+    x = x + a
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    B, S, d = h.shape
+    y, _ = moe.moe_dispatch(p["moe"], h.reshape(B * S, d), cfg)
+    return x + y.reshape(B, S, d), ck, cv
+
+
+def _mla_block_decode(p, x, cfg, latent, pos, kind):
+    a, latent = mla.mla_decode(
+        p["attn"], layers.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, latent, pos
+    )
+    x = x + a
+    h = layers.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "mla_dense":
+        x = x + layers.mlp_apply(p["mlp"], h, cfg.act)
+    else:
+        B, S, d = h.shape
+        y, _ = moe.moe_dispatch(p["moe"], h.reshape(B * S, d), cfg)
+        x = x + y.reshape(B, S, d)
+    return x, latent
+
+
+def _mamba_block_decode(p, x, cfg, conv_x, conv_BC, sstate):
+    y, conv_x, conv_BC, sstate = ssm.mamba_decode(
+        p["ssm"], layers.rmsnorm(x, p["ln1"], cfg.norm_eps), cfg, conv_x, conv_BC, sstate
+    )
+    return x + y, conv_x, conv_BC, sstate
+
+
+def decode_step(params, batch, cache, cfg: ModelConfig):
+    """One serve step: batch {'token': (B,1) int32, 'pos': scalar int32}.
+    Returns (logits (B, vocab), new_cache)."""
+    token, pos = batch["token"], batch["pos"]
+    x = jnp.take(params["tok_emb"], token, axis=0).astype(_dtype(cfg))
+    fam = cfg.family
+
+    if fam == "dense" or (fam == "moe" and not cfg.use_mla):
+        dec = _dense_block_decode if fam == "dense" else _moe_block_decode
+
+        def body(x, inp):
+            lp, ck, cv = inp
+            x, ck, cv = dec(lp, x, cfg, ck, cv, pos)
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = {"k": ck, "v": cv}
+    elif cfg.use_mla:
+        def body_d(x, inp):
+            lp, lat = inp
+            x, lat = _mla_block_decode(lp, x, cfg, lat, pos, "mla_dense")
+            return x, lat
+
+        def body_m(x, inp):
+            lp, lat = inp
+            x, lat = _mla_block_decode(lp, x, cfg, lat, pos, "mla_moe")
+            return x, lat
+
+        x, lat_d = jax.lax.scan(body_d, x, (params["dense_blocks"], cache["latent_dense"]))
+        x, lat_m = jax.lax.scan(body_m, x, (params["moe_blocks"], cache["latent_moe"]))
+        cache = {"latent_dense": lat_d, "latent_moe": lat_m}
+    elif fam == "ssm":
+        def body(x, inp):
+            lp, cx, cbc, sstate = inp
+            x, cx, cbc, sstate = _mamba_block_decode(lp, x, cfg, cx, cbc, sstate)
+            return x, (cx, cbc, sstate)
+
+        x, (cx, cbc, sstate) = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv_x"], cache["conv_BC"], cache["ssm"])
+        )
+        cache = {"conv_x": cx, "conv_BC": cbc, "ssm": sstate}
+    elif fam == "hybrid":
+        def inner(x, li):
+            lp, cx_, cb_, ss_ = li
+            x, cx_, cb_, ss_ = _mamba_block_decode(lp, x, cfg, cx_, cb_, ss_)
+            return x, (cx_, cb_, ss_)
+
+        def group(x, inp):
+            gp, ak, av, cx, cb, sstate = inp
+            x, ak, av = _dense_block_decode(params["shared_attn"], x, cfg, ak, av, pos)
+            x, (cx, cb, sstate) = jax.lax.scan(inner, x, (gp, cx, cb, sstate))
+            return x, (ak, av, cx, cb, sstate)
+
+        x, (ak, av, cx, cb, sstate) = jax.lax.scan(
+            group, x,
+            (params["mamba_groups"], cache["attn_k"], cache["attn_v"],
+             cache["conv_x"], cache["conv_BC"], cache["ssm"]),
+        )
+        cache = dict(cache, attn_k=ak, attn_v=av, conv_x=cx, conv_BC=cb, ssm=sstate)
+        if cfg.hybrid_tail:
+            x, (ctx_, ctb_, st) = jax.lax.scan(
+                inner, x,
+                (params["mamba_tail"], cache["conv_x_tail"], cache["conv_BC_tail"],
+                 cache["ssm_tail"]),
+            )
+            cache = dict(cache, conv_x_tail=ctx_, conv_BC_tail=ctb_, ssm_tail=st)
+    elif fam == "vlm":
+        def group(x, inp):
+            cp, sp, ik, iv, ck, cv = inp
+            h = layers.rmsnorm(x, cp["ln1"], cfg.norm_eps)
+            a, _, _ = layers.attn_decode(cp["attn"], h, cfg, ik, iv, pos, cross=True)
+            x = x + jnp.tanh(cp["gate_attn"]).astype(x.dtype) * a
+            h = layers.rmsnorm(x, cp["ln2"], cfg.norm_eps)
+            x = x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * layers.mlp_apply(cp["mlp"], h, cfg.act)
+
+            def inner(x, li):
+                lp, k_, v_ = li
+                x, k_, v_ = _dense_block_decode(lp, x, cfg, k_, v_, pos)
+                return x, (k_, v_)
+
+            x, (ck, cv) = jax.lax.scan(inner, x, (sp, ck, cv))
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            group, x,
+            (params["cross_blocks"], params["self_groups"],
+             cache["img_k"], cache["img_v"], cache["k"], cache["v"]),
+        )
+        cache = dict(cache, k=ck, v=cv)
+    else:
+        raise ValueError(fam)
+
+    h = layers.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, 0, :] @ _unembed(params, cfg).T).astype(jnp.float32)
+    return logits, cache
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int | None = None):
+    """Forward over the prompt, building the decode cache.
+
+    For attention families the cache is filled with the prompt KV; for SSM
+    families the final recurrent state is the cache.  Returns
+    (last-token logits (B, vocab), cache).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    Scap = cache_len or S
+    h, _ = forward(params, batch, cfg)
+    logits = (h[:, -1, :] @ _unembed(params, cfg).T).astype(jnp.float32)
+
+    # Rebuild caches with a dedicated (non-scanned) pass per family.  For the
+    # dry-run's cost model this is the faithful prefill workload: forward +
+    # cache construction.
+    cache = init_cache(cfg, B, Scap)
+    fam = cfg.family
+    dt = _dtype(cfg)
+    x = jnp.take(params["tok_emb"], tokens, axis=0).astype(dt)
+
+    if fam == "dense" or (fam == "moe" and not cfg.use_mla):
+        kind = "dense" if fam == "dense" else "moe"
+
+        def body(carry, lp):
+            h = carry
+            hn = layers.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+            a, (k, v) = layers.attn_apply(lp["attn"], hn, cfg, return_kv=True)
+            h = h + a
+            hn = layers.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+            if kind == "dense":
+                h = h + layers.mlp_apply(lp["mlp"], hn, cfg.act)
+            else:
+                Bv, Sv, dv = hn.shape
+                y, _ = moe.moe_dispatch(lp["moe"], hn.reshape(Bv * Sv, dv), cfg)
+                h = h + y.reshape(Bv, Sv, dv)
+            return h, (k, v)
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        _, (ks_, vs_) = jax.lax.scan(body, x, params["blocks"])
+        pad = [(0, 0), (0, 0), (0, Scap - S), (0, 0), (0, 0)]
+        cache = {"k": jnp.pad(ks_, pad).astype(dt), "v": jnp.pad(vs_, pad).astype(dt)}
+    elif cfg.use_mla:
+        def mk(blocks, xin):
+            def body(carry, lp):
+                h = carry
+                hn = layers.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+                lat = mla.mla_prefill_cache(lp["attn"], hn, cfg)
+                h = h + mla.mla_apply(lp["attn"], hn, cfg)
+                hn = layers.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+                if "mlp" in lp:
+                    h = h + layers.mlp_apply(lp["mlp"], hn, cfg.act)
+                else:
+                    Bv, Sv, dv = hn.shape
+                    y, _ = moe.moe_dispatch(lp["moe"], hn.reshape(Bv * Sv, dv), cfg)
+                    h = h + y.reshape(Bv, Sv, dv)
+                return h, lat
+
+            if cfg.remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            return jax.lax.scan(body, xin, blocks)
+
+        x1, lat_d = mk(params["dense_blocks"], x)
+        _, lat_m = mk(params["moe_blocks"], x1)
+        pad = [(0, 0), (0, 0), (0, Scap - S), (0, 0)]
+        cache = {
+            "latent_dense": jnp.pad(lat_d, pad).astype(dt),
+            "latent_moe": jnp.pad(lat_m, pad).astype(dt),
+        }
+    elif fam in ("ssm", "hybrid"):
+        # SSM prefill: run blocks returning final states (O(1) cache).
+        cache = _ssm_prefill_cache(params, x, cfg, cache, Scap)
+    elif fam == "vlm":
+        img = batch["img"].astype(dt)
+
+        def group(carry, gp):
+            h = carry
+            cp, sp = gp
+            hn = layers.rmsnorm(h, cp["ln1"], cfg.norm_eps)
+            a, (ik, iv) = layers.attn_apply(
+                cp["attn"], hn, cfg, kv_x=img, causal=False, use_rope=False,
+                return_kv=True,
+            )
+            h = h + jnp.tanh(cp["gate_attn"]).astype(h.dtype) * a
+            hn = layers.rmsnorm(h, cp["ln2"], cfg.norm_eps)
+            h = h + jnp.tanh(cp["gate_mlp"]).astype(h.dtype) * layers.mlp_apply(cp["mlp"], hn, cfg.act)
+
+            def inner(carry2, lp):
+                h2 = carry2
+                hn2 = layers.rmsnorm(h2, lp["ln1"], cfg.norm_eps)
+                a2, (k, v) = layers.attn_apply(lp["attn"], hn2, cfg, return_kv=True)
+                h2 = h2 + a2
+                h2 = h2 + layers.mlp_apply(
+                    lp["mlp"], layers.rmsnorm(h2, lp["ln2"], cfg.norm_eps), cfg.act
+                )
+                return h2, (k, v)
+
+            if cfg.remat:
+                inner = jax.checkpoint(inner, prevent_cse=False)
+            h, (k, v) = jax.lax.scan(inner, h, sp)
+            return h, (ik, iv, k, v)
+
+        _, (ik, iv, ks_, vs_) = jax.lax.scan(
+            group, x, (params["cross_blocks"], params["self_groups"])
+        )
+        pad = [(0, 0), (0, 0), (0, 0), (0, Scap - S), (0, 0), (0, 0)]
+        cache = {
+            "k": jnp.pad(ks_, pad).astype(dt),
+            "v": jnp.pad(vs_, pad).astype(dt),
+            "img_k": ik.astype(dt),
+            "img_v": iv.astype(dt),
+        }
+    return logits, cache
+
+
+def _ssm_prefill_cache(params, x, cfg, cache, Scap):
+    dt = _dtype(cfg)
+    din, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_ngroups
+    Kc = cfg.ssm_conv - 1
+
+    def mamba_with_state(lp, h):
+        hn = layers.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        sp = lp["ssm"]
+        z = hn @ sp["in_z"]
+        raw_x = hn @ sp["in_x"]
+        raw_bc = hn @ sp["in_BC"]
+        conv_x_tail = raw_x[:, -Kc:, :]
+        conv_BC_tail = raw_bc[:, -Kc:, :]
+        xc = jax.nn.silu(ssm._causal_depthwise_conv(raw_x, sp["conv_x_w"], sp["conv_x_b"]))
+        bc = jax.nn.silu(ssm._causal_depthwise_conv(raw_bc, sp["conv_BC_w"], sp["conv_BC_b"]))
+        xs, B_, C_ = ssm._split_heads(xc, bc, cfg)
+        dtv = jax.nn.softplus((hn @ sp["in_dt"]).astype(jnp.float32) + sp["dt_bias"])
+        A = -jnp.exp(sp["A_log"])
+        y, state = ssm.ssd_chunked(
+            xs, dtv.astype(h.dtype), A.astype(h.dtype), B_, C_, cfg.ssm_chunk
+        )
+        y = y + xs * sp["D"].astype(h.dtype)[None, None, :, None]
+        y = y.reshape(*h.shape[:2], din)
+        y = layers.rmsnorm(y * jax.nn.silu(z), sp["norm_w"], cfg.norm_eps)
+        return h + y @ sp["out_proj"], conv_x_tail, conv_BC_tail, state
+
+    if cfg.family == "ssm":
+        def body(carry, lp):
+            h = carry
+            h, cx, cb, state = mamba_with_state(lp, h)
+            return h, (cx, cb, state)
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        _, (cxs, cbs, states) = jax.lax.scan(body, x, params["blocks"])
+        return {"conv_x": cxs.astype(dt), "conv_BC": cbs.astype(dt), "ssm": states.astype(dt)}
+
+    # hybrid
+    S = x.shape[1]
+
+    def group(carry, inp):
+        h = carry
+        gp = inp
+        hn = layers.rmsnorm(h, params["shared_attn"]["ln1"], cfg.norm_eps)
+        a, (k, v) = layers.attn_apply(params["shared_attn"]["attn"], hn, cfg, return_kv=True)
+        h = h + a
+        h = h + layers.mlp_apply(
+            params["shared_attn"]["mlp"],
+            layers.rmsnorm(h, params["shared_attn"]["ln2"], cfg.norm_eps), cfg.act,
+        )
+
+        def inner(carry2, lp):
+            h2 = carry2
+            h2, cx, cb, state = mamba_with_state(lp, h2)
+            return h2, (cx, cb, state)
+
+        if cfg.remat:
+            inner = jax.checkpoint(inner, prevent_cse=False)
+        h, (cxs, cbs, states) = jax.lax.scan(inner, h, gp)
+        return h, (k, v, cxs, cbs, states)
+
+    h, (ks_, vs_, cxs, cbs, states) = jax.lax.scan(group, x, params["mamba_groups"])
+    pad = [(0, 0), (0, 0), (0, Scap - S), (0, 0), (0, 0)]
+    out = {
+        "attn_k": jnp.pad(ks_, pad).astype(dt),
+        "attn_v": jnp.pad(vs_, pad).astype(dt),
+        "conv_x": cxs.astype(dt),
+        "conv_BC": cbs.astype(dt),
+        "ssm": states.astype(dt),
+    }
+    if cfg.hybrid_tail:
+        def inner(carry2, lp):
+            h2 = carry2
+            h2, cx, cb, state = mamba_with_state(lp, h2)
+            return h2, (cx, cb, state)
+
+        if cfg.remat:
+            inner = jax.checkpoint(inner, prevent_cse=False)
+        _, (ctx_, ctb_, st) = jax.lax.scan(inner, h, params["mamba_tail"])
+        out["conv_x_tail"] = ctx_.astype(dt)
+        out["conv_BC_tail"] = ctb_.astype(dt)
+        out["ssm_tail"] = st.astype(dt)
+    return out

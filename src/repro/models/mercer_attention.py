@@ -1,0 +1,84 @@
+"""Mercer-feature linear attention — the paper's kernel expansion applied
+to attention (beyond-paper bridge module, see DESIGN.md §Arch-applicability).
+
+Softmax attention weights are a Gaussian kernel in disguise:
+
+    exp(q·k) = e^{|q|²/2} · exp(-|q-k|²/2) · e^{|k|²/2}
+
+and the e^{|q|²/2} factor cancels in the softmax normalization.  Replacing
+the Gaussian kernel with its truncated Mercer expansion (paper Eqs. 5-6,
+tensor-product over head dims with a total-degree index set — the same
+truncation study as the GP core) makes attention LINEAR in sequence length:
+
+    out(q) = φ(q)ᵀ S_v / φ(q)ᵀ s_1,
+    S_v = Σ_k λ·φ(k) e^{|k|²/2} v_kᵀ   (running prefix sums when causal)
+
+Features here use degree ≤ 2 (constant + per-dim linear + pairwise terms):
+M = 1 + d + d(d+1)/2 features per head — O(S·M·d) total, no S×S matrix.
+This is deterministic (unlike Performer's random features) and inherits
+the paper's accuracy-vs-M tradeoff knob.  Quality degrades for large |q|,
+|k| (higher-degree terms truncated), so inputs are RMS-normalized; see
+test_mercer_attention.py for the approximation-error envelope.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["mercer_features_deg2", "mercer_linear_attention"]
+
+
+def _normalize(x, target_norm: float):
+    n = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x * (target_norm / jnp.maximum(n, 1e-6))
+
+
+def mercer_features_deg2(x):
+    """Degree-≤2 tensor-product expansion of exp(-|x-y|²/2) features.
+
+    exp(-|x-y|²/2) = e^{-|x|²/2} e^{-|y|²/2} e^{x·y}; expanding e^{x·y} to
+    second order gives features (per d-dim vector x):
+        φ(x) = e^{-|x|²/2} · [1, x_j, x_i x_j / √(1+δ_ij)]
+    which is exactly the n≤3 Mercer tensor-product truncated at total
+    degree 2 (Hermite H_0, H_1, H_2 recombined).  Returns (..., M) with
+    M = 1 + d + d(d+1)/2.
+    """
+    d = x.shape[-1]
+    env = jnp.exp(-0.5 * jnp.sum(x * x, axis=-1, keepdims=True))
+    ones = jnp.ones_like(env)
+    lin = x
+    outer = x[..., :, None] * x[..., None, :]
+    iu = np.triu_indices(d)
+    scale = jnp.asarray(np.where(iu[0] == iu[1], 1.0, np.sqrt(2.0)), x.dtype)
+    quad = outer[..., iu[0], iu[1]] * scale / jnp.sqrt(2.0) * jnp.sqrt(2.0)
+    quad = quad / jnp.sqrt(2.0)  # 1/sqrt(2!) Taylor factor, off-diag x sqrt2
+    feats = jnp.concatenate([ones, lin, quad], axis=-1)
+    return feats * env
+
+
+def mercer_linear_attention(q, k, v, *, causal: bool = True,
+                            target_norm: float = 1.0):
+    """q,k (B,S,H,D), v (B,S,H,Dv) -> (B,S,H,Dv) in O(S·M) (no S×S matrix).
+
+    Inputs are norm-clamped to keep the degree-2 truncation accurate
+    (||x|| ≤ ~1.5 gives <2% kernel error; see tests)."""
+    q = _normalize(q.astype(jnp.float32), target_norm)
+    k = _normalize(k.astype(jnp.float32), target_norm)
+    fq = mercer_features_deg2(q)                      # (B,S,H,M)
+    fk = mercer_features_deg2(k)
+    # e^{|k|^2/2} with normalized k is constant and cancels; keep general:
+    kw = jnp.exp(0.5 * jnp.sum(k * k, axis=-1, keepdims=True))
+    fk = fk * kw
+    if causal:
+        Sv = jnp.cumsum(fk[..., :, None] * v.astype(jnp.float32)[..., None, :],
+                        axis=1)                       # (B,S,H,M,Dv)
+        s1 = jnp.cumsum(fk, axis=1)                   # (B,S,H,M)
+        num = jnp.einsum("bshm,bshmd->bshd", fq, Sv)
+        den = jnp.einsum("bshm,bshm->bsh", fq, s1)
+    else:
+        Sv = jnp.einsum("bshm,bshd->bhmd", fk, v.astype(jnp.float32))
+        s1 = jnp.sum(fk, axis=1)                      # (B,H,M)
+        num = jnp.einsum("bshm,bhmd->bshd", fq, Sv)
+        den = jnp.einsum("bshm,bhm->bsh", fq, s1)
+    return (num / jnp.maximum(den[..., None], 1e-9)).astype(v.dtype)

@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (MLA) — DeepSeek-V3 (arXiv:2412.19437).
+
+Q and KV both pass through low-rank latents; only the (kv_lora + rope_dim)
+latent per token is cached at decode time.  Decode uses the *absorbed* form:
+q is projected into the KV-latent space so attention scores are computed
+directly against the cached latent — the per-head K/V expansion never
+materializes for the 32k-long cache.  Train/prefill use the standard
+expanded form (matches the training cost structure).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rmsnorm, rope, update_cache
+
+__all__ = ["mla_init", "mla_apply", "mla_decode"]
+
+
+def mla_init(key, cfg, dtype):
+    d, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, qr, dtype),
+        "q_ln": jnp.ones((qr,), jnp.float32),
+        "wq_b": dense_init(ks[1], qr, H * (dn + dr), dtype),
+        "wkv_a": dense_init(ks[2], d, kvr + dr, dtype),
+        "kv_ln": jnp.ones((kvr,), jnp.float32),
+        "wkv_b": dense_init(ks[3], kvr, H * (dn + dv), dtype),
+        "wo": dense_init(ks[4], H * dv, d, dtype, scale=1.0 / np.sqrt(H * dv)),
+    }
+
+
+def _q_proj(p, x, cfg):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(x @ p["wq_a"], p["q_ln"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(B, S, H, dn + dr)
+    return q[..., :dn], q[..., dn:]                     # (B,S,H,dn), (B,S,H,dr)
+
+
+def _kv_latent(p, x, cfg):
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ckv_full = x @ p["wkv_a"]                           # (B, S, kvr+dr)
+    ckv = rmsnorm(ckv_full[..., :kvr], p["kv_ln"], cfg.norm_eps)
+    k_rope = ckv_full[..., kvr:][:, :, None, :]         # (B, S, 1, dr)
+    return ckv, k_rope
+
+
+def mla_apply(p, x, cfg, *, positions=None):
+    """Full-sequence MLA (train / prefill), causal. x (B, S, d).
+
+    Expanded form: concat(nope, rope) per head turns MLA into a plain
+    causal GQA call (K == H), so the chunked online-softmax path in
+    layers.gqa_attention applies unchanged."""
+    from .layers import gqa_attention
+
+    B, S, _ = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    pos = positions if positions is not None else jnp.arange(S)
+
+    q_nope, q_rope = _q_proj(p, x, cfg)
+    q_rope = rope(q_rope, pos, cfg.rope_theta)
+    ckv, k_rope = _kv_latent(p, x, cfg)
+    k_rope = rope(k_rope, pos, cfg.rope_theta)          # (B, S, 1, dr)
+
+    kv = (ckv @ p["wkv_b"]).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)                  # (B,S,H,dn+dr)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1
+    )
+    out = gqa_attention(q, k, v, causal=True)                       # Dv != Dqk ok
+    return out.reshape(B, S, H * dv) @ p["wo"]
+
+
+def mla_prefill_cache(p, x, cfg, *, positions=None):
+    """The decode cache: roped k_rope + normalized latent, (B, S, kvr + dr)."""
+    S = x.shape[1]
+    pos = positions if positions is not None else jnp.arange(S)
+    ckv, k_rope = _kv_latent(p, x, cfg)
+    k_rope = rope(k_rope, pos, cfg.rope_theta)[:, :, 0, :]
+    return jnp.concatenate([ckv, k_rope], axis=-1)
+
+
+def mla_decode(p, x, cfg, cache, pos):
+    """Absorbed-form single-token decode. x (B, 1, d); cache (B, S, kvr+dr).
+
+    scores_h = q_nope_h^T W_UK_h ckv + q_rope_h^T k_rope   per head h,
+    out_h    = W_UV_h^T (probs @ ckv)
+
+    Sharding schedule (§Perf D1): the cache is seq-sharded over 'model' and
+    NEVER moves; q (a few MB) is replicated over 'model' instead, attention
+    runs S-local per shard, and the context is combined with tiny
+    partial-sum all-reduces.  Without the explicit pins XLA resolves the
+    head-vs-seq sharding conflict by all-gathering the multi-GB cache every
+    einsum (155 GiB/step for deepseek-v3 at 32k).
+    """
+    from repro.parallel import hints
+
+    B = x.shape[0]
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+
+    q_nope, q_rope = _q_proj(p, x, cfg)                 # (B,1,H,dn), (B,1,H,dr)
+    q_nope = hints.constrain(q_nope, ("dp", None, None, None))
+    q_rope = hints.constrain(q_rope, ("dp", None, None, None))
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_rope = rope(q_rope, posv, cfg.rope_theta)
+
+    ckv_new, k_rope_new = _kv_latent(p, x, cfg)         # (B,1,kvr), (B,1,1,dr)
+    k_rope_new = rope(k_rope_new, posv, cfg.rope_theta)[:, :, 0, :]
+    new_entry = jnp.concatenate([ckv_new, k_rope_new], axis=-1)[:, :, None, :]
+    cache = update_cache(cache[:, :, None, :], new_entry, pos)[:, :, 0, :]
+
+    ckv_c, k_rope_c = cache[..., :kvr], cache[..., kvr:]      # (B,S,kvr), (B,S,dr)
+    wkv_b = p["wkv_b"].reshape(kvr, H, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]             # (kvr,H,dn),(kvr,H,dv)
+
+    q_abs = jnp.einsum("bqhd,khd->bqhk", q_nope, w_uk)        # (B,1,H,kvr)
+    q_abs = hints.constrain(q_abs, ("dp", None, None, None))
+    scale = 1.0 / np.sqrt(dn + dr)
+    logits = (
+        jnp.einsum("bqhk,bsk->bhqs", q_abs.astype(jnp.float32), ckv_c.astype(jnp.float32))
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                     k_rope_c.astype(jnp.float32))
+    ) * scale
+    logits = hints.constrain(logits, ("dp", None, None, "model"))  # S-local
+    spos = jnp.arange(cache.shape[1])
+    logits = jnp.where((spos <= pos)[None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhqs,bsk->bqhk", probs, ckv_c.astype(jnp.float32))  # latent ctx
+    ctx = hints.constrain(ctx, ("dp", None, None, None))      # partial-sum AR (MBs)
+    out = jnp.einsum("bqhk,khd->bqhd", ctx.astype(x.dtype), w_uv)         # (B,1,H,dv)
+    return out.reshape(B, 1, H * dv) @ p["wo"], cache

@@ -1,0 +1,228 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Scalable formulation (no (T, E, C) one-hot): the expert assignment is turned
+into an (E, C) table of token ids via a sort-based within-expert ranking —
+O(Tk log Tk) — then experts run as one batched einsum over the (E, C, d)
+gathered buffer.
+
+Two execution paths:
+
+* ``moe_apply`` — single-shard dense path (smoke tests, small runs).
+* ``moe_apply_sharded`` — production expert parallelism via shard_map:
+  tokens stay sharded over (pod, data) and *replicated* over 'model'; each
+  model shard dispatches/computes only its E/model_size experts locally and
+  the combine is ONE psum over 'model' — the same collective volume as a
+  Megatron TP MLP ((T_local, d) all-reduce), with zero all-to-alls and a
+  fully local gather.  Expert weights are additionally sharded over 'data'
+  on d_model (FSDP) and all-gathered at use inside the shard (the backward
+  pass reduce-scatters automatically).
+
+Includes: shared experts (deepseek-v3), switch-style load-balance aux loss,
+capacity_factor overflow dropping (dropped tokens keep the shared/residual
+path only).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import hints
+from .layers import dense_init
+
+__all__ = ["moe_init", "moe_apply", "moe_apply_sharded", "moe_dispatch", "capacity"]
+
+
+def capacity(T: int, cfg) -> int:
+    c = int(np.ceil(cfg.capacity_factor * T * cfg.top_k / cfg.n_experts))
+    return max(8, int(np.ceil(c / 8) * 8))
+
+
+def moe_init(key, cfg, dtype):
+    d, fe, E = cfg.d_model, cfg.d_expert, cfg.n_experts
+    ks = jax.random.split(key, 8)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, d, fe), jnp.float32) / np.sqrt(d)).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (E, d, fe), jnp.float32) / np.sqrt(d)).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (E, fe, d), jnp.float32) / np.sqrt(fe)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        p["shared_wg"] = dense_init(ks[4], d, fs, dtype)
+        p["shared_wu"] = dense_init(ks[5], d, fs, dtype)
+        p["shared_wd"] = dense_init(ks[6], fs, d, dtype, scale=1.0 / np.sqrt(fs))
+    return p
+
+
+def _expert_ranks(e_flat: jax.Array, n_assign: int) -> jax.Array:
+    """rank of each assignment within its expert group (sort-based, O(n log n))."""
+    order = jnp.argsort(e_flat, stable=True)
+    sorted_e = e_flat[order]
+    idx = jnp.arange(n_assign, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]]
+    )
+    group_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    rank_sorted = idx - group_start
+    return jnp.zeros_like(e_flat).at[order].set(rank_sorted)
+
+
+def _route(p, x, cfg):
+    """Router probabilities, top-k, renormalized gates, aux loss."""
+    E, k = cfg.n_experts, cfg.top_k
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                                # (T, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)                 # renormalize
+    frac_tokens = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topi, E, dtype=jnp.float32), axis=1), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(frac_tokens * frac_probs)
+    return topv, topi, aux
+
+
+def _dispatch_tables(topi, topv, T, k, C, e_lo, n_local, dtype):
+    """(E_local*C,) token/gate tables for experts in [e_lo, e_lo+n_local).
+
+    Ranks are computed over ALL assignments (global capacity semantics), so
+    every shard computing this on the same tokens agrees on drops."""
+    n_assign = T * k
+    e_flat = topi.reshape(-1).astype(jnp.int32)
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)
+    w_flat = topv.reshape(-1).astype(dtype)
+    rank = _expert_ranks(e_flat, n_assign)
+    local = (e_flat >= e_lo) & (e_flat < e_lo + n_local)
+    keep = (rank < C) & local
+    dest = jnp.where(keep, (e_flat - e_lo) * C + rank, n_local * C)     # last = drop
+    token_for_slot = jnp.full((n_local * C,), T, jnp.int32)             # T = pad row
+    token_for_slot = token_for_slot.at[dest].set(t_flat, mode="drop")
+    w_for_slot = jnp.zeros((n_local * C,), dtype).at[dest].set(w_flat, mode="drop")
+    return token_for_slot, w_for_slot
+
+
+def _expert_ffn(x, token_for_slot, w_for_slot, wg, wu, wd, T, d, C):
+    """Gather -> batched expert einsum -> weighted scatter-combine."""
+    E_l = wg.shape[0]
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xe = x_pad[token_for_slot].reshape(E_l, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg)) * jnp.einsum(
+        "ecd,edf->ecf", xe, wu
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, wd).reshape(E_l * C, d)
+    y = jnp.zeros((T + 1, d), x.dtype)
+    return y.at[token_for_slot].add(ye * w_for_slot[:, None])[:T]
+
+
+def moe_apply(p, x, cfg):
+    """Single-shard path. x: (T, d) -> (y (T, d), aux_loss scalar)."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(T, cfg)
+    topv, topi, aux = _route(p, x, cfg)
+    token_for_slot, w_for_slot = _dispatch_tables(topi, topv, T, k, C, 0, E, x.dtype)
+    y = _expert_ffn(x, token_for_slot, w_for_slot, p["wg"], p["wu"], p["wd"], T, d, C)
+    if "shared_wg" in p:
+        g = jax.nn.silu(x @ p["shared_wg"]) * (x @ p["shared_wu"])
+        y = y + g @ p["shared_wd"]
+    return y, aux
+
+
+def moe_apply_sharded(p, x, cfg):
+    """Expert-parallel path under an active mesh (see module docstring).
+
+    x: (T, d) GLOBAL flattened tokens, sharded P(dp, None).  Experts live
+    E/model_size per shard; tokens are replicated over 'model', so dispatch
+    and gather are local and the combine is one psum over 'model'."""
+    shard_map = jax.shard_map
+
+    mesh = hints.active_mesh()
+    dp = hints.dp_axes(mesh)
+    msize = mesh.shape["model"]
+    dsize = mesh.shape["data"]
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    E_local = E // msize
+    T_l = T // dp_size
+    C = capacity(T_l, cfg)
+    fsdp = cfg.fsdp and d % dsize == 0
+
+    p_specs = {
+        "router": P(None, None),
+        "wg": P("model", "data", None) if fsdp else P("model", None, None),
+        "wu": P("model", "data", None) if fsdp else P("model", None, None),
+        "wd": P("model", None, "data") if fsdp else P("model", None, None),
+    }
+    if "shared_wg" in p:
+        p_specs.update(
+            shared_wg=P(None, "model"), shared_wu=P(None, "model"),
+            shared_wd=P("model", None),
+        )
+
+    # serve mode (§Perf D1): when tokens-per-expert is tiny (decode), moving
+    # the 11B expert weights through FSDP all-gathers costs ~GBs per layer
+    # per step.  Instead: gather the (tiny) tokens over 'data', keep weights
+    # sharded, contract each shard's d_model slice, and psum the small
+    # routed activations — weights never move.
+    T_g = T_l * dsize                       # tokens per pod row after gather
+    serve_mode = fsdp and (T_g * k) // max(E, 1) <= 64
+    C_g = capacity(T_g, cfg)
+
+    def inner(pl, x_l):
+        wg, wu, wd = pl["wg"], pl["wu"], pl["wd"]
+        e_lo = jax.lax.axis_index("model") * E_local
+        if serve_mode:
+            x_g = jax.lax.all_gather(x_l, "data", axis=0, tiled=True)  # (T_g, d)
+            topv, topi, aux = _route(pl, x_g, cfg)
+            tok, w = _dispatch_tables(topi, topv, T_g, k, C_g, e_lo, E_local,
+                                      x_g.dtype)
+            dloc = d // dsize
+            j0 = jax.lax.axis_index("data") * dloc
+            x_pad = jnp.concatenate([x_g, jnp.zeros((1, d), x_g.dtype)], axis=0)
+            xe = x_pad[tok].reshape(E_local, C_g, d)
+            xg = jax.lax.dynamic_slice_in_dim(xe, j0, dloc, axis=2)
+            gh = jax.lax.psum(jnp.einsum("ecd,edf->ecf", xg, wg), "data")
+            uh = jax.lax.psum(jnp.einsum("ecd,edf->ecf", xg, wu), "data")
+            h = jax.nn.silu(gh) * uh
+            ye = jnp.einsum("ecf,efd->ecd", h, wd).reshape(E_local * C_g, dloc)
+            y_p = jnp.zeros((T_g + 1, dloc), x_g.dtype)
+            y_p = y_p.at[tok].add(ye * w[:, None])[:T_g]
+            y_full = jax.lax.all_gather(y_p, "data", axis=1, tiled=True)
+            t0 = jax.lax.axis_index("data") * T_l
+            y = jax.lax.dynamic_slice_in_dim(y_full, t0, T_l, axis=0)
+        else:
+            if fsdp:  # manual ZeRO-3: gather weights at use
+                wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+                wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+                wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+            topv, topi, aux = _route(pl, x_l, cfg)
+            tok, w = _dispatch_tables(topi, topv, T_l, k, C, e_lo, E_local,
+                                      x_l.dtype)
+            y = _expert_ffn(x_l, tok, w, wg, wu, wd, T_l, d, C)
+        if "shared_wg" in pl:
+            g = jax.nn.silu(x_l @ pl["shared_wg"]) * (x_l @ pl["shared_wu"])
+            y = y + g @ pl["shared_wd"]        # partial over 'model' (TP on fs)
+        y = jax.lax.psum(y, "model")           # ONE combine collective
+        return y, aux[None]
+
+    y, aux = shard_map(
+        inner, mesh=mesh,
+        in_specs=(p_specs, P(dp, None)),
+        out_specs=(P(dp, None), P(dp)),
+        check_vma=False,
+    )({k_: p[k_] for k_ in p_specs}, x)
+    return y, jnp.mean(aux)
+
+
+def moe_dispatch(p, x, cfg):
+    """Pick the execution path: shard_map EP when a mesh is active and the
+    expert count divides the model axis; dense otherwise."""
+    mesh = hints.active_mesh()
+    if mesh is not None and cfg.n_experts % mesh.shape["model"] == 0:
+        dp_size = int(np.prod([mesh.shape[a] for a in hints.dp_axes(mesh)]))
+        if x.shape[0] % dp_size == 0:
+            return moe_apply_sharded(p, x, cfg)
+    return moe_apply(p, x, cfg)

@@ -1,0 +1,282 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Chunked block-decomposition of the SSD recurrence: quadratic attention-like
+intra-chunk term (MXU-friendly batched matmuls) + a sequential inter-chunk
+state recurrence (lax.scan over l/chunk steps carrying the (h, p, n) state).
+This is the TPU-native formulation: all heavy ops are dense einsums; the only
+sequential dependency is the tiny per-chunk state.
+
+Includes the full mamba2 block (in_proj -> causal depthwise conv -> SSD ->
+gated RMSNorm -> out_proj) plus O(1)-state single-token decode — which is
+why the SSM/hybrid archs run the 500k-context decode cell that quadratic
+attention archs skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rmsnorm
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_decode", "ssd_chunked"]
+
+
+def _segsum(x):
+    """x (..., q) -> (..., q, q): S[i, j] = sum_{k=j+1..i} x_k (i >= j), -inf else."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    return jnp.where(i >= j, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """SSD: y_t = C_t^T S_t,  S_t = exp(dt_t A) S_{t-1} + dt_t B_t x_t^T.
+
+    x (b, l, h, p), dt (b, l, h) [post-softplus], A (h,) negative,
+    B, C (b, l, g, n) with h % g == 0.  Returns (y (b, l, h, p),
+    final_state (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+
+    # pad to a chunk multiple; dt=0 padding is exact (decay 1, no state update)
+    l_orig = l
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = l + pad
+    nc = l // chunk
+
+    def chunked(t, width):  # (b, l, ...) -> (b, nc, chunk, ...)
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc = chunked(x, p)                                  # (b,c,q,h,p)
+    dtc = chunked(dt, None)                             # (b,c,q,h)
+    Bc = jnp.repeat(chunked(B, n), rep, axis=3)         # (b,c,q,h,n)
+    Cc = jnp.repeat(chunked(C, n), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                   # (b,c,q,h)
+    dA_cs = jnp.cumsum(dA, axis=2)                      # (b,c,q,h)
+    xdt = xc * dtc[..., None]
+
+    # 1) intra-chunk (quadratic within chunk, like masked attention)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, 2, 3)))        # (b,c,h,q,q)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", Cc, Bc)   # (b,c,h,q,s)
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", scores * L, xdt)
+
+    # 2) per-chunk outgoing states
+    decay_out = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)    # (b,c,q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bc, decay_out, xdt)
+
+    # 3) inter-chunk recurrence (sequential over nc chunks)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])           # (b,c,h)
+    s0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, h, p, n), x.dtype)
+    )
+
+    def step(carry, inp):
+        s_prev = carry
+        dec, s_new = inp                                 # (b,h), (b,h,p,n)
+        s = s_prev * dec[..., None, None] + s_new
+        return s, s_prev
+
+    final_state, states_prev = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    states_prev = jnp.moveaxis(states_prev, 0, 1)        # (b,c,h,p,n)
+
+    # 4) inter-chunk contribution
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bcqh->bcqhp", Cc, states_prev, jnp.exp(dA_cs)
+    )
+    y = (y_diag + y_off).reshape(b, l, h, p)[:, :l_orig]
+    return y, final_state
+
+
+# --------------------------------------------------------------------------
+# Full mamba2 block
+# --------------------------------------------------------------------------
+
+
+def mamba_init(key, cfg, dtype):
+    """The canonical fused in_proj/conv are SPLIT into per-role params
+    (z | x | BC | dt and conv_x | conv_BC): the role boundaries are not
+    aligned to tensor-parallel shard boundaries, and a depthwise conv
+    factorizes exactly across the channel split, so splitting costs nothing
+    and makes the d_inner/head axes cleanly shardable over 'model'."""
+    d = cfg.d_model
+    din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    g, K = cfg.ssm_ngroups, cfg.ssm_conv
+    ks = jax.random.split(key, 6)
+    dt = np.exp(
+        np.random.RandomState(0).uniform(np.log(1e-3), np.log(1e-1), size=(h,))
+    )
+    return {
+        "in_z": dense_init(ks[0], d, din, dtype),
+        "in_x": dense_init(ks[1], d, din, dtype),
+        "in_BC": dense_init(ks[2], d, 2 * g * n, dtype),
+        "in_dt": dense_init(ks[3], d, h, dtype),
+        "conv_x_w": (jax.random.normal(ks[4], (K, din), jnp.float32) / np.sqrt(K)).astype(dtype),
+        "conv_x_b": jnp.zeros((din,), dtype),
+        "conv_BC_w": (jax.random.normal(ks[5], (K, 2 * g * n), jnp.float32) / np.sqrt(K)).astype(dtype),
+        "conv_BC_b": jnp.zeros((2 * g * n,), dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.asarray(dt + np.log(-np.expm1(-dt)), jnp.float32),  # inv softplus
+        "norm_w": jnp.ones((din,), jnp.float32),
+        "out_proj": dense_init(ks[2], din, d, dtype, scale=1.0 / np.sqrt(din)),
+    }
+
+
+def _causal_depthwise_conv(xBC, w, b):
+    """(b, l, ch) causal depthwise conv, kernel K (static unroll over K taps)."""
+    K = w.shape[0]
+    out = xBC * w[K - 1][None, None, :]
+    for k in range(1, K):
+        shifted = jnp.pad(xBC, ((0, 0), (k, 0), (0, 0)))[:, : xBC.shape[1], :]
+        out = out + shifted * w[K - 1 - k][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssm_mode(cfg) -> str:
+    """'sp_tp': Megatron-SP (seq-sharded residual, channel/head-sharded
+    interior, AG at entry + RS at exit — §Perf Z2); 'sp_only': replicated
+    weights, everything seq-sharded (heads don't divide the model axis);
+    'off': no mesh active."""
+    from repro.parallel import hints
+
+    mesh = hints.active_mesh()
+    if mesh is None or not cfg.ssm_seq_parallel:
+        return "off"
+    # hybrid archs interleave attention blocks that need the full sequence;
+    # seq-sharding their mamba interiors pays resharding on every boundary,
+    # which only amortizes when the backward stacks shrink too — so hybrid
+    # applies Z1 during training only (pure SSM keeps it everywhere:
+    # mamba2 prefill improved 0.92 s -> 0.35 s with it).
+    if cfg.family == "hybrid" and not hints.sp_enabled():
+        return "off"
+    # NOTE (§Perf Z2, REFUTED): the Megatron-SP variant ('sp_tp': TP weights
+    # + AG-entry/RS-exit) compiled to full-seq all-reduces instead of
+    # reduce-scatters at the out_proj exit (XLA does not fuse AR+DS across
+    # the bf16<->f32 converts on this toolchain), regressing zamba2 train
+    # collectives 7.46 s -> 20.1 s.  Pure sequence sharding with replicated
+    # (FSDP-only) SSM weights is the winning scheme; set REPRO_SSM_TP=1 to
+    # re-measure the refuted variant.
+    import os
+
+    msize = mesh.shape.get("model", 1)
+    if (os.environ.get("REPRO_SSM_TP") == "1"
+            and cfg.ssm_heads % msize == 0 and cfg.d_inner % msize == 0):
+        return "sp_tp"
+    return "sp_only"
+
+
+def _act(t, cfg, role: str):
+    """Mode-dependent sharding pin for (b, l, ch...) activations."""
+    from repro.parallel import hints
+
+    mode = _ssm_mode(cfg)
+    if mode == "off":
+        return t
+    tail = (None,) * (t.ndim - 3)
+    if mode == "sp_only":
+        if role == "bc":
+            return hints.constrain(t, ("dp", "model", None) + tail)
+        return hints.constrain(t, ("dp", "model", None) + tail)
+    # sp_tp
+    if role == "chan":      # z / x / dt: channel- or head-sharded, full seq
+        return hints.constrain(t, ("dp", None, "model") + tail)
+    if role == "bc":        # B/C: tiny, every head shard needs all of it
+        return hints.constrain(t, ("dp", None, None) + tail)
+    if role == "seq":       # residual exit: back to seq-sharded
+        return hints.constrain(t, ("dp", "model", None) + tail)
+    raise ValueError(role)
+
+
+def _project(p, u, cfg):
+    """u (b, l, d) -> z (b,l,din), x_conv (b,l,din), BC_conv (b,l,2gn),
+    dt_raw (b,l,h); conv+silu applied (depthwise conv factorizes exactly
+    across the x | BC split)."""
+    z = _act(u @ p["in_z"], cfg, "chan")
+    xc = _act(jax.nn.silu(
+        _causal_depthwise_conv(u @ p["in_x"], p["conv_x_w"], p["conv_x_b"])
+    ), cfg, "chan")
+    bc = _act(jax.nn.silu(
+        _causal_depthwise_conv(u @ p["in_BC"], p["conv_BC_w"], p["conv_BC_b"])
+    ), cfg, "bc")
+    return z, xc, bc, _act(u @ p["in_dt"], cfg, "chan")
+
+
+def _split_heads(xc, bc, cfg):
+    b, l, _ = xc.shape
+    n, h, g = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_ngroups
+    x = xc.reshape(b, l, h, cfg.ssm_headdim)
+    B = bc[..., : g * n].reshape(b, l, g, n)
+    C = bc[..., g * n :].reshape(b, l, g, n)
+    return x, B, C
+
+
+def mamba_apply(p, u, cfg, *, return_state: bool = False, init_state=None):
+    """Full-sequence mamba2 block. u (b, l, d) -> (b, l, d)."""
+    b, l, d = u.shape
+    din = cfg.d_inner
+    z, xc, bc, dt_raw = _project(p, u, cfg)
+    x, B, C = _split_heads(xc, bc, cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])      # (b,l,h)
+    A = -jnp.exp(p["A_log"])                                             # (h,)
+    y, state = ssd_chunked(
+        x, dt.astype(u.dtype), A.astype(u.dtype), B, C, cfg.ssm_chunk,
+        init_state=init_state,
+    )
+    y = y + x * p["D"].astype(u.dtype)[None, None, :, None]
+    y = _act(y.reshape(b, l, din), cfg, "chan")
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = _act(y @ p["out_proj"], cfg, "seq")   # sp_tp: partial-sum -> RS
+    if return_state:
+        return out, state
+    return out
+
+
+def mamba_decode(p, u, cfg, conv_x_state, conv_BC_state, ssm_state):
+    """Single-token decode. u (b, 1, d); conv_*_state (b, K-1, ch);
+    ssm_state (b, h, p, n).  O(1) in context length."""
+    b = u.shape[0]
+    din, n, h, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_ngroups
+    pdim, K = cfg.ssm_headdim, cfg.ssm_conv
+    z = u @ p["in_z"]
+    dt_raw = u @ p["in_dt"]
+
+    win_x = jnp.concatenate([conv_x_state, u @ p["in_x"]], axis=1)       # (b, K, din)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_x, p["conv_x_w"]) + p["conv_x_b"])
+    conv_x_state = win_x[:, 1:, :]
+    win_bc = jnp.concatenate([conv_BC_state, u @ p["in_BC"]], axis=1)    # (b, K, 2gn)
+    bc = jax.nn.silu(jnp.einsum("bkc,kc->bc", win_bc, p["conv_BC_w"]) + p["conv_BC_b"])
+    conv_BC_state = win_bc[:, 1:, :]
+
+    x, B, C = _split_heads(xc[:, None, :], bc[:, None, :], cfg)          # l = 1
+    x, B, C = x[:, 0], B[:, 0], C[:, 0]                                  # (b,h,p),(b,g,n)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,h)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :]).astype(u.dtype)                        # (b,h)
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1)                                      # (b,h,n)
+    Ch = jnp.repeat(C, rep, axis=1)
+    xdt = x * dt.astype(u.dtype)[..., None]                              # (b,h,p)
+    ssm_state = ssm_state * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xdt, Bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", ssm_state, Ch) + x * p["D"].astype(u.dtype)[None, :, None]
+    y = y.reshape(b, 1, din)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], conv_x_state, conv_BC_state, ssm_state

@@ -1,0 +1,4 @@
+"""Optimizers, schedules, and distributed-gradient utilities."""
+from . import adamw, schedules
+from .adamw import AdamWConfig, apply_updates, global_norm, init
+from .schedules import constant, warmup_cosine, warmup_linear

@@ -1,0 +1,91 @@
+"""AdamW optimizer as a pure-JAX pytree transform (no optax dependency).
+
+Production details for pod scale:
+* configurable moment dtype (``state_dtype=bf16`` halves optimizer HBM for
+  >100B-param models; master math always runs in f32),
+* global-norm gradient clipping,
+* decoupled weight decay with parameter masking (no decay on norms/biases),
+* works on arbitrary pytrees; optimizer state inherits parameter sharding
+  (same tree structure -> same PartitionSpecs), which is what makes
+  ZeRO-style sharded optimizer state free under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init", "apply_updates", "global_norm"]
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: Optional[Any] = None   # None -> same as param dtype
+    # predicate(path, leaf) -> apply weight decay?  default: ndim >= 2
+    decay_mask: Optional[Callable] = None
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def init(params: Pytree, cfg: AdamWConfig) -> Pytree:
+    def make(p):
+        dt = cfg.state_dtype or p.dtype
+        return {"m": jnp.zeros(p.shape, dt), "v": jnp.zeros(p.shape, dt)}
+
+    return {"mu": jax.tree.map(make, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def _lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    if callable(cfg.lr):
+        return jnp.asarray(cfg.lr(step), jnp.float32)
+    return jnp.asarray(cfg.lr, jnp.float32)
+
+
+def apply_updates(params: Pytree, grads: Pytree, state: Pytree, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    lr = _lr_at(cfg, step)
+    c1 = 1.0 - cfg.b1**step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2**step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["mu"])
+
+    new_p, new_s = [], []
+    for p, g, s in zip(flat_p, flat_g, flat_s):
+        g32 = g.astype(jnp.float32)
+        m = s["m"].astype(jnp.float32) * cfg.b1 + g32 * (1.0 - cfg.b1)
+        v = s["v"].astype(jnp.float32) * cfg.b2 + jnp.square(g32) * (1.0 - cfg.b2)
+        upd = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        if cfg.decay_mask is not None:
+            decay = cfg.weight_decay if cfg.decay_mask(p) else 0.0
+        p32 = p.astype(jnp.float32) - lr * (upd + decay * p.astype(jnp.float32))
+        new_p.append(p32.astype(p.dtype))
+        sd = s["m"].dtype
+        new_s.append({"m": m.astype(sd), "v": v.astype(sd)})
+
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_p),
+        {"mu": jax.tree_util.tree_unflatten(treedef, new_s), "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

@@ -1,0 +1,31 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "warmup_linear", "constant"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_linear(lr: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(1, warmup)
+        frac = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        return lr * jnp.where(s < warmup, warm, 1.0 - (1.0 - floor) * frac)
+
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, floor_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(1, warmup)
+        frac = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor_frac + (1.0 - floor_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return lr * jnp.where(s < warmup, warm, cos)
+
+    return f

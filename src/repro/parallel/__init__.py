@@ -1,0 +1,2 @@
+"""Distribution layer: sharding rules, hints, pipeline, compression."""
+from . import compress, hints, pipeline, sharding

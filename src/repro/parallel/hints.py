@@ -1,0 +1,87 @@
+"""Context-scoped sharding hints.
+
+Model code stays mesh-agnostic: it calls ``constrain(x, logical_axes)`` and
+``active_mesh()``; when no mesh is activated (unit tests, single-device
+smoke runs) these are no-ops.  ``launch/*`` activates the production mesh
+around lowering/execution.
+
+Logical axis vocabulary: 'dp' (pod x data), 'data', 'model', None.
+Constraints silently drop axes the dimension size cannot divide.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["activate", "active_mesh", "constrain", "resolve", "dp_axes", "sp_scope", "sp_enabled"]
+
+_STATE = threading.local()
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+@contextlib.contextmanager
+def activate(mesh: Optional[Mesh]):
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def sp_scope(on: bool = True):
+    """Scopes the sequence-parallel residual pin to training (§Perf V1):
+    the win comes from sharding saved-for-backward stacks; forward-only
+    paths (prefill) only pay the gathers, so they leave it off."""
+    prev = getattr(_STATE, "sp", False)
+    _STATE.sp = on
+    try:
+        yield
+    finally:
+        _STATE.sp = prev
+
+
+def sp_enabled() -> bool:
+    return getattr(_STATE, "sp", False)
+
+
+def resolve(mesh: Mesh, logical):
+    if logical is None:
+        return None
+    if logical == "dp":
+        return dp_axes(mesh)
+    if logical == "dpm":  # every mesh axis: embarrassingly parallel row work
+        return tuple(mesh.axis_names)
+    return logical
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    names = ax if isinstance(ax, tuple) else (ax,)
+    return int(np.prod([mesh.shape[a] for a in names]))
+
+
+def constrain(x, logical_axes):
+    """with_sharding_constraint if a mesh is active; no-op otherwise."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, logical_axes):
+        r = resolve(mesh, ax)
+        spec.append(r if (r is None or dim % _axis_size(mesh, r) == 0) else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,271 @@
+"""Logical-axis sharding rules: param/cache pytrees -> PartitionSpecs.
+
+Strategy (MaxText-style, name-based):
+* TP over the 'model' mesh axis for head/ff/expert/vocab axes — applied only
+  when the tensor axis is *divisible-by-design* (heads % model == 0 etc.);
+  otherwise that tensor falls back to replication over 'model' and relies on
+  FSDP.  This is what makes one fixed (pod, data, model) production mesh
+  serve 10 heterogeneous architectures.
+* FSDP over 'data' (cfg.fsdp): params additionally sharded on their
+  d_model-like axis; pjit inserts the all-gather at use and the
+  reduce-scatter on the gradient — ZeRO-3 for free.  Multi-pod keeps FSDP
+  *within* a pod (axis 'data'), so gradient sync across pods is a pure
+  all-reduce (hierarchical: RS within pod, AR across, AG within).
+* Stacked-layer leading axes (from scan-over-layers) are never sharded.
+
+Cache rules (decode): batch -> ('pod','data') when divisible; kv-heads ->
+'model' when divisible, else the sequence axis -> 'model' (distributed-
+softmax attention), else replicate.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "param_specs", "param_shardings", "cache_shardings", "batch_shardings",
+    "tree_shardings",
+]
+
+Pytree = Any
+
+
+def _axsize(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def _leaf_spec(path_names, leaf, cfg: ModelConfig, mesh: Mesh,
+               serving: bool = False):
+    """Base spec for the trailing dims of one parameter; leading stack dims
+    are filled with None.  serving=True places SSM weights tensor-parallel
+    (servers have no backward stacks, so the Z1 replicated+seq-sharded
+    layout only costs them; see §Perf Z1/serving note)."""
+    name = path_names[-1]
+    parent = path_names[-2] if len(path_names) > 1 else ""
+    msize = _axsize(mesh, "model")
+    F = "data" if cfg.fsdp else None  # fsdp axis
+
+    H, K, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    heads_tp = _div(H, msize) and _div(K, msize)
+    # §Perf Z1 (CONFIRMED): sequence-sharded SSM activations with REPLICATED
+    # (FSDP-only) mamba weights beat both Megatron TP (baseline, 17.2 s of
+    # collectives) and Megatron-SP TP weights (Z2, REFUTED — see ssm.py).
+    # TP weight sharding is only used when seq-parallel mode is off.
+    import os
+
+    ssm_tp = bool(
+        (serving or not cfg.ssm_seq_parallel
+         or os.environ.get("REPRO_SSM_TP") == "1")
+        and cfg.ssm_heads
+        and _div(cfg.ssm_heads, msize)
+        and _div(cfg.d_inner, msize)
+    )
+    ff_tp = _div(cfg.d_ff, msize) if cfg.d_ff else False
+    Mh = "model" if heads_tp else None
+    Ms = "model" if ssm_tp else None
+    Ms_dt = Ms  # dt/A/D are per-head vectors; sharded iff heads are
+    Mf = "model" if ff_tp else None
+    # §Perf Z3 (REFUTED): folding 'model' into the FSDP axis for the
+    # model-replicated SSM weights (full-mesh ZeRO) regressed zamba2 train
+    # collectives 7.46 s -> 8.40 s — XLA turned the wider gathers into extra
+    # all-reduces rather than reduce-scatters.  Kept behind REPRO_SSM_ZERO_FULL.
+    import os as _os
+
+    ssm_zero_full = (
+        _os.environ.get("REPRO_SSM_ZERO_FULL") == "1"
+        and cfg.ssm_seq_parallel and not ssm_tp and cfg.fsdp
+    )
+    Fs = ("data", "model") if ssm_zero_full else F    # input-dim axis
+    Fs2 = ("data", "model") if ssm_zero_full else F   # output-dim axis (out_proj)
+
+    table = {
+        # embeddings / head
+        "tok_emb": ("model", F),
+        "lm_head": ("model", F),
+        "dec_pos": (None, None),
+        # attention
+        "wq": (F, Mh), "wk": (F, Mh), "wv": (F, Mh),
+        "bq": (Mh,), "bk": (Mh,), "bv": (Mh,),
+        "wo": (Mh, F),
+        # MLA
+        "wq_a": (F, None), "wq_b": (None, Mh),
+        "wkv_a": (F, None), "wkv_b": (None, Mh),
+        "q_ln": (None,), "kv_ln": (None,),
+        # dense MLP (parent 'mlp') vs expert MLP (parent 'moe', E leading)
+        "wg": ("model", F, None) if parent == "moe" else (F, Mf),
+        "wu": ("model", F, None) if parent == "moe" else (F, Mf),
+        "wd": ("model", None, F) if parent == "moe" else (Mf, F),
+        "w1": (F, Mf), "b1": (Mf,), "w2": (Mf, F), "b2": (None,),
+        "router": (None, None),
+        "shared_wg": (F, Mf or None), "shared_wu": (F, Mf or None),
+        "shared_wd": (Mf or None, F),
+        # mamba (B/C projections stay replicated: 2gn channels are tiny and
+        # every head shard needs the full B/C — see ssm._project).
+        # §Perf Z3: with seq-parallel SSM the weights are model-replicated,
+        # so ZeRO-3 them over the FULL mesh (('data','model') on d_model):
+        # grad sync becomes a reduce-scatter instead of an all-reduce over
+        # 'model', and optimizer shards shrink by model_size.
+        "in_z": (Fs, Ms), "in_x": (Fs, Ms), "in_BC": (Fs, None), "in_dt": (Fs, Ms_dt),
+        "conv_x_w": (None, Ms), "conv_x_b": (Ms,),
+        "conv_BC_w": (None, None), "conv_BC_b": (None,),
+        "A_log": (Ms_dt,), "D": (Ms_dt,), "dt_bias": (Ms_dt,),
+        "norm_w": (Ms,), "out_proj": (Ms, Fs2),
+        # norms / gates / mtp
+        "ln1": (None,), "ln2": (None,), "ln3": (None,),
+        "final_norm": (None,), "w": (None,), "b": (None,),
+        "gate_attn": (None,), "gate_mlp": (None,),
+        "mtp_proj": (F, None), "mtp_norm_h": (None,), "mtp_norm_e": (None,),
+    }
+    if name not in table:
+        raise KeyError(f"no sharding rule for param {'/'.join(path_names)}")
+    base = table[name]
+    # moe shared experts: ff width = n_shared * d_expert; check divisibility
+    if name.startswith("shared_w"):
+        fs = cfg.n_shared_experts * cfg.d_expert
+        if not _div(fs, msize):
+            base = tuple(None if a == "model" else a for a in base)
+    # expert tensors: expert-parallel only when E % model == 0
+    if parent == "moe" and name in ("wg", "wu", "wd") and not _div(cfg.n_experts, msize):
+        base = tuple(None if a == "model" else a for a in base)
+    n_lead = leaf.ndim - len(base)
+    assert n_lead >= 0, (path_names, leaf.shape, base)
+    # never shard an axis the shape can't divide (pjit requires divisibility;
+    # odd vocabs like 50280/51865 fall back to replicated embeddings)
+    final = []
+    for i, a in enumerate((None,) * n_lead + tuple(base)):
+        if a is None:
+            final.append(None)
+            continue
+        ax_names = a if isinstance(a, tuple) else (a,)
+        size = int(np.prod([_axsize(mesh, x) for x in ax_names]))
+        final.append(a if _div(leaf.shape[i], size) else None)
+    return P(*final)
+
+
+def _path_names(path):
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            out.append(k.name)
+    return out
+
+
+def param_specs(params: Pytree, cfg: ModelConfig, mesh: Mesh,
+                serving: bool = False) -> Pytree:
+    """PartitionSpec pytree matching `params` (works on ShapeDtypeStructs)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [
+        _leaf_spec(_path_names(path), leaf, cfg, mesh, serving=serving)
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params: Pytree, cfg: ModelConfig, mesh: Mesh,
+                    serving: bool = False) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_specs(params, cfg, mesh, serving=serving),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def opt_state_shardings(opt_state: Pytree, params: Pytree, cfg, mesh) -> Pytree:
+    """Optimizer moments inherit the parameter sharding; step is replicated."""
+    pspecs = param_specs(params, cfg, mesh)
+    mu = jax.tree.map(
+        lambda s: {"m": NamedSharding(mesh, s), "v": NamedSharding(mesh, s)},
+        pspecs, is_leaf=lambda x: isinstance(x, P),
+    )
+    return {"mu": mu, "step": NamedSharding(mesh, P())}
+
+
+# ---------------------------------------------------------------------------
+# Activations / batches / caches
+# ---------------------------------------------------------------------------
+
+
+def _dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def batch_shardings(batch: Pytree, mesh: Mesh) -> Pytree:
+    """tokens/frames/img: batch dim over (pod, data); scalars replicated."""
+    dp = _dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        if not _div(leaf.shape[0], dp_size):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp, *(None,) * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_shardings(cache: Pytree, cfg: ModelConfig, mesh: Mesh) -> Pytree:
+    """Decode caches: batch over (pod,data); then kv-heads over model when
+    divisible, else the sequence axis over model (distributed attention),
+    else replicated.  Cache layouts (see models/*.init_cache):
+      attention k/v     (..., B, S, K, Dh)
+      mla latent        (..., B, S, width)
+      ssm conv/state    (..., B, K-1, ch) / (..., B, h, p, n)
+    Identified positionally: the batch axis is the first axis of size B.
+    """
+    dp = _dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    msize = _axsize(mesh, "model")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+
+    out = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        name = names[-1]
+        spec = [None] * leaf.ndim
+        # find batch axis: caches are (stack..., B, ...) — locate by name
+        if name in ("k", "v", "attn_k", "attn_v", "self_k", "self_v",
+                    "cross_k", "cross_v", "img_k", "img_v"):
+            # (..., B, S, K, Dh)
+            bax, sax, kax = leaf.ndim - 4, leaf.ndim - 3, leaf.ndim - 2
+            if _div(leaf.shape[bax], dp_size):
+                spec[bax] = dp
+            if _div(leaf.shape[kax], msize):
+                spec[kax] = "model"
+            elif _div(leaf.shape[sax], msize):
+                spec[sax] = "model"
+        elif name.startswith("latent"):
+            bax, sax = leaf.ndim - 3, leaf.ndim - 2
+            if _div(leaf.shape[bax], dp_size):
+                spec[bax] = dp
+            if _div(leaf.shape[sax], msize):
+                spec[sax] = "model"
+        elif name.startswith("conv"):
+            bax, cax = leaf.ndim - 3, leaf.ndim - 1
+            if _div(leaf.shape[bax], dp_size):
+                spec[bax] = dp
+            if _div(leaf.shape[cax], msize):
+                spec[cax] = "model"
+        elif name.startswith("ssm"):
+            bax, hax = leaf.ndim - 4, leaf.ndim - 3
+            if _div(leaf.shape[bax], dp_size):
+                spec[bax] = dp
+            if _div(leaf.shape[hax], msize):
+                spec[hax] = "model"
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_shardings(tree: Pytree, mesh: Mesh, spec=P()) -> Pytree:
+    return jax.tree.map(lambda _: NamedSharding(mesh, spec), tree)

@@ -1,0 +1,25 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh) cell, all in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective = effective_wire_bytes_per_device / ICI_bw_per_chip
+
+cost_analysis() reports per-device (per-SPMD-program) numbers, so per-chip
+division is already done.  collective bytes are NOT in cost_analysis: we
+parse the post-optimization HLO text and sum result-shape bytes of every
+collective op, scaled by its ring-algorithm wire factor (all-reduce moves
+~2x its payload per device; all-gather/reduce-scatter/all-to-all ~1x).
+"""
+from .analysis import (
+    HW,
+    Hardware,
+    analyze_compiled,
+    collective_bytes,
+    roofline_terms,
+)
+
+__all__ = [
+    "HW", "Hardware", "analyze_compiled", "collective_bytes", "roofline_terms",
+]

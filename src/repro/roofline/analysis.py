@@ -1,0 +1,144 @@
+"""HLO parsing + roofline term computation (TPU v5e constants)."""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+__all__ = ["Hardware", "HW", "collective_bytes", "roofline_terms", "analyze_compiled"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # B/s per chip
+    ici_bw: float = 50e9            # B/s per link (effective, per chip)
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+# effective wire bytes per device / result bytes, ring algorithms
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-type {result_bytes, wire_bytes, count} from HLO text.
+
+    '-start' ops are counted; their '-done' twins are not (same tensor)."""
+    out: Dict[str, dict] = {}
+    seen_done = 0
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_s, op = m.group(1), m.group(2)
+        whole = m.group(0)
+        if "-done(" in whole:
+            seen_done += 1
+            continue
+        b = _shape_bytes(shape_s)
+        rec = out.setdefault(op, {"bytes": 0.0, "wire_bytes": 0.0, "count": 0})
+        rec["bytes"] += b
+        rec["wire_bytes"] += b * _WIRE_FACTOR[op]
+        rec["count"] += 1
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float, hw: Hardware = HW) -> Dict[str, float]:
+    compute = flops_per_dev / hw.peak_flops
+    memory = bytes_per_dev / hw.hbm_bw
+    collective = wire_bytes_per_dev / hw.ici_bw
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    terms["dominant"] = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1],
+    )[0]
+    terms["bound_s"] = max(compute, memory, collective)
+    return terms
+
+
+def analyze_compiled(compiled, n_chips: int, *, model_flops: float | None = None,
+                     hw: Hardware = HW) -> dict:
+    """Full per-cell roofline record from a compiled executable.
+
+    FLOP/byte/collective totals come from the scan-aware HLO parse
+    (hlo_cost.hlo_costs); xla's cost_analysis() is recorded alongside for
+    reference but counts while-loop bodies once (see module docstring)."""
+    from .hlo_cost import hlo_costs
+
+    ca = compiled.cost_analysis() or {}
+    hc = hlo_costs(compiled.as_text())
+    flops = float(hc["flops"])
+    byts = float(hc["bytes"])
+    colls = hc["collectives"]
+    wire = float(hc["wire_bytes"])
+    terms = roofline_terms(flops, byts, wire, hw)
+
+    ma = compiled.memory_analysis()
+    mem = {}
+    if ma is not None:
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_est": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        }
+
+    rec = {
+        "per_device": {"flops": flops, "bytes": byts, "wire_bytes": wire},
+        "collectives": colls,
+        "terms": terms,
+        "memory": mem,
+        "n_chips": n_chips,
+        "xla_cost_analysis_scan_once": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+        },
+    }
+    if model_flops is not None:
+        hlo_global = flops * n_chips
+        rec["model_flops"] = model_flops
+        rec["useful_ratio"] = model_flops / hlo_global if hlo_global else 0.0
+        rec["roofline_fraction"] = (
+            (model_flops / hw.peak_flops / n_chips) / terms["bound_s"]
+            if terms["bound_s"] > 0 else 0.0
+        )
+    return rec

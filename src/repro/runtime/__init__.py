@@ -1,0 +1,4 @@
+"""Fault-tolerant training runtime."""
+from .loop import TrainLoopConfig, train_loop
+
+__all__ = ["TrainLoopConfig", "train_loop"]

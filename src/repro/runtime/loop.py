@@ -1,0 +1,134 @@
+"""Fault-tolerant training loop.
+
+Production behaviors, all exercised by tests/test_runtime.py:
+
+* **checkpoint/restart**: resumes exactly from the latest checkpoint (data
+  batches are a pure function of step, so the resumed run is bit-identical
+  modulo optimizer nondeterminism — asserted in tests);
+* **preemption handling**: SIGTERM/SIGINT set a flag; the loop finishes the
+  current step, writes a final checkpoint, and exits cleanly;
+* **async checkpointing**: serialization overlaps subsequent steps;
+* **straggler detection**: per-step wall times are recorded; steps slower
+  than ``straggler_factor``x the running median are counted and logged —
+  on real pods this feeds the replace-slow-host policy;
+* **elastic restore**: shardings are recomputed for the *current* mesh at
+  restore (see checkpoint/), so a restart may change device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro import checkpoint, optim
+
+__all__ = ["TrainLoopConfig", "train_loop"]
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    straggler_factor: float = 1.5
+    handle_signals: bool = True
+    async_ckpt: bool = True
+
+
+def train_loop(
+    train_step: Callable,          # (params, opt_state, batch) -> (params, opt_state, metrics)
+    params: Any,
+    opt_state: Any,
+    batch_fn: Callable[[int], Any],
+    cfg: TrainLoopConfig,
+    *,
+    shardings: tuple | None = None,  # (param_shardings, opt_shardings) for elastic restore
+    log_fn: Callable[[str], None] = print,
+):
+    start_step = 0
+    ckpt = None
+    if cfg.ckpt_dir:
+        ckpt = checkpoint.AsyncCheckpointer(cfg.ckpt_dir)
+        last = checkpoint.latest_step(cfg.ckpt_dir)
+        if last is not None:
+            state_like = {"params": params, "opt": opt_state}
+            sh = (
+                {"params": shardings[0], "opt": shardings[1]}
+                if shardings is not None else None
+            )
+            start_step, tree = checkpoint.restore(
+                cfg.ckpt_dir, state_like, shardings=sh
+            )
+            params, opt_state = tree["params"], tree["opt"]
+            log_fn(f"[restore] resumed from step {start_step}")
+
+    preempted = {"flag": False}
+    old_handlers = {}
+    if cfg.handle_signals:
+        def _handler(signum, frame):
+            preempted["flag"] = True
+            log_fn(f"[preempt] signal {signum}: checkpoint at end of step")
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                old_handlers[sig] = signal.signal(sig, _handler)
+            except ValueError:  # non-main thread (tests)
+                pass
+
+    step_times: list[float] = []
+    stragglers = 0
+    history = []
+    step = start_step
+    try:
+        while step < cfg.steps:
+            t0 = time.perf_counter()
+            batch = batch_fn(step)
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            step_times.append(dt)
+            med = float(np.median(step_times[-50:]))
+            if len(step_times) > 5 and dt > cfg.straggler_factor * med:
+                stragglers += 1
+                log_fn(f"[straggler] step {step}: {dt:.3f}s vs median {med:.3f}s")
+            step += 1
+            if step % cfg.log_every == 0 or step == cfg.steps:
+                history.append(
+                    {"step": step, "loss": float(metrics["loss"]),
+                     "grad_norm": float(metrics.get("grad_norm", np.nan)),
+                     "sec_per_step": dt}
+                )
+                log_fn(f"[step {step}] loss={history[-1]['loss']:.4f} "
+                       f"gnorm={history[-1]['grad_norm']:.3f} {dt:.3f}s/step")
+            want_ckpt = ckpt and (
+                step % cfg.ckpt_every == 0 or step == cfg.steps or preempted["flag"]
+            )
+            if want_ckpt:
+                state = {"params": params, "opt": opt_state}
+                if cfg.async_ckpt and not preempted["flag"] and step != cfg.steps:
+                    ckpt.save(step, state)
+                else:
+                    ckpt.wait()
+                    checkpoint.save(cfg.ckpt_dir, step, state)
+            if preempted["flag"]:
+                log_fn(f"[preempt] exiting cleanly at step {step}")
+                break
+    finally:
+        if ckpt:
+            ckpt.wait()
+        for sig, h in old_handlers.items():
+            signal.signal(sig, h)
+
+    return params, opt_state, {
+        "history": history,
+        "final_step": step,
+        "stragglers": stragglers,
+        "preempted": preempted["flag"],
+        "median_step_s": float(np.median(step_times)) if step_times else None,
+    }

@@ -1,0 +1,90 @@
+"""Config faithfulness: analytic parameter counts of the FULL assigned
+configs must land near the published model sizes, and every (arch, shape)
+cell must produce valid input specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.shapes import SHAPES, input_specs, supports
+
+# published totals (approximate, from the model cards / papers)
+PUBLISHED_PARAMS = {
+    "mamba2-130m": (0.13e9, 0.35),
+    "deepseek-v3-671b": (671e9, 0.10),
+    "olmoe-1b-7b": (6.9e9, 0.15),
+    "qwen2-1.5b": (1.54e9, 0.15),
+    "smollm-360m": (0.36e9, 0.15),
+    "starcoder2-3b": (3.0e9, 0.15),
+    "qwen2.5-3b": (3.1e9, 0.15),
+    "whisper-small": (0.244e9, 0.25),
+    "zamba2-7b": (7.4e9, 0.20),
+    "llama-3.2-vision-11b": (9.8e9, 0.25),  # text side + cross layers (tower is stub)
+}
+
+ACTIVE_PARAMS = {
+    "deepseek-v3-671b": (37e9, 0.30),   # published: 37B activated
+    "olmoe-1b-7b": (1.3e9, 0.40),       # published: 1B active
+}
+
+
+class TestPublishedSizes:
+    @pytest.mark.parametrize("arch_id", sorted(PUBLISHED_PARAMS))
+    def test_total_params_near_published(self, arch_id):
+        target, tol = PUBLISHED_PARAMS[arch_id]
+        got = ARCHS[arch_id].CONFIG.param_count()
+        assert abs(got - target) / target < tol, (
+            f"{arch_id}: {got/1e9:.2f}B vs published {target/1e9:.2f}B"
+        )
+
+    @pytest.mark.parametrize("arch_id", sorted(ACTIVE_PARAMS))
+    def test_active_params_near_published(self, arch_id):
+        target, tol = ACTIVE_PARAMS[arch_id]
+        got = ARCHS[arch_id].CONFIG.active_param_count()
+        assert abs(got - target) / target < tol, (
+            f"{arch_id}: active {got/1e9:.2f}B vs published {target/1e9:.2f}B"
+        )
+
+    def test_param_count_matches_abstract_init(self):
+        """Analytic formula == eval_shape of the real init (full configs,
+        no allocation)."""
+        import numpy as np
+        from repro.models import get_model
+
+        for arch_id in ("qwen2-1.5b", "olmoe-1b-7b", "mamba2-130m"):
+            cfg = ARCHS[arch_id].CONFIG
+            model = get_model(cfg)
+            shapes = jax.eval_shape(lambda m=model: m.init_params(jax.random.key(0)))
+            actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+            assert abs(actual - cfg.param_count()) / actual < 0.02, arch_id
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch_id", sorted(ARCHS))
+    @pytest.mark.parametrize("shape_name", sorted(SHAPES))
+    def test_specs_well_formed(self, arch_id, shape_name):
+        cfg = ARCHS[arch_id].CONFIG
+        if not supports(cfg, shape_name):
+            pytest.skip("long_500k x full attention")
+        spec = SHAPES[shape_name]
+        out = input_specs(cfg, shape_name)
+        if spec.kind in ("train", "prefill"):
+            assert out["tokens"].shape == (spec.batch, spec.seq)
+            assert out["tokens"].dtype == jnp.int32
+            if cfg.family == "audio":
+                assert out["frames"].shape[:2] == (spec.batch, cfg.enc_len)
+            if cfg.family == "vlm":
+                assert out["img"].shape[:2] == (spec.batch, cfg.n_img_tokens)
+        else:
+            batch, cache = out
+            assert batch["token"].shape == (spec.batch, 1)
+            leaves = jax.tree.leaves(cache)
+            assert leaves, "decode cache must not be empty"
+            import math
+            total = sum(math.prod(l.shape) * l.dtype.itemsize for l in leaves)
+            assert total > 0
+
+    def test_skip_matrix_matches_design(self):
+        """Exactly the SSM/hybrid archs run long_500k."""
+        runners = {a for a in ARCHS if supports(ARCHS[a].CONFIG, "long_500k")}
+        assert runners == {"mamba2-130m", "zamba2-7b"}

@@ -1,0 +1,169 @@
+"""Layer-level tests: chunked (flash) attention oracle equivalence, RoPE,
+SSD chunking invariance, MoE dispatch invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers, ssm
+
+
+def _qkv(B, Sq, Skv, H, K, D, Dv=None, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, Skv, K, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, Skv, K, Dv or D)).astype(np.float32))
+    return q, k, v
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize(
+        "causal,window,Skv",
+        [(True, 0, 4096), (True, 1024, 4096), (False, 0, 4096),
+         (True, 0, 3000), (False, 0, 1500)],  # ragged kv exercises padding
+    )
+    def test_flash_matches_simple(self, causal, window, Skv):
+        B, Sq, H, K, D = 2, 2048, 4, 2, 32
+        q, k, v = _qkv(B, Sq, Skv, H, K, D)
+        qg = q.reshape(B, Sq, K, H // K, D)
+        out_f = layers._attention_flash(
+            qg, k, v, causal=causal, window=window, kv_valid_len=None, softcap=0.0,
+            q_chunk=512, kv_chunk=1024,
+        )
+        out_s = layers._attention_simple(
+            qg, k, v, causal=causal, window=window, q_offset=0,
+            kv_valid_len=None, softcap=0.0,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_f, np.float32), np.asarray(out_s, np.float32),
+            rtol=2e-4, atol=2e-5,
+        )
+
+    def test_flash_with_valid_len_and_softcap(self):
+        B, Sq, H, K, D = 1, 2048, 2, 2, 16
+        q, k, v = _qkv(B, Sq, 2048, H, K, D, seed=3)
+        qg = q.reshape(B, Sq, K, 1, D)
+        out_f = layers._attention_flash(
+            qg, k, v, causal=True, window=0, kv_valid_len=1500, softcap=30.0,
+        )
+        out_s = layers._attention_simple(
+            qg, k, v, causal=True, window=0, q_offset=0,
+            kv_valid_len=1500, softcap=30.0,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_f, np.float32), np.asarray(out_s, np.float32),
+            rtol=2e-4, atol=2e-5,
+        )
+
+    def test_mixed_value_dim(self):
+        B, Sq, H, K, D, Dv = 2, 2048, 4, 4, 24, 16
+        q, k, v = _qkv(B, Sq, 2048, H, K, D, Dv=Dv, seed=5)
+        out = layers.gqa_attention(q, k, v, causal=True)
+        assert out.shape == (B, Sq, H, Dv)
+        out_small = layers.gqa_attention(q[:, :256], k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out[:, :256]), np.asarray(out_small), rtol=2e-4, atol=2e-5
+        )
+
+
+class TestRope:
+    def test_rope_relative_property(self):
+        """<rope(q,i), rope(k,j)> depends only on i - j."""
+        D = 32
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.standard_normal((1, 1, 1, D)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((1, 1, 1, D)).astype(np.float32))
+
+        def dot_at(i, j):
+            qi = layers.rope(q, jnp.array([i]), 10000.0)
+            kj = layers.rope(k, jnp.array([j]), 10000.0)
+            return float(jnp.sum(qi * kj))
+
+        assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+        assert abs(dot_at(0, 0) - float(jnp.sum(q * k))) < 1e-4
+
+    def test_rope_norm_preserved(self):
+        D = 64
+        x = jnp.ones((1, 4, 2, D), jnp.float32)
+        y = layers.rope(x, jnp.arange(4), 10000.0)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(y), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5,
+        )
+
+
+class TestSSD:
+    @given(chunk=st.sampled_from([8, 16, 32, 64]), seed=st.integers(0, 20))
+    @settings(max_examples=10, deadline=None)
+    def test_chunk_size_invariance(self, chunk, seed):
+        """SSD output must not depend on the chunk decomposition."""
+        b, l, h, p, g, n = 2, 64, 4, 8, 1, 16
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((b, l, h, p)).astype(np.float32))
+        dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, l, h)).astype(np.float32))
+        A = -jnp.asarray(rng.uniform(0.1, 2.0, (h,)).astype(np.float32))
+        B = jnp.asarray(rng.standard_normal((b, l, g, n)).astype(np.float32))
+        C = jnp.asarray(rng.standard_normal((b, l, g, n)).astype(np.float32))
+        y1, s1 = ssm.ssd_chunked(x, dt, A, B, C, chunk)
+        y2, s2 = ssm.ssd_chunked(x, dt, A, B, C, l)  # single chunk = reference
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-3, atol=2e-4)
+
+    def test_ssd_matches_naive_recurrence(self):
+        """Chunked SSD == direct per-step state recurrence."""
+        b, l, h, p, g, n = 1, 32, 2, 4, 1, 8
+        rng = np.random.default_rng(7)
+        x = rng.standard_normal((b, l, h, p)).astype(np.float32)
+        dt = rng.uniform(0.01, 0.2, (b, l, h)).astype(np.float32)
+        A = -rng.uniform(0.1, 1.0, (h,)).astype(np.float32)
+        B = rng.standard_normal((b, l, g, n)).astype(np.float32)
+        C = rng.standard_normal((b, l, g, n)).astype(np.float32)
+
+        y_ref = np.zeros((b, l, h, p), np.float32)
+        state = np.zeros((b, h, p, n), np.float32)
+        for t in range(l):
+            dA = np.exp(dt[:, t] * A[None, :])                      # (b,h)
+            Bh = np.repeat(B[:, t], h // g, axis=1)                 # (b,h,n)
+            Ch = np.repeat(C[:, t], h // g, axis=1)
+            state = state * dA[..., None, None] + np.einsum(
+                "bhp,bhn->bhpn", x[:, t] * dt[:, t][..., None], Bh
+            )
+            y_ref[:, t] = np.einsum("bhpn,bhn->bhp", state, Ch)
+
+        y, s_fin = ssm.ssd_chunked(
+            jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A),
+            jnp.asarray(B), jnp.asarray(C), 8,
+        )
+        np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(s_fin), state, rtol=2e-3, atol=2e-4)
+
+
+class TestMoEDispatch:
+    @given(T=st.sampled_from([32, 64, 96]), seed=st.integers(0, 30))
+    @settings(max_examples=10, deadline=None)
+    def test_combine_preserves_gate_weighted_sum(self, T, seed):
+        """With identity experts (wg=wu=0 trick unavailable) — instead check:
+        no token appears twice in one expert's slots, and gates of kept
+        assignments sum to <= 1 per token."""
+        from repro.models import moe as M
+        import dataclasses
+        from repro.configs import ARCHS
+
+        cfg = dataclasses.replace(ARCHS["olmoe-1b-7b"].SMOKE, capacity_factor=1.0)
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((T, cfg.d_model)).astype(np.float32))
+        p = M.moe_init(jax.random.key(seed), cfg, jnp.float32)
+        topv, topi, aux = M._route(p, x, cfg)
+        C = M.capacity(T, cfg)
+        tok, w = M._dispatch_tables(topi, topv, T, cfg.top_k, C, 0, cfg.n_experts, x.dtype)
+        tok = np.asarray(tok).reshape(cfg.n_experts, C)
+        for e in range(cfg.n_experts):
+            kept = tok[e][tok[e] < T]
+            assert len(set(kept.tolist())) == len(kept)  # no dup token per expert
+        w = np.asarray(w)
+        assert float(aux) > 0
+        # per-token kept gate mass <= 1 + eps
+        sums = np.zeros(T + 1)
+        np.add.at(sums, np.asarray(tok).reshape(-1), w)
+        assert sums[:T].max() <= 1.0 + 1e-4

@@ -1,0 +1,142 @@
+"""Property tests for the Mercer eigensystem of the SE kernel.
+
+These pin down the math of paper Eqs. 13-20, including the delta^2 typo fix
+(only delta^2 = rho^2/2 (beta^2-1) reconstructs the kernel).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mercer
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _params(eps, rho, noise=1e-2, p=1):
+    return mercer.SEKernelParams.create(jnp.full((p,), eps), jnp.full((p,), rho), noise)
+
+
+class TestReconstruction:
+    def test_mercer_reconstruction_1d(self):
+        """sum_i lambda_i phi_i(x) phi_i(x') -> k_SE(x, x')  (Eq. 6)."""
+        eps, rho, n = 0.7, 2.0, 60
+        x = jnp.linspace(-1.0, 1.0, 23)
+        phi = mercer.eigenfunctions_1d(x, n, jnp.float32(eps), jnp.float32(rho))
+        lam = mercer.eigenvalues_1d(n, jnp.float32(eps), jnp.float32(rho))
+        K_approx = (phi * lam[None, :]) @ phi.T
+        K_exact = np.exp(-(eps**2) * (np.asarray(x)[:, None] - np.asarray(x)[None, :]) ** 2)
+        np.testing.assert_allclose(np.asarray(K_approx), K_exact, atol=2e-4)
+
+    def test_mercer_reconstruction_ard_2d(self):
+        """Tensor-product expansion reconstructs the ARD kernel (Eqs. 17-20)."""
+        p, n = 2, 24
+        params = mercer.SEKernelParams.create(jnp.array([0.6, 0.9]), jnp.array([2.0, 2.5]))
+        rng = np.random.default_rng(0)
+        X = jnp.asarray(rng.uniform(-1, 1, size=(40, p)).astype(np.float32))
+        idx = jnp.asarray(mercer.full_grid(n, p))
+        Phi = mercer.phi_nd(X, idx, params, n)
+        lam = mercer.eigenvalues_nd(idx, params)
+        K_approx = (Phi * lam[None, :]) @ Phi.T
+        K_exact = mercer.k_se_ard(X, X, params.eps)
+        np.testing.assert_allclose(np.asarray(K_approx), np.asarray(K_exact), atol=5e-4)
+
+    def test_paper_delta2_variant_fails_reconstruction(self):
+        """The paper's printed delta^2 = rho/2 (beta^2-1) does NOT reconstruct
+        the kernel (except when rho == 1 where both coincide) — evidence the
+        printed formula is a typo for the F&M rho^2/2 form we implement."""
+        eps, rho, n = 0.7, 2.0, 60
+        x = np.linspace(-1.0, 1.0, 23).astype(np.float32)
+        beta = (1 + (2 * eps / rho) ** 2) ** 0.25
+        delta2_paper = 0.5 * rho * (beta**2 - 1)  # paper's printed variant
+        # reconstruct with the variant eigensystem
+        z = rho * beta * x
+        psis = [np.full_like(x, np.sqrt(beta))]
+        psis.append(z * np.sqrt(2.0) * psis[0])
+        for i in range(2, n):
+            psis.append(z * np.sqrt(2.0 / i) * psis[-1] - np.sqrt((i - 1) / i) * psis[-2])
+        phi = np.stack(psis, -1) * np.exp(-delta2_paper * x * x)[:, None]
+        denom = rho**2 + delta2_paper + eps**2
+        lam = np.sqrt(rho**2 / denom) * (eps**2 / denom) ** np.arange(n)
+        K_approx = (phi * lam[None, :]) @ phi.T
+        K_exact = np.exp(-(eps**2) * (x[:, None] - x[None, :]) ** 2)
+        assert np.abs(K_approx - K_exact).max() > 1e-2  # clearly wrong
+
+    def test_orthonormality_under_gaussian_measure(self):
+        """F&M: phi_i orthonormal w.r.t. w(x) = rho/sqrt(pi) exp(-rho^2 x^2).
+        Checked with Gauss-Hermite quadrature; also exercises recurrence
+        stability at degrees far past classical-Hermite f32 overflow."""
+        eps, rho, n = 0.8, 1.5, 40
+        nodes, weights = np.polynomial.hermite.hermgauss(160)
+        x = jnp.asarray((nodes / rho).astype(np.float32))
+        phi = np.asarray(mercer.eigenfunctions_1d(x, n, jnp.float32(eps), jnp.float32(rho)))
+        # int phi_i phi_j w dx = sum_k w_k/sqrt(pi) phi_i(x_k) phi_j(x_k)
+        G = np.einsum("k,ki,kj->ij", weights / np.sqrt(np.pi), phi, phi)
+        np.testing.assert_allclose(G, np.eye(n), atol=5e-3)
+
+    def test_high_degree_no_overflow(self):
+        phi = mercer.eigenfunctions_1d(
+            jnp.linspace(-3, 3, 11), 200, jnp.float32(0.5), jnp.float32(1.0)
+        )
+        assert np.all(np.isfinite(np.asarray(phi)))
+
+
+class TestEigenvalues:
+    def test_positive_decreasing(self):
+        """lambda_i > 0 and strictly decreasing — asserted in log space, since
+        f32 lambda underflows to 0 near i~40 (expected; consumers use logs)."""
+        loglam = np.asarray(
+            mercer.log_eigenvalues_1d(64, jnp.float32(0.7), jnp.float32(2.0))
+        )
+        assert np.all(np.isfinite(loglam))
+        assert np.all(np.diff(loglam) < 0)
+        lam = np.asarray(mercer.eigenvalues_1d(12, jnp.float32(0.7), jnp.float32(2.0)))
+        assert np.all(lam > 0)
+
+    def test_nd_product_structure(self):
+        params = mercer.SEKernelParams.create(jnp.array([0.6, 0.9]), jnp.array([2.0, 2.5]))
+        idx = jnp.asarray(mercer.full_grid(5, 2))
+        lam_nd = np.asarray(mercer.eigenvalues_nd(idx, params))
+        l0 = np.asarray(mercer.eigenvalues_1d(5, params.eps[0], params.rho[0]))
+        l1 = np.asarray(mercer.eigenvalues_1d(5, params.eps[1], params.rho[1]))
+        expect = (l0[:, None] * l1[None, :]).reshape(-1)
+        np.testing.assert_allclose(lam_nd, expect, rtol=1e-5)
+
+
+class TestIndexSets:
+    @given(n=st.integers(1, 6), p=st.integers(1, 4))
+    @settings(max_examples=25, deadline=None)
+    def test_full_grid_count(self, n, p):
+        idx = mercer.full_grid(n, p)
+        assert idx.shape == (n**p, p)
+        assert idx.min() >= 0 and idx.max() <= n - 1
+        assert len(np.unique(idx, axis=0)) == n**p
+
+    @given(n=st.integers(2, 6), p=st.integers(1, 4))
+    @settings(max_examples=25, deadline=None)
+    def test_truncations_are_subsets_of_full(self, n, p):
+        full = {tuple(r) for r in mercer.full_grid(n, p)}
+        for kind in ("total_degree", "hyperbolic_cross"):
+            sub = mercer.make_index_set(kind, n, p, None)
+            rows = {tuple(r) for r in sub}
+            assert rows <= full
+            assert (0,) * p in rows  # constant term always kept
+
+    def test_hyperbolic_much_smaller_than_full(self):
+        n, p = 11, 4
+        assert mercer.full_grid(n, p).shape[0] == 14641
+        hc = mercer.hyperbolic_cross(n, p, degree=11)
+        assert hc.shape[0] < 200  # near-linear vs 14641
+
+    @given(n=st.integers(2, 8), p=st.integers(1, 3), d=st.integers(0, 8))
+    @settings(max_examples=25, deadline=None)
+    def test_total_degree_invariant(self, n, p, d):
+        idx = mercer.total_degree(n, p, d)
+        assert np.all(idx.sum(axis=1) <= d)
+
+    @given(n=st.integers(2, 8), p=st.integers(1, 3), d=st.integers(1, 12))
+    @settings(max_examples=25, deadline=None)
+    def test_hyperbolic_invariant(self, n, p, d):
+        idx = mercer.hyperbolic_cross(n, p, d)
+        assert np.all(np.prod(idx + 1, axis=1) <= d)

@@ -1,0 +1,85 @@
+"""Tests for the scan-aware HLO cost model and collective parser."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline import analysis
+from repro.roofline.hlo_cost import hlo_costs
+
+
+class TestHloCost:
+    def test_plain_matmul_flops_exact(self):
+        A = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+        B = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+        c = jax.jit(lambda a, b: a @ b).lower(A, B).compile()
+        costs = hlo_costs(c.as_text())
+        assert costs["flops"] == pytest.approx(2 * 256 * 512 * 128, rel=1e-6)
+
+    def test_scan_flops_scaled_by_trip_count(self):
+        """THE reason this parser exists: cost_analysis counts loop bodies
+        once; the parser must multiply by the trip count."""
+        L = 10
+        w = jax.ShapeDtypeStruct((L, 128, 128), jnp.float32)
+        x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+
+        def f(w, x):
+            def body(c, wi):
+                return c @ wi, None
+            y, _ = jax.lax.scan(body, x, w)
+            return y
+
+        c = jax.jit(f).lower(w, x).compile()
+        costs = hlo_costs(c.as_text())
+        expect = L * 2 * 64 * 128 * 128
+        xla_once = c.cost_analysis()["flops"]
+        assert costs["flops"] == pytest.approx(expect, rel=0.05)
+        assert xla_once == pytest.approx(expect / L, rel=0.05)  # the undercount
+
+    def test_nested_scan_multiplies(self):
+        w = jax.ShapeDtypeStruct((3, 4, 64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+
+        def f(w, x):
+            def outer(c, wo):
+                def inner(ci, wi):
+                    return ci @ wi, None
+                c, _ = jax.lax.scan(inner, c, wo)
+                return c, None
+            y, _ = jax.lax.scan(outer, x, w)
+            return y
+
+        c = jax.jit(f).lower(w, x).compile()
+        costs = hlo_costs(c.as_text())
+        expect = 3 * 4 * 2 * 8 * 64 * 64
+        assert costs["flops"] == pytest.approx(expect, rel=0.05)
+
+    def test_triangular_solve_counted(self):
+        A = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        B = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+        c = jax.jit(
+            lambda a, b: jax.scipy.linalg.solve_triangular(a, b, lower=True)
+        ).lower(A, B).compile()
+        costs = hlo_costs(c.as_text())
+        assert costs["flops"] >= 64 * 64 * 32  # ~M^2 N
+
+
+class TestRooflineTerms:
+    def test_dominant_selection(self):
+        t = analysis.roofline_terms(197e12, 819e9, 0.0)  # 1s compute, 1s memory
+        assert t["dominant"] in ("compute", "memory")
+        t = analysis.roofline_terms(0.0, 0.0, 50e9)
+        assert t["dominant"] == "collective" and t["bound_s"] == pytest.approx(1.0)
+
+    def test_collective_parse_with_tuple_result(self):
+        txt = """
+ENTRY %main (p: f32[8,128]) -> f32[8,128] {
+  %ag = f32[16,128]{1,0} all-gather(%p), replica_groups={}
+  %ar = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-reduce(%p, %p), to_apply=%add
+  ROOT %r = f32[8,128]{1,0} get-tuple-element(%ar), index=0
+}
+"""
+        c = analysis.collective_bytes(txt)
+        assert c["all-gather"]["bytes"] == 16 * 128 * 4
+        assert c["all-reduce"]["bytes"] == 2 * 8 * 128 * 4
+        assert c["all-reduce"]["wire_bytes"] == 2 * c["all-reduce"]["bytes"]
