@@ -18,6 +18,7 @@ def main() -> None:
         index_set_ablation,
         kernel_micro,
         roofline_table,
+        streaming_fit,
     )
 
     modules = [
@@ -25,6 +26,7 @@ def main() -> None:
         ("fagp_vs_exact", fagp_vs_exact),            # Joukov-Kulic baseline claim
         ("index_set_ablation", index_set_ablation),  # beyond-paper truncations
         ("kernel_micro", kernel_micro),              # Pallas kernels
+        ("streaming_fit", streaming_fit),            # fused 1-pass fit; fit_update
         ("roofline_table", roofline_table),          # dry-run summary
     ]
     failed = 0

@@ -1,0 +1,73 @@
+"""Streaming fused fit vs materialized fit, and fit_update vs refit.
+
+On this CPU container the Pallas kernels run in interpret mode, so wall
+times measure the correctness path, not TPU performance (same caveat as
+kernel_micro).  The architecturally meaningful columns are the derived
+ones: ``phi_hbm_mb`` is the N x M intermediate the materialized path parks
+in HBM and the streaming path never allocates, and ``flops_ratio`` is the
+O(k M^2) update vs O(N M^2) refit work ratio.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import fagp, mercer
+from repro.data import make_gp_dataset
+from repro.kernels import ops, ref
+
+from .common import emit, time_fn
+
+
+def run(full: bool = False):
+    N, p, n_max = (8192, 3, 8) if full else (2048, 2, 6)
+    X, y, Xs, ys = make_gp_dataset(N, p, seed=0)
+    params = mercer.SEKernelParams.create(
+        jnp.full((p,), 0.8), jnp.full((p,), 2.0), 0.05
+    )
+    idx_np = mercer.full_grid(n_max, p)
+    idx = jnp.asarray(idx_np)
+    M = idx_np.shape[0]
+    consts = ref.phi_consts(params.eps, params.rho)
+    S = jnp.asarray(ref.one_hot_selection(idx_np, n_max))
+    loglam = mercer.log_eigenvalues_nd(idx, params)
+    sqrtlam = jnp.exp(0.5 * loglam)
+    sig2 = params.noise**2
+    phi_mb = N * M * 4 / 2**20
+    tag = f"N={N};M={M};phi_hbm_mb={phi_mb:.1f}"
+
+    # --- streaming vs materialized fit statistics -------------------------
+    t = time_fn(
+        lambda: ops.fused_fit_moments(X, y, consts, S, sqrtlam, sig2, n_max=n_max)
+    )
+    emit("streaming_fit/fused-1pass", t, tag)
+
+    def materialized():
+        Phi = ops.hermite_phi(X, consts, S, n_max=n_max)  # N x M -> HBM
+        return ops.scaled_gram(Phi, sqrtlam, sig2), Phi.T @ y
+
+    t = time_fn(materialized)
+    emit("streaming_fit/materialized-2pass", t, tag)
+
+    cfg_j = fagp.FAGPConfig(n=n_max, store_train=False, backend="jnp")
+    t = time_fn(lambda: fagp.fit(X, y, params, cfg_j).u)
+    emit("streaming_fit/jnp-scan-fit", t, tag)
+
+    # --- fit_update vs refit ---------------------------------------------
+    k = 256 if full else 64
+    Xn, yn, *_ = make_gp_dataset(k, p, seed=7)
+    state = fagp.fit(X, y, params, cfg_j)
+    t_up = time_fn(lambda: fagp.fit_update(state, Xn, yn, cfg_j).u)
+    flops_ratio = (k * M * M) / (N * M * M)
+    emit("streaming_fit/fit_update-rank-k", t_up,
+         f"k={k};flops_ratio={flops_ratio:.3f}")
+    Xc = jnp.concatenate([X, Xn])
+    yc = jnp.concatenate([y, yn])
+    t_re = time_fn(lambda: fagp.fit(Xc, yc, params, cfg_j).u)
+    emit("streaming_fit/refit-full", t_re, f"k={k};speedup={t_re/t_up:.1f}x")
+
+
+if __name__ == "__main__":
+    run(full="--full" in sys.argv)

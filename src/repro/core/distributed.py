@@ -29,7 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.parallel import hints
 from . import mercer
-from .fagp import FAGPConfig
+from .fagp import FAGPConfig, get_backend
 from .mercer import SEKernelParams, log_eigenvalues_nd, phi_nd
 
 __all__ = ["fit_distributed", "predict_distributed", "lower_fit", "lower_predict"]
@@ -100,8 +100,27 @@ def _pick_nblk(N: int, M: int, dp: int = 1) -> tuple[int, int]:
 
 
 def fit_distributed(X, y, params: SEKernelParams, cfg: FAGPConfig, mesh):
+    """Distributed fit; ``cfg.backend`` selects the per-shard engine via the
+    core.fagp registry: 'jnp' runs the v1 pjit schedule, anything else runs
+    the v2 shard_map schedule with that backend's streaming moments kernel
+    per shard (e.g. 'pallas' = fused phi+gram, Phi never materialized)."""
     N, p = X.shape
-    idx = jnp.asarray(cfg.indices(p))
+    idx_np = cfg.indices(p)
+    idx = jnp.asarray(idx_np)
+    if cfg.backend != "jnp":
+        n_chips = _n_chips(mesh)
+        N_pad = (N + n_chips - 1) // n_chips * n_chips
+        if N_pad != N:
+            X = jnp.pad(X, ((0, N_pad - N), (0, 0)))
+            y = jnp.pad(y, (0, N_pad - N))
+        aux = get_backend(cfg.backend).prepare(idx_np, cfg.n)
+        with jax.set_mesh(mesh), hints.activate(mesh):
+            f = jax.jit(partial(
+                _fit_fn_v2, n_max=cfg.n, nblk=16, mesh=mesh,
+                n_valid=N if N_pad != N else None,
+                backend=cfg.backend, aux=aux,
+            ))
+            return f(X, y, params, idx)
     nblk, N_pad = _pick_nblk(N, idx.shape[0], _dp_size(mesh))
     if N_pad != N:
         X = jnp.pad(X, ((0, N_pad - N), (0, 0)))
@@ -153,7 +172,8 @@ def predict_distributed(Xs, state_tuple, params, cfg: FAGPConfig, mesh):
 
 
 def _fit_fn_v2(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
-               mesh, n_valid: int | None = None):
+               mesh, n_valid: int | None = None, backend: str = "jnp",
+               aux=None):
     N = X.shape[0]
     M = idx.shape[0]
     sig2 = params.noise**2
@@ -171,22 +191,32 @@ def _fit_fn_v2(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
         row0 = lo * N_l
         p_loc = SEKernelParams(eps=eps, rho=rho, noise=jnp.asarray(0.0))
 
-        def step(carry, inp):
-            G, b = carry
-            i, Xi, yi = inp
-            Phi_i = phi_nd(Xi, idx, p_loc, n_max)
+        if backend != "jnp":
+            # registry path: the whole shard's moments in ONE streaming
+            # fused-kernel call (Phi tiles generated in VMEM, never in HBM)
+            mask = None
             if n_valid is not None and n_valid < N:
-                mask = ((row0 + i * block + jnp.arange(block)) < n_valid)
-                Phi_i = Phi_i * mask.astype(Phi_i.dtype)[:, None]
-                yi = yi * mask.astype(yi.dtype)
-            return (G + Phi_i.T @ Phi_i, b + Phi_i.T @ yi), None
+                mask = ((row0 + jnp.arange(N_l)) < n_valid).astype(Xl.dtype)
+            G_l, b_l = get_backend(backend).moments(
+                Xl, yl, p_loc, idx, aux, n_max, block, mask
+            )
+        else:
+            def step(carry, inp):
+                G, b = carry
+                i, Xi, yi = inp
+                Phi_i = phi_nd(Xi, idx, p_loc, n_max)
+                if n_valid is not None and n_valid < N:
+                    mask = ((row0 + i * block + jnp.arange(block)) < n_valid)
+                    Phi_i = Phi_i * mask.astype(Phi_i.dtype)[:, None]
+                    yi = yi * mask.astype(yi.dtype)
+                return (G + Phi_i.T @ Phi_i, b + Phi_i.T @ yi), None
 
-        nb = N_l // block
-        (G_l, b_l), _ = jax.lax.scan(
-            step,
-            (jnp.zeros((M, M), Xl.dtype), jnp.zeros((M,), Xl.dtype)),
-            (jnp.arange(nb), Xl.reshape(nb, block, -1), yl.reshape(nb, block)),
-        )
+            nb = N_l // block
+            (G_l, b_l), _ = jax.lax.scan(
+                step,
+                (jnp.zeros((M, M), Xl.dtype), jnp.zeros((M,), Xl.dtype)),
+                (jnp.arange(nb), Xl.reshape(nb, block, -1), yl.reshape(nb, block)),
+            )
         G = jax.lax.psum(G_l, axes)        # THE one collective (M x M)
         b = jax.lax.psum(b_l, axes)
         return G, b
@@ -253,9 +283,13 @@ def lower_fit(wl, mesh, *, schedule: str = "v2"):
         N_pad = (wl.N + quantum - 1) // quantum * quantum
         X = jax.ShapeDtypeStruct((N_pad, wl.p), jnp.float32)
         y = jax.ShapeDtypeStruct((N_pad,), jnp.float32)
+        backend = wl.cfg.backend
+        aux = (get_backend(backend).prepare(idx_np, wl.cfg.n)
+               if backend != "jnp" else None)
         return jax.jit(
             partial(_fit_fn_v2, n_max=wl.cfg.n, nblk=16, mesh=mesh,
-                    n_valid=wl.N if N_pad != wl.N else None),
+                    n_valid=wl.N if N_pad != wl.N else None,
+                    backend=backend, aux=aux),
         ).lower(X, y, _abstract_params(wl.p), idx)
     nblk, N_pad = _pick_nblk(wl.N, idx_np.shape[0], _dp_size(mesh))
     X = jax.ShapeDtypeStruct((N_pad, wl.p), jnp.float32)

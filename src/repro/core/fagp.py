@@ -23,8 +23,19 @@ Two mathematically identical posterior evaluation paths are provided:
   agree to f32 tolerance; EXPERIMENTS.md §Perf reports them separately.
 
 Both paths share ``fit``, which accumulates the two sufficient statistics
-G = Phi^T Phi and b = Phi^T y in a streaming scan over row blocks —
-constant memory in N (beyond-paper; the paper materializes Phi whole).
+G = Phi^T Phi and b = Phi^T y in one streaming pass — constant memory in N
+(beyond-paper; the paper materializes Phi whole).  Execution is dispatched
+through a small backend registry (``register_backend`` / ``get_backend``):
+
+* ``backend="jnp"``    — scan over row blocks, pure XLA (any device);
+* ``backend="pallas"`` — the streaming fused-fit kernel
+  (``kernels/phi_gram``): Hermite-feature tiles are generated in VMEM inside
+  the Gram accumulation, so Phi is never written to HBM.
+
+The same registry serves ``predict_mean_var`` and the per-shard moment
+accumulation in ``core.distributed``.  ``fit_update`` absorbs new
+observations into a fitted state by a rank-k Cholesky update of B —
+O(k M^2), no pass over the original N rows (the serving ingest path).
 
 Numerical form (beyond-paper, required for f32): lambda_n decays
 geometrically and underflows f32 by column ~40, so Lbar = Lambda^{-1} + ...
@@ -41,7 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,7 +66,20 @@ from .mercer import (
     phi_nd,
 )
 
-__all__ = ["FAGPConfig", "FAGPState", "build_features", "fit", "predict", "nlml"]
+__all__ = [
+    "FAGPConfig",
+    "FAGPState",
+    "FitBackend",
+    "available_backends",
+    "build_features",
+    "fit",
+    "fit_update",
+    "get_backend",
+    "nlml",
+    "predict",
+    "predict_mean_var",
+    "register_backend",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +118,7 @@ class FAGPState:
     params: SEKernelParams
     Phi: Optional[jax.Array]  # (N, M) train features   (store_train only)
     y: Optional[jax.Array]    # (N,)   train targets    (store_train only)
+    b: Optional[jax.Array] = None  # (M,) raw moment Phi^T y — enables fit_update
 
 
 def build_features(X: jax.Array, params: SEKernelParams, idx: jax.Array, n_max: int) -> jax.Array:
@@ -101,7 +126,8 @@ def build_features(X: jax.Array, params: SEKernelParams, idx: jax.Array, n_max: 
     return phi_nd(X, idx, params, n_max)
 
 
-def _accumulate_moments(X, y, params, idx, n_max: int, block_rows: int):
+def _accumulate_moments(X, y, params, idx, n_max: int, block_rows: int,
+                        row_mask=None):
     """Streaming G = Phi^T Phi, b = Phi^T y over row blocks (O(M^2) memory)."""
     N = X.shape[0]
     M = idx.shape[0]
@@ -109,7 +135,8 @@ def _accumulate_moments(X, y, params, idx, n_max: int, block_rows: int):
     pad = nblk * block_rows - N
     Xp = jnp.pad(X, ((0, pad), (0, 0)))
     yp = jnp.pad(y, (0, pad))
-    mask = jnp.pad(jnp.ones((N,), X.dtype), (0, pad))
+    valid = jnp.ones((N,), X.dtype) if row_mask is None else row_mask.astype(X.dtype)
+    mask = jnp.pad(valid, (0, pad))
 
     Xb = Xp.reshape(nblk, block_rows, -1)
     yb = yp.reshape(nblk, block_rows)
@@ -128,6 +155,17 @@ def _accumulate_moments(X, y, params, idx, n_max: int, block_rows: int):
     return G, b
 
 
+def _finish_fit(B, b, loglam, sqrtlam, sig2, idx, params, Phi, y):
+    """Shared fit epilogue: M x M Cholesky solve -> FAGPState."""
+    chol = jnp.linalg.cholesky(B)
+    # u = Lbar^{-1} b / sig2 = D B^{-1} D b / sig2
+    u = sqrtlam * jax.scipy.linalg.cho_solve((chol, True), sqrtlam * b) / sig2
+    return FAGPState(
+        idx=idx, lam=jnp.exp(loglam), sqrtlam=sqrtlam, chol=chol, u=u,
+        params=params, Phi=Phi, y=y, b=b,
+    )
+
+
 @partial(jax.jit, static_argnames=("n_max", "block_rows", "store_train"))
 def _fit(X, y, params, idx, n_max: int, block_rows: int, store_train: bool):
     sig2 = params.noise**2
@@ -136,20 +174,19 @@ def _fit(X, y, params, idx, n_max: int, block_rows: int, store_train: bool):
     G, b = _accumulate_moments(X, y, params, idx, n_max, block_rows)
     M = idx.shape[0]
     B = jnp.eye(M, dtype=G.dtype) + (sqrtlam[:, None] * G * sqrtlam[None, :]) / sig2
-    chol = jnp.linalg.cholesky(B)
-    # u = Lbar^{-1} b / sig2 = D B^{-1} D b / sig2
-    u = sqrtlam * jax.scipy.linalg.cho_solve((chol, True), sqrtlam * b) / sig2
     Phi = build_features(X, params, idx, n_max) if store_train else None
-    return FAGPState(
-        idx=idx, lam=jnp.exp(loglam), sqrtlam=sqrtlam, chol=chol, u=u,
-        params=params, Phi=Phi, y=y if store_train else None,
-    )
+    return _finish_fit(B, b, loglam, sqrtlam, sig2, idx, params,
+                       Phi, y if store_train else None)
 
 
 @partial(jax.jit, static_argnames=("n_max", "store_train"))
 def _fit_pallas(X, y, params, idx, S, n_max: int, store_train: bool):
-    """fit() on the fused Pallas kernels: one HBM pass builds Phi, a second
-    fused pass produces B directly (gram + scaling + diagonal in one kernel)."""
+    """fit() on the streaming fused Pallas kernel: feature tiles are
+    generated on the fly inside the Gram accumulation (kernels/phi_gram), so
+    Phi never exists in HBM and peak live memory is O(M^2) in N — one HBM
+    pass over X instead of the materialized path's two passes plus an N x M
+    intermediate.  (store_train=True additionally materializes Phi for
+    mode='paper' prediction, reintroducing the N x M buffer by request.)"""
     from repro.kernels import ops as kops
     from repro.kernels import ref as kref
 
@@ -157,27 +194,243 @@ def _fit_pallas(X, y, params, idx, S, n_max: int, store_train: bool):
     loglam = log_eigenvalues_nd(idx, params)
     sqrtlam = jnp.exp(0.5 * loglam)
     consts = kref.phi_consts(params.eps, params.rho)
-    Phi = kops.hermite_phi(X, consts, S, n_max=n_max)
-    B = kops.scaled_gram(Phi, sqrtlam, sig2)
-    chol = jnp.linalg.cholesky(B)
-    b = Phi.T @ y
-    u = sqrtlam * jax.scipy.linalg.cho_solve((chol, True), sqrtlam * b) / sig2
-    return FAGPState(
-        idx=idx, lam=jnp.exp(loglam), sqrtlam=sqrtlam, chol=chol, u=u,
-        params=params, Phi=Phi if store_train else None,
-        y=y if store_train else None,
+    B, b = kops.fused_fit_moments(X, y, consts, S, sqrtlam, sig2, n_max=n_max)
+    Phi = kops.hermite_phi(X, consts, S, n_max=n_max) if store_train else None
+    return _finish_fit(B, b, loglam, sqrtlam, sig2, idx, params,
+                       Phi, y if store_train else None)
+
+
+# ---------------------------------------------------------------------------
+# Backend registry — one dispatch point shared by fit / predict_mean_var /
+# core.distributed (per-shard moments), so a new execution backend plugs in
+# by registering one FitBackend instead of editing every call site.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FitBackend:
+    """Execution backend for the FAGP hot paths.
+
+    prepare:  (idx_np, n) -> static auxiliary carried to every call (e.g. the
+              one-hot selection matrix for the Pallas kernels); None if unused.
+    fit:      (X, y, params, idx, aux, cfg) -> FAGPState.
+    features: (X, params, idx, aux, n_max) -> (N, M) feature matrix.
+    mean_var: (state, Xs, aux, n_max) -> (mu, var), the serving path.
+    moments:  (X, y, params, idx, aux, n_max, block_rows, mask) -> (G, b)
+              raw sufficient statistics — the per-shard unit of work for
+              core.distributed (partial sums, psum'd before the solve).
+    """
+
+    name: str
+    prepare: Callable[[np.ndarray, int], Any]
+    fit: Callable[..., "FAGPState"]
+    features: Callable[..., jax.Array]
+    mean_var: Callable[..., tuple]
+    moments: Callable[..., tuple]
+
+
+_BACKENDS: dict[str, FitBackend] = {}
+
+
+def register_backend(backend: FitBackend) -> None:
+    _BACKENDS[backend.name] = backend
+
+
+def get_backend(name: str) -> FitBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+# prepare() results memoized per (idx array, backend, n): predict_mean_var /
+# fit_update sit on the serving hot path, and rebuilding the one-hot
+# selection matrix (plus the blocking device->host idx copy) per microbatch
+# is pure waste.  Keyed by id() and validated by weakref so a recycled id
+# can never alias a dead array.
+_AUX_CACHE: dict = {}
+
+
+def _backend_aux(backend: FitBackend, idx: jax.Array, n: int):
+    import weakref
+
+    key = (id(idx), backend.name, n)
+    hit = _AUX_CACHE.get(key)
+    if hit is not None and hit[0]() is idx:
+        return hit[1]
+    aux = backend.prepare(np.asarray(idx), n)
+    try:
+        ref = weakref.ref(idx)
+    except TypeError:
+        return aux
+    if len(_AUX_CACHE) > 64:
+        _AUX_CACHE.clear()
+    _AUX_CACHE[key] = (ref, aux)
+    return aux
+
+
+# --- jnp backend (scan-streamed, pure XLA) ---------------------------------
+
+
+@partial(jax.jit, static_argnames=("n_max",))
+def _features_jit(X, params, idx, n_max: int):
+    return build_features(X, params, idx, n_max)
+
+
+def _jnp_features(X, params, idx, aux, n_max):
+    return _features_jit(X, params, idx, n_max)
+
+
+def _jnp_moments(X, y, params, idx, aux, n_max, block_rows, mask=None):
+    return _accumulate_moments(X, y, params, idx, n_max, block_rows,
+                               row_mask=mask)
+
+
+def _jnp_fit(X, y, params, idx, aux, cfg: "FAGPConfig"):
+    return _fit(X, y, params, idx, cfg.n, cfg.block_rows, cfg.store_train)
+
+
+def _jnp_mean_var(state, Xs, aux, n_max):
+    return _mean_var_jnp(state, Xs, n_max)
+
+
+# --- pallas backend (fused TPU kernels; interpret mode on CPU) -------------
+
+
+def _pallas_prepare(idx_np: np.ndarray, n: int):
+    from repro.kernels import ref as kref
+
+    return jnp.asarray(kref.one_hot_selection(idx_np, n))
+
+
+def _pallas_features(X, params, idx, aux, n_max):
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    consts = kref.phi_consts(params.eps, params.rho)
+    return kops.hermite_phi(X, consts, aux, n_max=n_max)
+
+
+def _pallas_moments(X, y, params, idx, aux, n_max, block_rows, mask=None):
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    consts = kref.phi_consts(params.eps, params.rho)
+    ones = jnp.ones((idx.shape[0],), jnp.float32)
+    return kops.fused_fit_moments(
+        X, y, consts, aux, ones, jnp.float32(1.0), mask,
+        n_max=n_max, scale=False,
     )
 
 
+def _pallas_fit(X, y, params, idx, aux, cfg: "FAGPConfig"):
+    return _fit_pallas(X, y, params, idx, aux, cfg.n, cfg.store_train)
+
+
+def _pallas_mean_var(state, Xs, aux, n_max):
+    return _mean_var_pallas(state, Xs, aux, n_max)
+
+
+register_backend(FitBackend(
+    name="jnp", prepare=lambda idx_np, n: None, fit=_jnp_fit,
+    features=_jnp_features, mean_var=_jnp_mean_var, moments=_jnp_moments,
+))
+register_backend(FitBackend(
+    name="pallas", prepare=_pallas_prepare, fit=_pallas_fit,
+    features=_pallas_features, mean_var=_pallas_mean_var,
+    moments=_pallas_moments,
+))
+
+
 def fit(X: jax.Array, y: jax.Array, params: SEKernelParams, cfg: FAGPConfig) -> FAGPState:
+    backend = get_backend(cfg.backend)
     idx_np = cfg.indices(X.shape[1])
     idx = jnp.asarray(idx_np)
-    if cfg.backend == "pallas":
-        from repro.kernels import ref as kref
+    aux = backend.prepare(idx_np, cfg.n)
+    return backend.fit(X, y, params, idx, aux, cfg)
 
-        S = jnp.asarray(kref.one_hot_selection(idx_np, cfg.n))
-        return _fit_pallas(X, y, params, idx, S, cfg.n, cfg.store_train)
-    return _fit(X, y, params, idx, cfg.n, cfg.block_rows, cfg.store_train)
+
+# ---------------------------------------------------------------------------
+# Online incremental fitting (rank-k update of the scaled system)
+# ---------------------------------------------------------------------------
+
+
+def _chol_rank1_update(L: jax.Array, w: jax.Array) -> jax.Array:
+    """Cholesky of L L^T + w w^T, O(M^2) (LINPACK positive-update sweep).
+
+    Column-sequential Givens-style sweep expressed as a scan with masked
+    whole-column updates; additions are always well-posed (no downdates)."""
+    M = L.shape[0]
+    ar = jnp.arange(M)
+
+    def step(carry, k):
+        L, w = carry
+        Lkk = L[k, k]
+        wk = w[k]
+        r = jnp.sqrt(Lkk * Lkk + wk * wk)
+        c = r / Lkk
+        s = wk / Lkk
+        col = L[:, k]
+        below = ar > k
+        newcol = jnp.where(below, (col + s * w) / c, col).at[k].set(r)
+        w = jnp.where(below, c * w - s * newcol, w)
+        return (L.at[:, k].set(newcol), w), None
+
+    (L, _), _ = jax.lax.scan(step, (L, w), ar)
+    return L
+
+
+@jax.jit
+def _update_state(state: FAGPState, Phi_new: jax.Array, y_new: jax.Array):
+    sig2 = state.params.noise**2
+    # B_new = B + sum_k v_k v_k^T,  v_k = D phi_k / sigma  (rank-K update)
+    W = Phi_new * state.sqrtlam[None, :] / state.params.noise
+    K, M = W.shape
+    if K * 8 <= M:
+        # small K: sequential rank-1 sweeps, O(K M^2), beats refactorization
+        chol, _ = jax.lax.scan(
+            lambda L, w: (_chol_rank1_update(L, w), None), state.chol, W
+        )
+    else:
+        # K comparable to M: the rank-1 sweep is K*M sequential latency-bound
+        # steps; rebuilding the M x M factor is O(M^3/3) fully-parallel work
+        # and still never touches the original N rows
+        B = state.chol @ state.chol.T + W.T @ W
+        chol = jnp.linalg.cholesky(B)
+    b = state.b + Phi_new.T @ y_new
+    u = state.sqrtlam * jax.scipy.linalg.cho_solve((chol, True), state.sqrtlam * b) / sig2
+    return chol, b, u
+
+
+def fit_update(
+    state: FAGPState, X_new: jax.Array, y_new: jax.Array, cfg: FAGPConfig
+) -> FAGPState:
+    """Absorb new observations into a fitted state without refitting.
+
+    Rank-k Cholesky update of B (O(k M^2)) plus a fresh M x M solve for the
+    mean weights — no pass over the original N rows, so the serving loop can
+    ingest observation microbatches at O(M^2) cost each (vs O(N M^2) refit).
+    Exactly equivalent to refitting on the concatenated data (same math, up
+    to f32 rounding); tests pin update-then-predict == refit-then-predict.
+    """
+    if state.b is None:
+        raise ValueError("fit_update needs a state produced by fit() >= this "
+                         "version (missing the raw moment vector b)")
+    backend = get_backend(cfg.backend)
+    aux = _backend_aux(backend, state.idx, cfg.n)
+    Phi_new = backend.features(X_new, state.params, state.idx, aux, cfg.n)
+    chol, b, u = _update_state(state, Phi_new, y_new)
+    Phi = y = None
+    if state.Phi is not None:
+        Phi = jnp.concatenate([state.Phi, Phi_new], axis=0)
+        y = jnp.concatenate([state.y, y_new], axis=0)
+    return dataclasses.replace(state, chol=chol, b=b, u=u, Phi=Phi, y=y)
 
 
 # ---------------------------------------------------------------------------
@@ -236,19 +489,22 @@ def predict(state: FAGPState, Xs: jax.Array, cfg: FAGPConfig, mode: str = "fused
     raise ValueError(f"unknown mode {mode!r}")
 
 
-@partial(jax.jit, static_argnames=("n_max", "backend"))
-def _predict_mean_var(state: FAGPState, Xs, S, n_max: int, backend: str):
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        from repro.kernels import ref as kref
+@partial(jax.jit, static_argnames=("n_max",))
+def _mean_var_pallas(state: FAGPState, Xs, S, n_max: int):
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
 
-        consts = kref.phi_consts(state.params.eps, state.params.rho)
-        Phis = kops.hermite_phi(Xs, consts, S, n_max=n_max)
-        mu = Phis @ state.u
-        M = state.chol.shape[0]
-        Binv = jax.scipy.linalg.cho_solve((state.chol, True), jnp.eye(M, dtype=Phis.dtype))
-        var = kops.diag_quad(Phis * state.sqrtlam[None, :], Binv)
-        return mu, var
+    consts = kref.phi_consts(state.params.eps, state.params.rho)
+    Phis = kops.hermite_phi(Xs, consts, S, n_max=n_max)
+    mu = Phis @ state.u
+    M = state.chol.shape[0]
+    Binv = jax.scipy.linalg.cho_solve((state.chol, True), jnp.eye(M, dtype=Phis.dtype))
+    var = kops.diag_quad(Phis * state.sqrtlam[None, :], Binv)
+    return mu, var
+
+
+@partial(jax.jit, static_argnames=("n_max",))
+def _mean_var_jnp(state: FAGPState, Xs, n_max: int):
     Phis = build_features(Xs, state.params, state.idx, n_max)
     mu = Phis @ state.u
     PhisD = Phis * state.sqrtlam[None, :]
@@ -259,12 +515,9 @@ def _predict_mean_var(state: FAGPState, Xs, S, n_max: int, backend: str):
 def predict_mean_var(state: FAGPState, Xs: jax.Array, cfg: FAGPConfig):
     """Posterior mean and *marginal variance* (N*,) — the production serving
     path: never materializes the N* x N* covariance (kernels/diag_quad)."""
-    S = None
-    if cfg.backend == "pallas":
-        from repro.kernels import ref as kref
-
-        S = jnp.asarray(kref.one_hot_selection(np.asarray(state.idx), cfg.n))
-    return _predict_mean_var(state, Xs, S, cfg.n, cfg.backend)
+    backend = get_backend(cfg.backend)
+    aux = _backend_aux(backend, state.idx, cfg.n)
+    return backend.mean_var(state, Xs, aux, cfg.n)
 
 
 # ---------------------------------------------------------------------------

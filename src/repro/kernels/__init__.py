@@ -2,9 +2,12 @@
 
 hermite_phi — fused Mercer feature construction (paper Eq. 19)
 gram        — fused scaled Gram  B = I + D Phi^T Phi D / sig2
+phi_gram    — streaming fused fit: feature tiles generated inside the Gram
+              accumulation (Phi never in HBM); B and b in one pass
 diag_quad   — predictive-variance diagonal without the N* x N* covariance
 """
-from . import diag_quad, gram, hermite_phi, ops, ref
-from .ops import hermite_phi as hermite_phi_op  # noqa: F401
-from .ops import diag_quad as diag_quad_op      # noqa: F401
-from .ops import scaled_gram as scaled_gram_op  # noqa: F401
+from . import diag_quad, gram, hermite_phi, ops, phi_gram, ref
+from .ops import hermite_phi as hermite_phi_op            # noqa: F401
+from .ops import diag_quad as diag_quad_op                # noqa: F401
+from .ops import scaled_gram as scaled_gram_op            # noqa: F401
+from .ops import fused_fit_moments as fused_fit_moments_op  # noqa: F401

@@ -29,17 +29,23 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["hermite_phi_kernel", "hermite_phi"]
+__all__ = ["hermite_phi_kernel", "hermite_phi", "phi_tile"]
 
 
-def _phi_body(xt_ref, consts_ref, s_ref, o_ref, *, p: int, n_max: int):
-    """One (TN, TM) output tile of Phi."""
+def phi_tile(xt, consts, s, *, p: int, n_max: int):
+    """One (TN, TM) tile of Phi from in-VMEM values.
+
+    xt: (p, TN) input rows for this tile; consts: (p, 3); s: (p*n_max, TM)
+    one-hot selection.  Shared by hermite_phi_kernel and the streaming
+    fused-fit kernel (phi_gram), which generates these tiles on the fly
+    instead of materializing Phi in HBM.
+    """
     out = None
     for j in range(p):
-        beta = consts_ref[j, 0]
-        delta2 = consts_ref[j, 1]
-        zscale = consts_ref[j, 2]
-        xj = xt_ref[j, :][None, :]                      # (1, TN)
+        beta = consts[j, 0]
+        delta2 = consts[j, 1]
+        zscale = consts[j, 2]
+        xj = xt[j, :][None, :]                          # (1, TN)
         z = zscale * xj
         env = jnp.exp(-delta2 * xj * xj)                # (1, TN)
 
@@ -58,13 +64,19 @@ def _phi_body(xt_ref, consts_ref, s_ref, o_ref, *, p: int, n_max: int):
                 rows.append(nxt)
         feats = jnp.concatenate(rows, axis=0) * env     # (n_max, TN)
 
-        s_j = s_ref[j * n_max : (j + 1) * n_max, :]     # (n_max, TM) one-hot
+        s_j = s[j * n_max : (j + 1) * n_max, :]         # (n_max, TM) one-hot
         # (TN, TM) <- feats^T @ S_j  : MXU-friendly "gather"
         sel = jax.lax.dot_general(
             feats, s_j, (((0,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
         out = sel if out is None else out * sel
+    return out
+
+
+def _phi_body(xt_ref, consts_ref, s_ref, o_ref, *, p: int, n_max: int):
+    """One (TN, TM) output tile of Phi."""
+    out = phi_tile(xt_ref[...], consts_ref[...], s_ref[...], p=p, n_max=n_max)
     o_ref[...] = out.astype(o_ref.dtype)
 
 

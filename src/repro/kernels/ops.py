@@ -18,8 +18,12 @@ from . import ref
 from .diag_quad import diag_quad_kernel
 from .gram import scaled_gram_kernel
 from .hermite_phi import hermite_phi_kernel
+from .phi_gram import phi_gram_kernel
 
-__all__ = ["hermite_phi", "scaled_gram", "diag_quad", "resolve_interpret"]
+__all__ = [
+    "hermite_phi", "scaled_gram", "diag_quad", "fused_fit_moments",
+    "resolve_interpret",
+]
 
 
 def resolve_interpret(interpret: bool | None) -> bool:
@@ -67,6 +71,58 @@ def hermite_phi(
         interpret=interp,
     )
     return out[:N, :M]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_max", "block_m", "block_k", "scale", "interpret"),
+)
+def fused_fit_moments(
+    X: jax.Array,            # (N, p)
+    y: jax.Array,            # (N,)
+    consts: jax.Array,       # (p, 3) from ref.phi_consts
+    S: jax.Array,            # (p*n_max, M) one-hot from ref.one_hot_selection
+    sqrtlam: jax.Array,      # (M,)  ignored when scale=False
+    sig2: jax.Array,         # scalar; ignored when scale=False
+    mask: jax.Array | None = None,  # (N,) row validity; None = all valid
+    *,
+    n_max: int,
+    block_m: int = 256,
+    block_k: int = 256,
+    scale: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming fused fit statistics: Phi is generated tile-by-tile inside
+    the Gram contraction and never written to HBM (kernels/phi_gram).
+
+    scale=True  -> (B, b) with B = I + D Phi^T Phi D / sig2  (the fit solve)
+    scale=False -> (G, b) with G = Phi^T Phi  (raw moments, e.g. for the
+                   distributed per-shard partial sums that are psum'd first)
+
+    ``mask`` excludes rows (e.g. shard padding) from both statistics.
+    """
+    N, p = X.shape
+    M = S.shape[1]
+    interp = resolve_interpret(interpret)
+    block_k = min(block_k, max(8, 1 << (N - 1).bit_length()))
+    block_m = min(block_m, max(128, 1 << (M - 1).bit_length()))
+    Xt = _pad_to(X.T.astype(jnp.float32), 1, block_k)
+    Sp = _pad_to(S.astype(jnp.float32), 1, block_m)
+    d = _pad_to(sqrtlam.reshape(1, -1).astype(jnp.float32), 1, block_m)
+    yp = _pad_to(y.reshape(1, -1).astype(jnp.float32), 1, block_k)
+    if mask is None:
+        mask = jnp.ones((1, N), jnp.float32)
+    else:
+        mask = mask.reshape(1, -1).astype(jnp.float32)
+    mask = _pad_to(mask, 1, block_k)
+    B, b = phi_gram_kernel(
+        Xt, consts, Sp, d, jnp.asarray(sig2, jnp.float32).reshape(1, 1),
+        yp, mask, n_max=n_max, block_m=block_m, block_k=block_k,
+        scale=scale, interpret=interp,
+    )
+    # padded columns (d = 0, S = 0) contribute identity rows when scale=True
+    # and zero rows otherwise; both slice away
+    return B[:M, :M], b[0, :M]
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: streaming fused fit — Phi is never written to HBM.
+
+The materialized fit path (hermite_phi -> scaled_gram) makes two HBM passes
+and parks an N x M intermediate in HBM between them — exactly the memory
+wall the paper's decomposed kernel is supposed to avoid (the M x M system
+is small; the N x M feature matrix is not).  This kernel fuses feature
+construction INTO the Gram accumulation: each (TK, TI) / (TK, TJ) tile of
+Phi is regenerated in VMEM from the corresponding (p, TK) tile of X via the
+shared Hermite recurrence (hermite_phi.phi_tile), contracted on the MXU,
+and discarded.  HBM traffic: read X and y once, write B (M x M) and
+b (M) once.  Peak live memory is O(M^2) in N — the same asymptotic as the
+jnp scan path, but in one fused pass.
+
+The trade is recompute for bandwidth: each X tile's features are rebuilt
+2 * M/TI times (once per output block row/column).  The recurrence is
+O(p * n_max) VPU work per element vs the O(TI) MXU work of the Gram
+contraction it feeds, so for M >= ~256 the MXU stays the bottleneck.
+
+Outputs (one fused pallas_call):
+    B = I + D (Phi^T Phi) D / sig2    (M, M)   [or plain G when scale=False]
+    b = Phi^T y                        (1, M)
+
+Grid: (M/TI, M/TJ, N/TK), K innermost.  The B block (TI, TJ) accumulates
+across K (canonical revisiting matmul); the b block (1, TI) accumulates
+only on the j == 0 face so each row tile of Phi contributes exactly once.
+Padded rows are masked inside the kernel (phi(0) != 0, so zero-padding X
+alone would corrupt the Gram).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .hermite_phi import phi_tile
+
+__all__ = ["phi_gram_kernel"]
+
+
+def _phi_gram_body(
+    xt_ref, consts_ref, si_ref, sj_ref, di_ref, dj_ref, sig2_ref, y_ref,
+    mask_ref, o_ref, b_ref, *, p: int, n_max: int, nk: int, scale: bool,
+):
+    i, j = pl.program_id(0), pl.program_id(1)
+    k = pl.program_id(2)
+
+    mask = mask_ref[0, :][None, :]                     # (1, TK)
+    # (TK, TI) and (TK, TJ) tiles of Phi, built in VMEM and discarded
+    phi_i = phi_tile(xt_ref[...], consts_ref[...], si_ref[...],
+                     p=p, n_max=n_max) * mask.T
+    phi_j = phi_tile(xt_ref[...], consts_ref[...], sj_ref[...],
+                     p=p, n_max=n_max) * mask.T
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        phi_i, phi_j, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when((j == 0) & (k == 0))
+    def _init_b():
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    @pl.when(j == 0)
+    def _acc_b():
+        # (1, TI) += y_k @ Phi_k_i  (y already zero-padded past N)
+        b_ref[...] += jax.lax.dot_general(
+            y_ref[...], phi_i, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    if scale:
+        @pl.when(k == nk - 1)
+        def _epilogue():
+            ti, tj = o_ref.shape
+            di = di_ref[0, :][:, None]                 # (TI, 1)
+            dj = dj_ref[0, :][None, :]                 # (1, TJ)
+            acc = o_ref[...] * (di * dj / sig2_ref[0, 0])
+            rows = i * ti + jax.lax.broadcasted_iota(jnp.int32, (ti, tj), 0)
+            cols = j * tj + jax.lax.broadcasted_iota(jnp.int32, (ti, tj), 1)
+            o_ref[...] = acc + jnp.where(rows == cols, 1.0, 0.0).astype(acc.dtype)
+
+
+def phi_gram_kernel(
+    Xt: jax.Array,        # (p, N) transposed inputs, f32
+    consts: jax.Array,    # (p, 3) from ref.phi_consts
+    S: jax.Array,         # (p*n_max, M) one-hot selection, f32
+    d: jax.Array,         # (1, M)  sqrt(lambda) scaling
+    sig2: jax.Array,      # (1, 1)  noise variance
+    y: jax.Array,         # (1, N)  targets, zero-padded past the true N
+    mask: jax.Array,      # (1, N)  1.0 on valid rows, 0.0 on padding
+    *,
+    n_max: int,
+    block_m: int = 256,
+    block_k: int = 256,
+    scale: bool = True,
+    interpret: bool = False,
+):
+    """Raw pallas_call; returns (B (M, M), b (1, M)).  Requires
+    N % block_k == 0 and M % block_m == 0 (ops.fused_fit_moments pads)."""
+    p, N = Xt.shape
+    M = S.shape[1]
+    nk = N // block_k
+    grid = (M // block_m, M // block_m, nk)
+    return pl.pallas_call(
+        functools.partial(
+            _phi_gram_body, p=p, n_max=n_max, nk=nk, scale=scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((p, block_k), lambda i, j, k: (0, k)),
+            pl.BlockSpec((p, 3), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((p * n_max, block_m), lambda i, j, k: (0, i)),
+            pl.BlockSpec((p * n_max, block_m), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, block_m), lambda i, j, k: (0, i)),
+            pl.BlockSpec((1, block_m), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)),
+            pl.BlockSpec((1, block_k), lambda i, j, k: (0, k)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_m), lambda i, j, k: (i, j)),
+            pl.BlockSpec((1, block_m), lambda i, j, k: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, M), jnp.float32),
+            jax.ShapeDtypeStruct((1, M), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Xt, consts, S, S, d, d, sig2, y, mask)

@@ -10,7 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ref_phi", "ref_scaled_gram", "ref_diag_quad", "one_hot_selection", "phi_consts"]
+__all__ = [
+    "ref_phi", "ref_scaled_gram", "ref_diag_quad", "ref_fused_fit_moments",
+    "one_hot_selection", "phi_consts",
+]
 
 
 def phi_consts(eps: jax.Array, rho: jax.Array) -> jax.Array:
@@ -55,6 +58,16 @@ def ref_scaled_gram(Phi: jax.Array, d: jax.Array, sig2) -> jax.Array:
     d = d.reshape(-1)
     G = Phi.astype(jnp.float32).T @ Phi.astype(jnp.float32)
     return jnp.eye(M, dtype=jnp.float32) + d[:, None] * G * d[None, :] / sig2
+
+
+def ref_fused_fit_moments(X, y, consts, S, d, sig2, n_max: int, scale=True):
+    """Oracle for the streaming fused fit: materializes Phi (the very thing
+    the kernel avoids), then reduces.  Returns (B, b) or (G, b)."""
+    Phi = ref_phi(X.T.astype(jnp.float32), consts, S, n_max)
+    b = Phi.T @ y.astype(jnp.float32)
+    if not scale:
+        return Phi.T @ Phi, b
+    return ref_scaled_gram(Phi, d, sig2), b
 
 
 def ref_diag_quad(A: jax.Array, C: jax.Array) -> jax.Array:

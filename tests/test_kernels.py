@@ -8,7 +8,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st  # hypothesis, or fixed examples
 
 from repro.core import mercer
 from repro.kernels import ops, ref
