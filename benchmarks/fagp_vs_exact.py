@@ -7,7 +7,8 @@ import sys
 
 import numpy as np
 
-from repro.core import exact_gp, fagp, mercer
+from repro.core import exact_gp, mercer
+from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
 
 from .common import emit, time_fn
@@ -26,11 +27,9 @@ def run(full: bool = False):
         rmse_e = float(np.sqrt(np.mean((np.asarray(mu_e) - np.asarray(ys)) ** 2)))
         emit(f"fagp_vs_exact/exact/N{N}", t_exact, f"rmse={rmse_e:.4f}")
 
-        cfg = fagp.FAGPConfig(n=10, store_train=False)
-        t_fagp = time_fn(
-            lambda: fagp.predict_mean_var(fagp.fit(X, y, params, cfg), Xs, cfg)[0]
-        )
-        mu_a, _ = fagp.predict_mean_var(fagp.fit(X, y, params, cfg), Xs, cfg)
+        spec = GPSpec.create(10, eps=[0.8] * p, rho=2.0, noise=0.05)
+        t_fagp = time_fn(lambda: GP.fit(X, y, spec).mean_var(Xs)[0])
+        mu_a, _ = GP.fit(X, y, spec).mean_var(Xs)
         rmse_a = float(np.sqrt(np.mean((np.asarray(mu_a) - np.asarray(ys)) ** 2)))
         emit(f"fagp_vs_exact/fagp/N{N}", t_fagp,
              f"rmse={rmse_a:.4f};M={10**p};speedup={t_exact / t_fagp:.1f}x")

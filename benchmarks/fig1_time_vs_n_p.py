@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import sys
 
-from repro.core import fagp, mercer
+from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
 
 from .common import emit, time_fn
@@ -26,28 +26,26 @@ def run(full: bool = False):
     ps = (1, 2, 4) if full else (1, 2, 3)
     for p in ps:
         X, y, Xs, ys = make_gp_dataset(N, p, seed=0)
-        params = mercer.SEKernelParams.create([0.8] * p, [2.0] * p, noise=0.05)
         for n in ns:
             M = n**p
             if M > 20_000:
                 continue
-            cfg_fast = fagp.FAGPConfig(n=n, store_train=False)
-            st = fagp.fit(X, y, params, cfg_fast)
+            spec = GPSpec.create(n, eps=[0.8] * p, rho=2.0, noise=0.05)
 
-            def fit_and_mean(cfg=cfg_fast):
-                s = fagp.fit(X, y, params, cfg)
-                mu, _ = fagp.predict_mean_var(s, Xs, cfg)
+            def fit_and_mean(spec=spec):
+                gp = GP.fit(X, y, spec)
+                mu, _ = gp.mean_var(Xs)
                 return mu
 
             t_fused = time_fn(fit_and_mean)
             emit(f"fig1/fused/p{p}/n{n}", t_fused, f"M={M};N={N}")
 
             if M <= 1_000:  # paper chain forms N x N — cap its cost
-                cfg_paper = fagp.FAGPConfig(n=n, store_train=True)
+                spec_paper = spec.replace(store_train=True)
 
                 def fit_and_mean_paper():
-                    s = fagp.fit(X, y, params, cfg_paper)
-                    mu, _ = fagp.predict(s, Xs, cfg_paper, mode="paper")
+                    gp = GP.fit(X, y, spec_paper)
+                    mu, _ = gp.predict(Xs, mode="paper")
                     return mu
 
                 t_paper = time_fn(fit_and_mean_paper, iters=1)

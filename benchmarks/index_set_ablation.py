@@ -10,7 +10,7 @@ import sys
 
 import numpy as np
 
-from repro.core import fagp, mercer
+from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
 
 from .common import emit, time_fn
@@ -20,7 +20,7 @@ def run(full: bool = False):
     N = 10_000 if full else 3_000
     p, n = 4, 7
     X, y, Xs, ys = make_gp_dataset(N, p, seed=2)
-    params = mercer.SEKernelParams.create([0.7] * p, [2.0] * p, noise=0.05)
+    base = GPSpec.create(n, eps=[0.7] * p, rho=2.0, noise=0.05)
     settings = [
         ("full", None),
         ("total_degree", n - 1),
@@ -29,15 +29,15 @@ def run(full: bool = False):
         ("hyperbolic_cross", n),
     ]
     for kind, degree in settings:
-        cfg = fagp.FAGPConfig(n=n, index_set=kind, degree=degree, store_train=False)
-        M = cfg.indices(p).shape[0]
+        spec = base.replace(index_set=kind, degree=degree)
+        M = spec.indices(p).shape[0]
         if M > 6_000 and not full:
             emit(f"index_set/{kind}-{degree}/SKIPPED", 0.0, f"M={M}")
             continue
 
         def work():
-            s = fagp.fit(X, y, params, cfg)
-            mu, _ = fagp.predict_mean_var(s, Xs, cfg)
+            gp = GP.fit(X, y, spec)
+            mu, _ = gp.mean_var(Xs)
             return mu
 
         t = time_fn(work, iters=2)

@@ -17,6 +17,7 @@ def main() -> None:
         fig1_time_vs_n_p,
         index_set_ablation,
         kernel_micro,
+        multi_output,
         roofline_table,
         streaming_fit,
     )
@@ -27,6 +28,7 @@ def main() -> None:
         ("index_set_ablation", index_set_ablation),  # beyond-paper truncations
         ("kernel_micro", kernel_micro),              # Pallas kernels
         ("streaming_fit", streaming_fit),            # fused 1-pass fit; fit_update
+        ("multi_output", multi_output),              # shared-Cholesky T-task fit
         ("roofline_table", roofline_table),          # dry-run summary
     ]
     failed = 0

@@ -14,7 +14,8 @@ import sys
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import fagp, mercer
+from repro.core import mercer
+from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
 from repro.kernels import ops, ref
 
@@ -51,21 +52,21 @@ def run(full: bool = False):
     t = time_fn(materialized)
     emit("streaming_fit/materialized-2pass", t, tag)
 
-    cfg_j = fagp.FAGPConfig(n=n_max, store_train=False, backend="jnp")
-    t = time_fn(lambda: fagp.fit(X, y, params, cfg_j).u)
+    spec_j = GPSpec.create(n_max, eps=params.eps, rho=params.rho, noise=0.05)
+    t = time_fn(lambda: GP.fit(X, y, spec_j).state.u)
     emit("streaming_fit/jnp-scan-fit", t, tag)
 
     # --- fit_update vs refit ---------------------------------------------
     k = 256 if full else 64
     Xn, yn, *_ = make_gp_dataset(k, p, seed=7)
-    state = fagp.fit(X, y, params, cfg_j)
-    t_up = time_fn(lambda: fagp.fit_update(state, Xn, yn, cfg_j).u)
+    gp = GP.fit(X, y, spec_j)
+    t_up = time_fn(lambda: gp.update(Xn, yn).state.u)
     flops_ratio = (k * M * M) / (N * M * M)
     emit("streaming_fit/fit_update-rank-k", t_up,
          f"k={k};flops_ratio={flops_ratio:.3f}")
     Xc = jnp.concatenate([X, Xn])
     yc = jnp.concatenate([y, yn])
-    t_re = time_fn(lambda: fagp.fit(Xc, yc, params, cfg_j).u)
+    t_re = time_fn(lambda: GP.fit(Xc, yc, spec_j).state.u)
     emit("streaming_fit/refit-full", t_re, f"k={k};speedup={t_re/t_up:.1f}x")
 
 

@@ -2,55 +2,35 @@
 declared future work ("A parallel implementation of the optimization
 problem for hyperparameter learning is currently in development").
 
-Gradient-based NLML minimization in (eps, rho, sigma_n), O(N M^2) per step.
+`GP.optimize` runs gradient-based NLML minimization in (eps, rho, sigma_n)
+— the spec's hyperparameters are differentiable pytree leaves — then fits
+at the learned values.  O(N M^2) per step.
 
     PYTHONPATH=src python examples/hyperparam_learning.py
 """
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fagp, mercer
+from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
-from repro import optim
 
 
 def main():
     p, n, N = 2, 10, 1_500
     X, y, Xs, ys = make_gp_dataset(N, p, noise=0.1, seed=5)
-    idx = jnp.asarray(mercer.full_grid(n, p))
 
     # deliberately wrong init: eps 4x too large, noise 10x too small
-    hp = {"log_eps": jnp.log(jnp.full((p,), 3.0)),
-          "log_rho": jnp.log(jnp.full((p,), 2.0)),
-          "log_noise": jnp.log(jnp.asarray(0.01))}
+    spec0 = GPSpec.create(n, eps=[3.0] * p, rho=2.0, noise=0.01)
 
-    def nlml_loss(hp):
-        params = mercer.SEKernelParams(
-            eps=jnp.exp(hp["log_eps"]), rho=jnp.exp(hp["log_rho"]),
-            noise=jnp.exp(hp["log_noise"]),
-        )
-        return fagp.nlml(X, y, params, idx, n) / N
+    def report(step, nlml_per_row, spec):
+        print(f"step {step:4d}  nlml/N={nlml_per_row:8.4f}  "
+              f"eps={np.asarray(spec.eps)}  noise={float(spec.noise):.4f}")
 
-    ocfg = optim.AdamWConfig(lr=5e-2, weight_decay=0.0, clip_norm=10.0)
-    state = optim.init(hp, ocfg)
-    loss_grad = jax.jit(jax.value_and_grad(nlml_loss))
-    for step in range(120):
-        loss, g = loss_grad(hp)
-        hp, state, _ = optim.apply_updates(hp, g, state, ocfg)
-        if step % 20 == 0:
-            print(f"step {step:4d}  nlml/N={float(loss):8.4f}  "
-                  f"eps={np.exp(np.asarray(hp['log_eps']))}  "
-                  f"noise={float(jnp.exp(hp['log_noise'])):.4f}")
+    gp = GP.optimize(X, y, spec0, steps=120, lr=5e-2, callback=report)
 
-    params = mercer.SEKernelParams(
-        eps=jnp.exp(hp["log_eps"]), rho=jnp.exp(hp["log_rho"]),
-        noise=jnp.exp(hp["log_noise"]))
-    cfg = fagp.FAGPConfig(n=n)
-    mu, _ = fagp.predict_mean_var(fagp.fit(X, y, params, cfg), Xs, cfg)
+    mu, _ = gp.mean_var(Xs)
     rmse = float(np.sqrt(np.mean((np.asarray(mu) - np.asarray(ys)) ** 2)))
     print(f"final test rmse: {rmse:.4f}  learned noise: "
-          f"{float(jnp.exp(hp['log_noise'])):.4f} (true 0.1)")
+          f"{float(gp.spec.noise):.4f} (true 0.1)")
     assert rmse < 0.15
 
 

@@ -1,6 +1,7 @@
 """The paper's headline case: multidimensional FAGP (p=4) where M = n^p
 explodes — with the beyond-paper hyperbolic-cross fix and the Pallas
-kernel backend.
+kernel backend, through the `GP` session facade (the backend is part of
+the spec, not a per-call argument).
 
     PYTHONPATH=src python examples/multidim_fagp.py
 """
@@ -8,31 +9,30 @@ import time
 
 import numpy as np
 
-from repro.core import fagp, mercer
+from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
 
 
 def main():
     p, n, N = 4, 7, 5_000
     X, y, Xs, ys = make_gp_dataset(N, p, noise=0.05, seed=3)
-    params = mercer.SEKernelParams.create([0.7] * p, [2.0] * p, noise=0.05)
 
-    for label, cfg in [
-        ("full grid (paper)      ", fagp.FAGPConfig(n=n, store_train=False)),
-        ("hyperbolic cross (ours)", fagp.FAGPConfig(n=n, index_set="hyperbolic_cross",
-                                                    degree=2 * n, store_train=False)),
-        ("hyperbolic + pallas    ", fagp.FAGPConfig(n=n, index_set="hyperbolic_cross",
-                                                    degree=2 * n, store_train=False,
-                                                    backend="pallas")),
+    base = GPSpec.create(n, eps=[0.7] * p, rho=2.0, noise=0.05)
+    for label, spec in [
+        ("full grid (paper)      ", base),
+        ("hyperbolic cross (ours)", base.replace(index_set="hyperbolic_cross",
+                                                 degree=2 * n)),
+        ("hyperbolic + pallas    ", base.replace(index_set="hyperbolic_cross",
+                                                 degree=2 * n,
+                                                 backend="pallas")),
     ]:
-        M = cfg.indices(p).shape[0]
         t0 = time.perf_counter()
-        st = fagp.fit(X, y, params, cfg)
-        mu, var = fagp.predict_mean_var(st, Xs, cfg)
+        gp = GP.fit(X, y, spec)
+        mu, var = gp.mean_var(Xs)
         mu.block_until_ready()
         dt = time.perf_counter() - t0
         rmse = float(np.sqrt(np.mean((np.asarray(mu) - np.asarray(ys)) ** 2)))
-        print(f"{label}  M={M:5d}  time={dt:7.2f}s  rmse={rmse:.4f}")
+        print(f"{label}  M={gp.n_features:5d}  time={dt:7.2f}s  rmse={rmse:.4f}")
 
 
 if __name__ == "__main__":

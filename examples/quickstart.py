@@ -1,31 +1,34 @@
-"""Quickstart: 1-D GP regression with the Mercer-decomposed kernel (FAGP).
+"""Quickstart: 1-D GP regression with the Mercer-decomposed kernel (FAGP),
+through the self-describing `GP` session facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import exact_gp, fagp, mercer
+from repro.core import exact_gp, mercer
+from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
 
 
 def main():
     X, y, Xs, ys = make_gp_dataset(N=400, p=1, noise=0.05, seed=0)
-    params = mercer.SEKernelParams.create([0.8], [2.0], noise=0.05)
 
     # exact GP (paper Eqs. 3-4): the O(N^3) baseline
+    params = mercer.SEKernelParams.create([0.8], [2.0], noise=0.05)
     mu_e, cov_e = exact_gp.predict(exact_gp.fit(X, y, params), Xs)
 
-    # FAGP (paper Eqs. 11-12): only an n x n solve, n = 24 eigenvalues
-    cfg = fagp.FAGPConfig(n=24)
-    state = fagp.fit(X, y, params, cfg)
-    mu_a, var_a = fagp.predict_mean_var(state, Xs, cfg)
+    # FAGP (paper Eqs. 11-12): only an n x n solve, n = 24 eigenvalues.
+    # One spec describes the whole session; it is baked into the fit.
+    spec = GPSpec.create(24, eps=[0.8], rho=[2.0], noise=0.05)
+    gp = GP.fit(X, y, spec)
+    mu_a, var_a = gp.mean_var(Xs)
 
     rmse_e = float(jnp.sqrt(jnp.mean((mu_e - ys) ** 2)))
     rmse_a = float(jnp.sqrt(jnp.mean((mu_a - ys) ** 2)))
     gap = float(jnp.max(jnp.abs(mu_a - mu_e)))
     print(f"exact GP rmse:  {rmse_e:.4f}")
-    print(f"FAGP rmse:      {rmse_a:.4f}   (n=24 eigenvalues, M=24 solve)")
+    print(f"FAGP rmse:      {rmse_a:.4f}   (n=24 eigenvalues, M={gp.n_features} solve)")
     print(f"max |mu_fagp - mu_exact| = {gap:.2e}")
     print(f"mean predictive std: {float(jnp.mean(jnp.sqrt(var_a))):.4f}")
     assert abs(rmse_a - rmse_e) < 5e-3

@@ -2,9 +2,22 @@
 
 Paper: Carminati (2024), "Parallel Gaussian Process with Kernel
 Approximation in CUDA" — reimplemented TPU-natively in JAX.
+
+The public session API is the `GP` facade (`core.gp`): one self-describing
+object over fit/predict/update/nlml with the spec baked into the state.
 """
-from . import exact_gp, fagp, mercer
-from .fagp import FAGPConfig, FAGPState, fit, nlml, predict
+from . import exact_gp, fagp, gp, mercer
+from .fagp import (
+    FAGPConfig,
+    FAGPState,
+    GPSpec,
+    fit,
+    fit_update,
+    nlml,
+    predict,
+    predict_mean_var,
+)
+from .gp import GP
 from .mercer import (
     SEKernelParams,
     eigenvalues_1d,

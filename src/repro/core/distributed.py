@@ -17,6 +17,16 @@ At pod scale the data no longer fits one device, so the algorithm becomes:
 
 Everything is pjit + sharding constraints: the all-reduces appear in the
 lowered HLO (verified by the dry-run's collective parse).
+
+API (same self-describing session contract as ``core.fagp``):
+
+    state = fit_distributed(X, y, spec, mesh)       # a normal FAGPState
+    mu, var = predict_distributed(Xs, state, mesh)  # spec baked in
+
+The returned state is interchangeable with a single-device fit — it feeds
+``predict_mean_var``, ``fit_update`` and the ``GP`` facade directly.  The
+split ``fit_distributed(X, y, params, cfg, mesh) -> (u, chol, sqrtlam)``
+form is a one-release deprecation shim.
 """
 from __future__ import annotations
 
@@ -28,8 +38,14 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.parallel import hints
-from . import mercer
-from .fagp import FAGPConfig, get_backend
+from .fagp import (
+    FAGPState,
+    GPSpec,
+    _assemble_scaled_system,
+    _solve_mean_weights,
+    _warn_deprecated,
+    get_backend,
+)
 from .mercer import SEKernelParams, log_eigenvalues_nd, phi_nd
 
 __all__ = ["fit_distributed", "predict_distributed", "lower_fit", "lower_predict"]
@@ -42,7 +58,6 @@ def _fit_fn(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
     M = idx.shape[0]
     sig2 = params.noise**2
     loglam = log_eigenvalues_nd(idx, params)
-    sqrtlam = jnp.exp(0.5 * loglam)
 
     block = N // nblk
     Xb = hints.constrain(X.reshape(nblk, block, -1), (None, "dp", None))
@@ -66,11 +81,11 @@ def _fit_fn(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
         step, (G0, jnp.zeros((M,), X.dtype)), (jnp.arange(nblk), Xb, yb)
     )
 
-    B = jnp.eye(M, dtype=G.dtype) + (sqrtlam[:, None] * G * sqrtlam[None, :]) / sig2
+    B, sqrtlam = _assemble_scaled_system(G, loglam, sig2)
     B = hints.constrain(B, ("model", None))
     chol = jnp.linalg.cholesky(B)
-    u = sqrtlam * jax.scipy.linalg.cho_solve((chol, True), sqrtlam * b) / sig2
-    return u, chol, sqrtlam
+    u = _solve_mean_weights(chol, sqrtlam, b, sig2)
+    return u, chol, sqrtlam, b
 
 
 @partial(jax.jit, static_argnames=("n_max",))
@@ -99,49 +114,118 @@ def _pick_nblk(N: int, M: int, dp: int = 1) -> tuple[int, int]:
     return nblk, N_pad
 
 
-def fit_distributed(X, y, params: SEKernelParams, cfg: FAGPConfig, mesh):
-    """Distributed fit; ``cfg.backend`` selects the per-shard engine via the
-    core.fagp registry: 'jnp' runs the v1 pjit schedule, anything else runs
-    the v2 shard_map schedule with that backend's streaming moments kernel
-    per shard (e.g. 'pallas' = fused phi+gram, Phi never materialized)."""
+def _fit_distributed_spec(X, y, spec: GPSpec, mesh) -> FAGPState:
+    """The actual distributed fit; returns a self-describing FAGPState
+    (Phi/y not stored — they are sharded training data, not serving state)."""
     N, p = X.shape
-    idx_np = cfg.indices(p)
+    params = spec.params
+    idx_np = spec.indices(p)
     idx = jnp.asarray(idx_np)
-    if cfg.backend != "jnp":
+    if spec.backend != "jnp":
         n_chips = _n_chips(mesh)
         N_pad = (N + n_chips - 1) // n_chips * n_chips
         if N_pad != N:
             X = jnp.pad(X, ((0, N_pad - N), (0, 0)))
             y = jnp.pad(y, (0, N_pad - N))
-        aux = get_backend(cfg.backend).prepare(idx_np, cfg.n)
+        aux = get_backend(spec.backend).prepare(idx_np, spec.n)
         with jax.set_mesh(mesh), hints.activate(mesh):
             f = jax.jit(partial(
-                _fit_fn_v2, n_max=cfg.n, nblk=16, mesh=mesh,
+                _fit_fn_v2, n_max=spec.n, nblk=16, mesh=mesh,
                 n_valid=N if N_pad != N else None,
-                backend=cfg.backend, aux=aux,
+                backend=spec.backend, aux=aux,
             ))
-            return f(X, y, params, idx)
-    nblk, N_pad = _pick_nblk(N, idx.shape[0], _dp_size(mesh))
-    if N_pad != N:
-        X = jnp.pad(X, ((0, N_pad - N), (0, 0)))
-        y = jnp.pad(y, (0, N_pad - N))
-    with jax.set_mesh(mesh), hints.activate(mesh):
-        dp = hints.dp_axes(mesh)
-        f = jax.jit(
-            partial(_fit_fn, n_max=cfg.n, nblk=nblk,
-                    n_valid=N if N_pad != N else None),
-            in_shardings=(
-                NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp)),
-                None, None,
-            ),
+            u, chol, sqrtlam, b = f(X, y, params, idx)
+    else:
+        nblk, N_pad = _pick_nblk(N, idx.shape[0], _dp_size(mesh))
+        if N_pad != N:
+            X = jnp.pad(X, ((0, N_pad - N), (0, 0)))
+            y = jnp.pad(y, (0, N_pad - N))
+        with jax.set_mesh(mesh), hints.activate(mesh):
+            dp = hints.dp_axes(mesh)
+            f = jax.jit(
+                partial(_fit_fn, n_max=spec.n, nblk=nblk,
+                        n_valid=N if N_pad != N else None),
+                in_shardings=(
+                    NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp)),
+                    None, None,
+                ),
+            )
+            u, chol, sqrtlam, b = f(X, y, params, idx)
+    loglam = log_eigenvalues_nd(idx, params)
+    return FAGPState(
+        idx=idx, lam=jnp.exp(loglam), sqrtlam=sqrtlam, chol=chol, u=u,
+        params=params, Phi=None, y=None, b=b, spec=spec,
+    )
+
+
+def fit_distributed(X, y, spec, *args):
+    """Distributed fit returning a self-describing :class:`FAGPState`.
+
+    New form: ``fit_distributed(X, y, spec, mesh)``.  ``spec.backend``
+    selects the per-shard engine via the core.fagp registry: 'jnp' runs the
+    v1 pjit schedule, anything else runs the v2 shard_map schedule with that
+    backend's streaming moments kernel per shard (e.g. 'pallas' = fused
+    phi+gram, Phi never materialized).
+
+    Deprecated form ``fit_distributed(X, y, params, cfg, mesh)`` returns the
+    legacy ``(u, chol, sqrtlam)`` tuple for one release.
+    """
+    if isinstance(spec, SEKernelParams):
+        if len(args) != 2:
+            raise TypeError("fit_distributed(X, y, params, cfg, mesh): "
+                            "expected cfg and mesh")
+        cfg, mesh = args
+        _warn_deprecated(
+            "fit_distributed(X, y, params, cfg, mesh)",
+            "merge them with GPSpec.from_parts(params, cfg) and call "
+            "fit_distributed(X, y, spec, mesh), which returns an FAGPState",
         )
-        return f(X, y, params, idx)
+        state = _fit_distributed_spec(X, y, GPSpec.from_parts(spec, cfg), mesh)
+        return state.u, state.chol, state.sqrtlam
+    if len(args) != 1:
+        raise TypeError("fit_distributed(X, y, spec, mesh): expected mesh")
+    return _fit_distributed_spec(X, y, spec, args[0])
 
 
-def predict_distributed(Xs, state_tuple, params, cfg: FAGPConfig, mesh):
-    u, chol, sqrtlam = state_tuple
+def predict_distributed(Xs, state, *args):
+    """Shard-local posterior mean/variance over the mesh.
+
+    New form: ``predict_distributed(Xs, state, mesh)`` with the
+    self-describing state returned by :func:`fit_distributed` (or a
+    single-device ``fit`` — the schedule only needs u/chol/sqrtlam).
+
+    Deprecated form ``predict_distributed(Xs, (u, chol, sqrtlam), params,
+    cfg, mesh)`` still works for one release.
+    """
+    if len(args) == 1:
+        mesh = args[0]
+        if not isinstance(state, FAGPState) or state.spec is None:
+            raise ValueError(
+                "predict_distributed(Xs, state, mesh) needs a self-describing "
+                "FAGPState (from fit_distributed or fit); for the legacy "
+                "(u, chol, sqrtlam) tuple use the deprecated 5-arg form"
+            )
+        spec = state.spec
+        u, chol, sqrtlam = state.u, state.chol, state.sqrtlam
+        params = spec.params
+        idx = state.idx
+        n_max = spec.n
+    elif len(args) == 3:
+        params, cfg, mesh = args
+        _warn_deprecated(
+            "predict_distributed(Xs, state_tuple, params, cfg, mesh)",
+            "fit with fit_distributed(X, y, spec, mesh) and call "
+            "predict_distributed(Xs, state, mesh)",
+        )
+        u, chol, sqrtlam = (
+            (state.u, state.chol, state.sqrtlam)
+            if isinstance(state, FAGPState) else state
+        )
+        idx = jnp.asarray(cfg.indices(Xs.shape[1]))
+        n_max = cfg.n
+    else:
+        raise TypeError("predict_distributed(Xs, state, mesh)")
     N = Xs.shape[0]
-    idx = jnp.asarray(cfg.indices(Xs.shape[1]))
     dpn = _dp_size(mesh)
     N_pad = (N + dpn - 1) // dpn * dpn
     if N_pad != N:
@@ -149,7 +233,7 @@ def predict_distributed(Xs, state_tuple, params, cfg: FAGPConfig, mesh):
     with jax.set_mesh(mesh), hints.activate(mesh):
         dp = hints.dp_axes(mesh)
         f = jax.jit(
-            partial(_predict_fn, n_max=cfg.n),
+            partial(_predict_fn, n_max=n_max),
             in_shardings=(
                 NamedSharding(mesh, P(dp, None)), None, None, None, None, None,
             ),
@@ -178,7 +262,6 @@ def _fit_fn_v2(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
     M = idx.shape[0]
     sig2 = params.noise**2
     loglam = log_eigenvalues_nd(idx, params)
-    sqrtlam = jnp.exp(0.5 * loglam)
     axes = tuple(mesh.axis_names)
     n_chips = int(np.prod([mesh.shape[a] for a in axes]))
     N_l = N // n_chips
@@ -228,10 +311,10 @@ def _fit_fn_v2(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
         check_vma=False,
     )(X.reshape(N, -1), y, params.eps, params.rho)
 
-    B = jnp.eye(M, dtype=G.dtype) + (sqrtlam[:, None] * G * sqrtlam[None, :]) / sig2
+    B, sqrtlam = _assemble_scaled_system(G, loglam, sig2)
     chol = jnp.linalg.cholesky(B)
-    u = sqrtlam * jax.scipy.linalg.cho_solve((chol, True), sqrtlam * b) / sig2
-    return u, chol, sqrtlam
+    u = _solve_mean_weights(chol, sqrtlam, b, sig2)
+    return u, chol, sqrtlam, b
 
 
 def _predict_fn_v2(Xs, u, chol, sqrtlam, params: SEKernelParams, idx, n_max: int,

@@ -6,6 +6,32 @@ inverse of the M x M matrix
 
     Lbar = Lambda^{-1} + Phi^T Sigma_n^{-1} Phi          (M = |index set|)
 
+Public API (one self-describing session; see also ``core.gp.GP``):
+
+    spec  = GPSpec.create(n=8, eps=[0.8, 0.8], noise=0.05)   # one frozen spec
+    state = fit(X, y, spec)          # spec is baked into the state
+    mu, var = predict_mean_var(state, Xs)   # nothing re-passed — ever
+    state = fit_update(state, Xn, yn)
+    loss = nlml(X, y, spec)
+
+``GPSpec`` merges what used to be ``FAGPConfig`` (static expansion choices)
+and ``SEKernelParams`` (differentiable kernel hyperparameters) into one
+frozen pytree: the hyperparameters are data leaves (gradients flow through
+``nlml``), the expansion choices are static metadata (hashable, trigger
+recompilation when changed).  ``fit`` bakes the spec into ``FAGPState``, so
+``predict``/``fit_update``/``predict_mean_var`` derive the index set, n_max,
+backend and block size from the state — a caller can no longer fit with
+``n=12`` and predict with ``n=10`` and silently get wrong features.
+``state.with_spec(...)`` is the explicit escape hatch for swapping the
+execution knobs (backend, block size) at serve time; structural changes
+(n, index set, hyperparameters) are rejected because they are frozen into
+the factorization.
+
+Targets ``y`` may be ``(N,)`` or multi-output ``(N, T)``: all T tasks share
+the one M x M Cholesky factorization (the expensive part) and get per-task
+mean weights ``u`` of shape ``(M, T)`` from one batched triangular solve —
+fitting T tasks costs one fit plus T - 1 extra GEMV-sized solves.
+
 Two mathematically identical posterior evaluation paths are provided:
 
 * ``mode="paper"`` — the literal GEMM chain of Eqs. 11-12, in the paper's
@@ -25,7 +51,10 @@ Two mathematically identical posterior evaluation paths are provided:
 Both paths share ``fit``, which accumulates the two sufficient statistics
 G = Phi^T Phi and b = Phi^T y in one streaming pass — constant memory in N
 (beyond-paper; the paper materializes Phi whole).  Execution is dispatched
-through a small backend registry (``register_backend`` / ``get_backend``):
+through a registry of capability-declaring backends (``register_backend``
+/ ``get_backend``); each backend implements fit/features/mean_var/moments
+and declares what it ``supports`` so unsupported specs are refused with a
+clear error up front instead of crashing deep inside kernel preparation:
 
 * ``backend="jnp"``    — scan over row blocks, pure XLA (any device);
 * ``backend="pallas"`` — the streaming fused-fit kernel
@@ -43,14 +72,22 @@ cannot be formed directly.  We solve the symmetrically-scaled system
 
     B = I + D G D / sigma^2,      D = diag(sqrt(lambda))  (log-space)
 
-with Lbar^{-1} = D B^{-1} D and logdet(Lbar) + logdet(Lambda) = logdet(B).
-B has unit diagonal plus a PSD term (cond(B) bounded by 1 + ||DGD||/sig^2),
-and columns whose sqrt(lambda) underflows contribute an identity row —
-numerically inert, exactly as they should be.
+assembled in exactly one place (``_assemble_scaled_system``) and shared by
+fit, nlml and the distributed schedules, with Lbar^{-1} = D B^{-1} D and
+logdet(Lbar) + logdet(Lambda) = logdet(B).  B has unit diagonal plus a PSD
+term (cond(B) bounded by 1 + ||DGD||/sig^2), and columns whose sqrt(lambda)
+underflows contribute an identity row — numerically inert, exactly as they
+should be.
+
+Deprecated (one release, shims emit ``DeprecationWarning``): the split
+``fit(X, y, params, cfg)`` / ``predict(state, Xs, cfg)`` /
+``nlml(X, y, params, idx, n_max)`` signatures that re-took configuration at
+every call site.  See README §Migration.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -70,6 +107,7 @@ __all__ = [
     "FAGPConfig",
     "FAGPState",
     "FitBackend",
+    "GPSpec",
     "available_backends",
     "build_features",
     "fit",
@@ -82,9 +120,22 @@ __all__ = [
 ]
 
 
+def _warn_deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated and will be removed in the next release; {new}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class FAGPConfig:
     """Static configuration of the Mercer expansion.
+
+    Retained as the static half of ``GPSpec`` (workload tables in
+    ``configs/fagp.py`` carry it without hyperparameters); new code should
+    construct a ``GPSpec`` and never pass an ``FAGPConfig`` to the fit /
+    predict entry points.
 
     n:          eigenvalues per input dimension (paper's n).
     index_set:  'full' (paper; M = n^p) | 'total_degree' | 'hyperbolic_cross'.
@@ -105,20 +156,197 @@ class FAGPConfig:
         return make_index_set(self.index_set, self.n, p, self.degree)
 
 
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("eps", "rho", "noise"),
+    meta_fields=("n", "index_set", "degree", "block_rows", "store_train", "backend"),
+)
+@dataclasses.dataclass(frozen=True)
+class GPSpec:
+    """The one self-describing specification of a GP session.
+
+    Merges the former ``FAGPConfig`` (static Mercer-expansion choices) and
+    ``SEKernelParams`` (kernel hyperparameters) so a session is described by
+    exactly one object, baked into ``FAGPState`` at fit time.
+
+    Pytree layout: ``eps``/``rho``/``noise`` are data leaves — ``nlml`` is
+    differentiable through them (build the loss with
+    ``dataclasses.replace(spec, eps=..., ...)``); everything else is static
+    metadata and participates in jit cache keys.
+
+    eps:    per-dimension inverse length scales, shape (p,). Paper's eps_j.
+    rho:    per-dimension global scale factors, shape (p,). Paper's rho_j.
+    noise:  observation noise std sigma_n (scalar).
+    n:      eigenvalues per input dimension (paper's n).
+    index_set / degree: multi-index truncation (see ``mercer.make_index_set``).
+    block_rows: row-block size for the streaming moment accumulation.
+    store_train: keep (Phi, y) in the fitted state (needed for mode='paper').
+                 Default False — the serving-oriented choice (the old
+                 ``FAGPConfig`` defaulted to True; see README §Migration).
+    backend: execution backend name in the registry ('jnp' | 'pallas').
+    """
+
+    eps: jax.Array
+    rho: jax.Array
+    noise: jax.Array
+    n: int
+    index_set: IndexSetKind = "full"
+    degree: Optional[int] = None
+    block_rows: int = 4096
+    store_train: bool = False
+    backend: str = "jnp"
+
+    @staticmethod
+    def create(
+        n: int,
+        eps,
+        rho=2.0,
+        noise=1e-2,
+        *,
+        index_set: IndexSetKind = "full",
+        degree: Optional[int] = None,
+        block_rows: int = 4096,
+        store_train: bool = False,
+        backend: str = "jnp",
+    ) -> "GPSpec":
+        """Convenience constructor with scalar broadcasting (mirrors
+        ``SEKernelParams.create``): ``eps`` fixes p, scalars broadcast."""
+        eps = jnp.atleast_1d(jnp.asarray(eps, jnp.float32))
+        rho = jnp.broadcast_to(jnp.asarray(rho, jnp.float32), eps.shape)
+        return GPSpec(
+            eps=eps, rho=rho, noise=jnp.asarray(noise, jnp.float32),
+            n=int(n), index_set=index_set, degree=degree,
+            block_rows=block_rows, store_train=store_train, backend=backend,
+        )
+
+    @staticmethod
+    def from_parts(params: SEKernelParams, cfg: FAGPConfig) -> "GPSpec":
+        """Merge a legacy (params, cfg) pair into one spec."""
+        return GPSpec(
+            eps=params.eps, rho=params.rho, noise=params.noise,
+            n=cfg.n, index_set=cfg.index_set, degree=cfg.degree,
+            block_rows=cfg.block_rows, store_train=cfg.store_train,
+            backend=cfg.backend,
+        )
+
+    @property
+    def p(self) -> int:
+        return self.eps.shape[0]
+
+    @property
+    def params(self) -> SEKernelParams:
+        return SEKernelParams(eps=self.eps, rho=self.rho, noise=self.noise)
+
+    @property
+    def cfg(self) -> FAGPConfig:
+        return FAGPConfig(
+            n=self.n, index_set=self.index_set, degree=self.degree,
+            block_rows=self.block_rows, store_train=self.store_train,
+            backend=self.backend,
+        )
+
+    def indices(self, p: Optional[int] = None) -> np.ndarray:
+        return make_index_set(self.index_set, self.n, p or self.p, self.degree)
+
+    def replace(self, **overrides) -> "GPSpec":
+        return dataclasses.replace(self, **overrides)
+
+    def describe(self) -> str:
+        """Short human-readable summary for error messages."""
+        return (
+            f"GPSpec(n={self.n}, index_set={self.index_set!r}, "
+            f"degree={self.degree}, p={self.p}, backend={self.backend!r}, "
+            f"store_train={self.store_train})"
+        )
+
+
+# spec fields frozen into the factorization: with_spec / deprecated-cfg calls
+# may not change these on a fitted state (idx, lam, chol all depend on them)
+_STRUCTURAL_FIELDS = ("n", "index_set", "degree")
+_HYPER_FIELDS = ("eps", "rho", "noise")
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class FAGPState:
-    """Fitted FAGP sufficient statistics (scaled-system form)."""
+    """Fitted FAGP sufficient statistics (scaled-system form).
+
+    Self-describing: ``spec`` carries everything a consumer needs to derive
+    features, backend and block sizes — no call site re-passes configuration.
+    """
 
     idx: jax.Array            # (M, p) multi-index set (0-based degrees)
     lam: jax.Array            # (M,)   product eigenvalues (may underflow; info only)
     sqrtlam: jax.Array        # (M,)   exp(0.5 log lambda) — the scaling D
     chol: jax.Array           # (M, M) lower Cholesky of B = I + D G D / sigma^2
-    u: jax.Array              # (M,)   Lbar^{-1} Phi^T y / sigma^2  (mean weights)
+    u: jax.Array              # (M,) or (M, T) mean weights Lbar^{-1} Phi^T y / sigma^2
     params: SEKernelParams
     Phi: Optional[jax.Array]  # (N, M) train features   (store_train only)
-    y: Optional[jax.Array]    # (N,)   train targets    (store_train only)
-    b: Optional[jax.Array] = None  # (M,) raw moment Phi^T y — enables fit_update
+    y: Optional[jax.Array]    # (N,) or (N, T) train targets (store_train only)
+    b: Optional[jax.Array] = None    # (M,) / (M, T) raw moment Phi^T y — fit_update
+    spec: Optional[GPSpec] = None    # baked at fit time; None only on legacy states
+
+    @property
+    def n_features(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def n_tasks(self) -> int:
+        return 1 if self.u.ndim == 1 else self.u.shape[1]
+
+    def with_spec(self, spec: Optional[GPSpec] = None, **overrides) -> "FAGPState":
+        """Escape hatch: swap execution knobs (backend, block_rows) at serve
+        time, or attach a spec to a legacy state.
+
+        Validates that the requested spec regenerates *exactly* the index set
+        and hyperparameters this state was factorized with — structural
+        changes (n, index_set, degree, eps, rho, noise) are rejected because
+        chol/u/lam are frozen functions of them.
+        """
+        if spec is None:
+            if self.spec is None:
+                raise ValueError(
+                    "state has no baked spec to override; pass a full GPSpec: "
+                    "state.with_spec(spec)"
+                )
+            spec = dataclasses.replace(self.spec, **overrides)
+        elif overrides:
+            raise TypeError("pass either a full spec or keyword overrides, not both")
+
+        _check_spec_regenerates_idx(self, spec)
+        for f in _HYPER_FIELDS:
+            if not np.array_equal(
+                np.asarray(getattr(spec, f)), np.asarray(getattr(self.params, f))
+            ):
+                raise ValueError(
+                    f"spec/state mismatch: {f} differs from the value this state "
+                    f"was fitted with; hyperparameters are frozen into the "
+                    f"factorization — refit (or fit_update) instead"
+                )
+        if spec.store_train and self.Phi is None:
+            raise ValueError(
+                "with_spec cannot enable store_train on an already-fitted state "
+                "(the training features were never stored); refit with "
+                "store_train=True"
+            )
+        _check_backend_support(spec)
+        return dataclasses.replace(self, spec=spec, params=spec.params)
+
+
+def _check_spec_regenerates_idx(state: "FAGPState", spec: "GPSpec") -> None:
+    """Raise unless ``spec`` regenerates exactly the index set baked into the
+    state — the structural half of every spec/state compatibility check."""
+    idx_np = np.asarray(state.idx)
+    want = spec.indices(idx_np.shape[1])
+    if want.shape != idx_np.shape or not np.array_equal(want, idx_np):
+        fitted = state.spec.describe() if state.spec is not None else (
+            f"an index set of shape {idx_np.shape}"
+        )
+        raise ValueError(
+            f"spec/state mismatch: this state was fitted with {fitted}, but "
+            f"{spec.describe()} generates a different index set; n/index_set/"
+            f"degree are frozen into the factorization — refit instead"
+        )
 
 
 def build_features(X: jax.Array, params: SEKernelParams, idx: jax.Array, n_max: int) -> jax.Array:
@@ -126,40 +354,87 @@ def build_features(X: jax.Array, params: SEKernelParams, idx: jax.Array, n_max: 
     return phi_nd(X, idx, params, n_max)
 
 
-def _accumulate_moments(X, y, params, idx, n_max: int, block_rows: int,
-                        row_mask=None):
-    """Streaming G = Phi^T Phi, b = Phi^T y over row blocks (O(M^2) memory)."""
+def _tscale(d: jax.Array, v: jax.Array) -> jax.Array:
+    """Scale the leading (M) axis of v by d, for v of shape (M,) or (M, T)."""
+    return d[:, None] * v if v.ndim == 2 else d * v
+
+
+def _row_weight(mi: jax.Array, v: jax.Array) -> jax.Array:
+    """Apply a per-row mask/weight mi (N,) to v of shape (N,) or (N, T)."""
+    return mi[:, None] * v if v.ndim == 2 else mi * v
+
+
+def _assemble_scaled_system(G: jax.Array, loglam: jax.Array, sig2) -> tuple:
+    """The single home of the f32 log-space scaled system (shared by fit,
+    nlml and the distributed schedules):
+
+        B = I + D G D / sigma^2,      D = diag(exp(0.5 log lambda))
+
+    Returns (B, sqrtlam).  Assembling from log eigenvalues keeps columns
+    whose lambda underflows f32 as inert identity rows instead of NaNs.
+    """
+    M = G.shape[0]
+    sqrtlam = jnp.exp(0.5 * loglam)
+    B = jnp.eye(M, dtype=G.dtype) + (sqrtlam[:, None] * G * sqrtlam[None, :]) / sig2
+    return B, sqrtlam
+
+
+def _solve_mean_weights(chol, sqrtlam, b, sig2):
+    """u = Lbar^{-1} b / sig2 = D B^{-1} D b / sig2, batched over task
+    columns when b is (M, T) — the T tasks share the one Cholesky factor."""
+    return _tscale(
+        sqrtlam, jax.scipy.linalg.cho_solve((chol, True), _tscale(sqrtlam, b))
+    ) / sig2
+
+
+def _block_scan_moments(X, y, feats_fn, M: int, block_rows: int,
+                        row_mask=None, want_gram: bool = True):
+    """The one home of the streaming row-block scaffolding (pad, reshape,
+    mask, scan): G = Phi^T Phi and b = Phi^T y accumulated block by block,
+    O(M^2) live memory.  ``feats_fn(Xi) -> (block, M)`` supplies the feature
+    tiles (jnp reference or a Pallas kernel); ``want_gram=False`` skips the
+    Gram GEMM when only b is needed.  y may be (N,) or (N, T)."""
     N = X.shape[0]
-    M = idx.shape[0]
     nblk = max(1, (N + block_rows - 1) // block_rows)
     pad = nblk * block_rows - N
     Xp = jnp.pad(X, ((0, pad), (0, 0)))
-    yp = jnp.pad(y, (0, pad))
+    yp = jnp.pad(y, ((0, pad),) + ((0, 0),) * (y.ndim - 1))
     valid = jnp.ones((N,), X.dtype) if row_mask is None else row_mask.astype(X.dtype)
     mask = jnp.pad(valid, (0, pad))
 
     Xb = Xp.reshape(nblk, block_rows, -1)
-    yb = yp.reshape(nblk, block_rows)
+    yb = yp.reshape((nblk, block_rows) + y.shape[1:])
     mb = mask.reshape(nblk, block_rows)
 
     def step(carry, blk):
         G, b = carry
         Xi, yi, mi = blk
-        Phi_i = build_features(Xi, params, idx, n_max) * mi[:, None]
-        G = G + Phi_i.T @ Phi_i
-        b = b + Phi_i.T @ (yi * mi)
+        Phi_i = feats_fn(Xi) * mi[:, None]
+        if want_gram:
+            G = G + Phi_i.T @ Phi_i
+        b = b + Phi_i.T @ _row_weight(mi, yi)
         return (G, b), None
 
-    init = (jnp.zeros((M, M), X.dtype), jnp.zeros((M,), X.dtype))
+    init = (jnp.zeros((M, M), X.dtype), jnp.zeros((M,) + y.shape[1:], X.dtype))
     (G, b), _ = jax.lax.scan(step, init, (Xb, yb, mb))
     return G, b
+
+
+def _accumulate_moments(X, y, params, idx, n_max: int, block_rows: int,
+                        row_mask=None):
+    """Streaming G = Phi^T Phi, b = Phi^T y over row blocks (O(M^2) memory).
+
+    y may be (N,) or multi-output (N, T); b comes back (M,) or (M, T)."""
+    return _block_scan_moments(
+        X, y, lambda Xi: build_features(Xi, params, idx, n_max),
+        idx.shape[0], block_rows, row_mask=row_mask,
+    )
 
 
 def _finish_fit(B, b, loglam, sqrtlam, sig2, idx, params, Phi, y):
     """Shared fit epilogue: M x M Cholesky solve -> FAGPState."""
     chol = jnp.linalg.cholesky(B)
-    # u = Lbar^{-1} b / sig2 = D B^{-1} D b / sig2
-    u = sqrtlam * jax.scipy.linalg.cho_solve((chol, True), sqrtlam * b) / sig2
+    u = _solve_mean_weights(chol, sqrtlam, b, sig2)
     return FAGPState(
         idx=idx, lam=jnp.exp(loglam), sqrtlam=sqrtlam, chol=chol, u=u,
         params=params, Phi=Phi, y=y, b=b,
@@ -170,23 +445,42 @@ def _finish_fit(B, b, loglam, sqrtlam, sig2, idx, params, Phi, y):
 def _fit(X, y, params, idx, n_max: int, block_rows: int, store_train: bool):
     sig2 = params.noise**2
     loglam = log_eigenvalues_nd(idx, params)
-    sqrtlam = jnp.exp(0.5 * loglam)
     G, b = _accumulate_moments(X, y, params, idx, n_max, block_rows)
-    M = idx.shape[0]
-    B = jnp.eye(M, dtype=G.dtype) + (sqrtlam[:, None] * G * sqrtlam[None, :]) / sig2
+    B, sqrtlam = _assemble_scaled_system(G, loglam, sig2)
     Phi = build_features(X, params, idx, n_max) if store_train else None
     return _finish_fit(B, b, loglam, sqrtlam, sig2, idx, params,
                        Phi, y if store_train else None)
 
 
-@partial(jax.jit, static_argnames=("n_max", "store_train"))
-def _fit_pallas(X, y, params, idx, S, n_max: int, store_train: bool):
+def _pallas_streamed_bt(X, Y, consts, S, n_max: int, block_rows: int):
+    """Per-task moment vectors b = Phi^T Y for multi-output fits on the
+    Pallas backend: feature tiles come from the hermite_phi kernel one row
+    block at a time, so only a (block_rows, M) tile is ever live."""
+    from repro.kernels import ops as kops
+
+    _, b = _block_scan_moments(
+        X, Y, lambda Xi: kops.hermite_phi(Xi, consts, S, n_max=n_max),
+        S.shape[1], block_rows, want_gram=False,
+    )
+    return b
+
+
+@partial(jax.jit, static_argnames=("n_max", "store_train", "block_rows"))
+def _fit_pallas(X, y, params, idx, S, n_max: int, store_train: bool,
+                block_rows: int = 4096):
     """fit() on the streaming fused Pallas kernel: feature tiles are
     generated on the fly inside the Gram accumulation (kernels/phi_gram), so
     Phi never exists in HBM and peak live memory is O(M^2) in N — one HBM
     pass over X instead of the materialized path's two passes plus an N x M
     intermediate.  (store_train=True additionally materializes Phi for
-    mode='paper' prediction, reintroducing the N x M buffer by request.)"""
+    mode='paper' prediction, reintroducing the N x M buffer by request.)
+
+    Multi-output y (N, T): the shared scaled Gram B comes from the fused
+    kernel exactly as in the single-output case; the per-task moment vectors
+    are streamed block-wise through the hermite_phi kernel.  Known cost: this
+    is a SECOND pass over X that regenerates the feature tiles (still O(M T)
+    live memory, never an N x M buffer) — teaching phi_gram to accumulate
+    (M, T) moments in its one pass is the planned follow-up."""
     from repro.kernels import ops as kops
     from repro.kernels import ref as kref
 
@@ -194,17 +488,26 @@ def _fit_pallas(X, y, params, idx, S, n_max: int, store_train: bool):
     loglam = log_eigenvalues_nd(idx, params)
     sqrtlam = jnp.exp(0.5 * loglam)
     consts = kref.phi_consts(params.eps, params.rho)
-    B, b = kops.fused_fit_moments(X, y, consts, S, sqrtlam, sig2, n_max=n_max)
+    y0 = y if y.ndim == 1 else y[:, 0]
+    B, b = kops.fused_fit_moments(X, y0, consts, S, sqrtlam, sig2, n_max=n_max)
+    if y.ndim == 2:
+        b = _pallas_streamed_bt(X, y, consts, S, n_max, block_rows)
     Phi = kops.hermite_phi(X, consts, S, n_max=n_max) if store_train else None
     return _finish_fit(B, b, loglam, sqrtlam, sig2, idx, params,
                        Phi, y if store_train else None)
 
 
 # ---------------------------------------------------------------------------
-# Backend registry — one dispatch point shared by fit / predict_mean_var /
-# core.distributed (per-shard moments), so a new execution backend plugs in
-# by registering one FitBackend instead of editing every call site.
+# Backend registry — capability-declaring plugins, one dispatch point shared
+# by fit / predict_mean_var / core.distributed (per-shard moments).  A new
+# execution backend plugs in by registering one FitBackend; ``supports``
+# lets it refuse specs it cannot run with a clear error at the call boundary
+# instead of crashing deep inside ``prepare`` or a kernel launch.
 # ---------------------------------------------------------------------------
+
+
+def _supports_everything(spec: "GPSpec") -> Optional[str]:
+    return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -213,12 +516,14 @@ class FitBackend:
 
     prepare:  (idx_np, n) -> static auxiliary carried to every call (e.g. the
               one-hot selection matrix for the Pallas kernels); None if unused.
-    fit:      (X, y, params, idx, aux, cfg) -> FAGPState.
+    fit:      (X, y, idx, aux, spec) -> FAGPState (spec baked by the caller).
     features: (X, params, idx, aux, n_max) -> (N, M) feature matrix.
     mean_var: (state, Xs, aux, n_max) -> (mu, var), the serving path.
     moments:  (X, y, params, idx, aux, n_max, block_rows, mask) -> (G, b)
               raw sufficient statistics — the per-shard unit of work for
               core.distributed (partial sums, psum'd before the solve).
+    supports: (spec) -> None if the backend can run the spec, else a short
+              reason string surfaced in the ValueError raised at dispatch.
     """
 
     name: str
@@ -227,6 +532,7 @@ class FitBackend:
     features: Callable[..., jax.Array]
     mean_var: Callable[..., tuple]
     moments: Callable[..., tuple]
+    supports: Callable[["GPSpec"], Optional[str]] = _supports_everything
 
 
 _BACKENDS: dict[str, FitBackend] = {}
@@ -247,6 +553,18 @@ def get_backend(name: str) -> FitBackend:
 
 def available_backends() -> list[str]:
     return sorted(_BACKENDS)
+
+
+def _check_backend_support(spec: "GPSpec") -> FitBackend:
+    """Resolve spec.backend and enforce its declared capabilities."""
+    backend = get_backend(spec.backend)
+    reason = backend.supports(spec)
+    if reason is not None:
+        raise ValueError(
+            f"backend {spec.backend!r} does not support {spec.describe()}: "
+            f"{reason} (registered backends: {available_backends()})"
+        )
+    return backend
 
 
 # prepare() results memoized per (idx array, backend, n): predict_mean_var /
@@ -292,8 +610,9 @@ def _jnp_moments(X, y, params, idx, aux, n_max, block_rows, mask=None):
                                row_mask=mask)
 
 
-def _jnp_fit(X, y, params, idx, aux, cfg: "FAGPConfig"):
-    return _fit(X, y, params, idx, cfg.n, cfg.block_rows, cfg.store_train)
+def _jnp_fit(X, y, idx, aux, spec: "GPSpec"):
+    return _fit(X, y, spec.params, idx, spec.n, spec.block_rows,
+                spec.store_train)
 
 
 def _jnp_mean_var(state, Xs, aux, n_max):
@@ -301,6 +620,22 @@ def _jnp_mean_var(state, Xs, aux, n_max):
 
 
 # --- pallas backend (fused TPU kernels; interpret mode on CPU) -------------
+
+# The kernels unroll the scaled Hermite recurrence n_max times inside the
+# kernel body; past this depth the unrolled program is impractical (and the
+# eigenvalues have underflown f32 for ~25 columns already).
+_PALLAS_MAX_N = 64
+
+
+def _pallas_supports(spec: "GPSpec") -> Optional[str]:
+    if spec.n > _PALLAS_MAX_N:
+        return (
+            f"n={spec.n} exceeds the unrolled Hermite recurrence depth the "
+            f"kernels are built for (max {_PALLAS_MAX_N}); use backend='jnp'"
+        )
+    if spec.index_set not in ("full", "total_degree", "hyperbolic_cross"):
+        return f"unknown index set {spec.index_set!r}"
+    return None
 
 
 def _pallas_prepare(idx_np: np.ndarray, n: int):
@@ -329,8 +664,9 @@ def _pallas_moments(X, y, params, idx, aux, n_max, block_rows, mask=None):
     )
 
 
-def _pallas_fit(X, y, params, idx, aux, cfg: "FAGPConfig"):
-    return _fit_pallas(X, y, params, idx, aux, cfg.n, cfg.store_train)
+def _pallas_fit(X, y, idx, aux, spec: "GPSpec"):
+    return _fit_pallas(X, y, spec.params, idx, aux, spec.n, spec.store_train,
+                       spec.block_rows)
 
 
 def _pallas_mean_var(state, Xs, aux, n_max):
@@ -344,16 +680,97 @@ register_backend(FitBackend(
 register_backend(FitBackend(
     name="pallas", prepare=_pallas_prepare, fit=_pallas_fit,
     features=_pallas_features, mean_var=_pallas_mean_var,
-    moments=_pallas_moments,
+    moments=_pallas_moments, supports=_pallas_supports,
 ))
 
 
-def fit(X: jax.Array, y: jax.Array, params: SEKernelParams, cfg: FAGPConfig) -> FAGPState:
-    backend = get_backend(cfg.backend)
-    idx_np = cfg.indices(X.shape[1])
+# ---------------------------------------------------------------------------
+# Public entry points — spec-first, with one-release deprecation shims for
+# the split (params, cfg) signatures
+# ---------------------------------------------------------------------------
+
+
+def _check_p(spec: GPSpec, p: int) -> None:
+    if spec.p != p:
+        raise ValueError(
+            f"spec/input mismatch: {spec.describe()} was built for p={spec.p} "
+            f"input dimensions but the data has p={p}"
+        )
+
+
+def _fit_with_spec(X: jax.Array, y: jax.Array, spec: GPSpec) -> FAGPState:
+    _check_p(spec, X.shape[1])
+    backend = _check_backend_support(spec)
+    idx_np = spec.indices(X.shape[1])
     idx = jnp.asarray(idx_np)
-    aux = backend.prepare(idx_np, cfg.n)
-    return backend.fit(X, y, params, idx, aux, cfg)
+    aux = backend.prepare(idx_np, spec.n)
+    state = backend.fit(X, y, idx, aux, spec)
+    return dataclasses.replace(state, spec=spec)
+
+
+def fit(X: jax.Array, y: jax.Array, spec: GPSpec, cfg: Optional[FAGPConfig] = None) -> FAGPState:
+    """Fit the FAGP posterior; the spec is baked into the returned state.
+
+    y: (N,) targets, or (N, T) for T tasks sharing one factorization.
+
+    Deprecated form ``fit(X, y, params, cfg)`` still works for one release.
+    """
+    if cfg is not None or isinstance(spec, SEKernelParams):
+        if isinstance(spec, GPSpec):
+            raise TypeError(
+                "fit(X, y, spec) takes no cfg — the spec already carries the "
+                "whole configuration"
+            )
+        if cfg is None:
+            raise TypeError("fit(X, y, params, cfg): missing cfg")
+        _warn_deprecated(
+            "fit(X, y, params, cfg)",
+            "merge them with GPSpec.from_parts(params, cfg) and call "
+            "fit(X, y, spec)",
+        )
+        spec = GPSpec.from_parts(spec, cfg)
+    return _fit_with_spec(X, y, spec)
+
+
+def _resolve_spec(state: FAGPState, cfg: Optional[FAGPConfig], call: str) -> GPSpec:
+    """Derive the session spec from the state; reconcile a deprecated cfg.
+
+    A cfg that structurally disagrees with the fitted spec raises instead of
+    silently evaluating the wrong features (the n=12-fit / n=10-predict bug
+    class this redesign removes).
+    """
+    if cfg is None:
+        if state.spec is None:
+            raise ValueError(
+                "this state has no baked GPSpec (produced by a deprecated or "
+                "internal path); attach one with state.with_spec(spec) or pass "
+                "the deprecated cfg argument"
+            )
+        return state.spec
+    _warn_deprecated(
+        f"{call} with a cfg argument",
+        f"the spec is baked into the state — drop the cfg and call {call}",
+    )
+    if state.spec is None:
+        # legacy state: the cfg is all we have, but it must regenerate the
+        # index set the state was factorized with — a wrong n here would
+        # silently evaluate garbage features otherwise
+        spec = GPSpec.from_parts(state.params, cfg)
+        _check_spec_regenerates_idx(state, spec)
+        return spec
+    for f in _STRUCTURAL_FIELDS:
+        if getattr(cfg, f) != getattr(state.spec, f):
+            raise ValueError(
+                f"spec/state mismatch: state was fitted with "
+                f"{state.spec.describe()} but the cfg passed to {call} has "
+                f"{f}={getattr(cfg, f)!r}; this would silently evaluate the "
+                f"wrong features — drop the cfg argument"
+            )
+    # execution knobs may legitimately differ (that was the only valid use
+    # of re-passing cfg); honour them without touching the structure
+    return dataclasses.replace(
+        state.spec, backend=cfg.backend, block_rows=cfg.block_rows
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -404,12 +821,13 @@ def _update_state(state: FAGPState, Phi_new: jax.Array, y_new: jax.Array):
         B = state.chol @ state.chol.T + W.T @ W
         chol = jnp.linalg.cholesky(B)
     b = state.b + Phi_new.T @ y_new
-    u = state.sqrtlam * jax.scipy.linalg.cho_solve((chol, True), state.sqrtlam * b) / sig2
+    u = _solve_mean_weights(chol, state.sqrtlam, b, sig2)
     return chol, b, u
 
 
 def fit_update(
-    state: FAGPState, X_new: jax.Array, y_new: jax.Array, cfg: FAGPConfig
+    state: FAGPState, X_new: jax.Array, y_new: jax.Array,
+    cfg: Optional[FAGPConfig] = None,
 ) -> FAGPState:
     """Absorb new observations into a fitted state without refitting.
 
@@ -418,13 +836,24 @@ def fit_update(
     ingest observation microbatches at O(M^2) cost each (vs O(N M^2) refit).
     Exactly equivalent to refitting on the concatenated data (same math, up
     to f32 rounding); tests pin update-then-predict == refit-then-predict.
+
+    Everything (backend, index set, block size) derives from the baked spec;
+    the ``cfg`` argument is a one-release deprecation shim.
     """
     if state.b is None:
         raise ValueError("fit_update needs a state produced by fit() >= this "
                          "version (missing the raw moment vector b)")
-    backend = get_backend(cfg.backend)
-    aux = _backend_aux(backend, state.idx, cfg.n)
-    Phi_new = backend.features(X_new, state.params, state.idx, aux, cfg.n)
+    if y_new.ndim != state.u.ndim or (
+        y_new.ndim == 2 and y_new.shape[1] != state.u.shape[1]
+    ):
+        raise ValueError(
+            f"fit_update task mismatch: state holds "
+            f"{state.n_tasks} task(s) but y_new has shape {y_new.shape}"
+        )
+    spec = _resolve_spec(state, cfg, "fit_update(state, X_new, y_new)")
+    backend = _check_backend_support(spec)
+    aux = _backend_aux(backend, state.idx, spec.n)
+    Phi_new = backend.features(X_new, state.params, state.idx, aux, spec.n)
     chol, b, u = _update_state(state, Phi_new, y_new)
     Phi = y = None
     if state.Phi is not None:
@@ -456,9 +885,10 @@ def _predict_fused(state: FAGPState, Xs: jax.Array, n_max: int):
 def _predict_paper(state: FAGPState, Xs: jax.Array, n_max: int):
     """Literal Eqs. 11-12 GEMM chain in the paper's operation order.
 
-    Requires store_train=True.  Forms the N x N approximate inverse
-    (Sigma_n^{-1} - Sigma_n^{-1} Phi Lbar^{-1} Phi^T Sigma_n^{-1}) exactly as
-    the CUDA implementation does, then W (N* x N), then mu*, Sigma*.
+    Requires a state fitted with store_train=True.  Forms the N x N
+    approximate inverse (Sigma_n^{-1} - Sigma_n^{-1} Phi Lbar^{-1} Phi^T
+    Sigma_n^{-1}) exactly as the CUDA implementation does, then W (N* x N),
+    then mu*, Sigma*.
     """
     Phi, y = state.Phi, state.y
     N = Phi.shape[0]
@@ -478,14 +908,27 @@ def _predict_paper(state: FAGPState, Xs: jax.Array, n_max: int):
     return mu, cov
 
 
-def predict(state: FAGPState, Xs: jax.Array, cfg: FAGPConfig, mode: str = "fused"):
-    """Posterior mean (N*,) and covariance (N*, N*) at Xs."""
+def predict(state: FAGPState, Xs: jax.Array, cfg: Optional[FAGPConfig] = None,
+            mode: str = "fused"):
+    """Posterior mean and covariance (N*, N*) at Xs.
+
+    Mean is (N*,) or (N*, T) for multi-output states; the covariance is
+    shared across tasks (one kernel, one noise level).  Everything derives
+    from the spec baked into the state; the ``cfg`` argument is a
+    one-release deprecation shim.
+    """
+    spec = _resolve_spec(state, cfg, "predict(state, Xs)")
     if mode == "fused":
-        return _predict_fused(state, Xs, cfg.n)
+        return _predict_fused(state, Xs, spec.n)
     if mode == "paper":
         if state.Phi is None:
-            raise ValueError("mode='paper' requires FAGPConfig(store_train=True)")
-        return _predict_paper(state, Xs, cfg.n)
+            raise ValueError(
+                f"mode='paper' needs the training features stored in the "
+                f"fitted state, but this state was fitted with "
+                f"{spec.replace(store_train=False).describe()} — refit with a "
+                f"spec that sets store_train=True"
+            )
+        return _predict_paper(state, Xs, spec.n)
     raise ValueError(f"unknown mode {mode!r}")
 
 
@@ -512,12 +955,18 @@ def _mean_var_jnp(state: FAGPState, Xs, n_max: int):
     return mu, jnp.sum(V * V, axis=0)
 
 
-def predict_mean_var(state: FAGPState, Xs: jax.Array, cfg: FAGPConfig):
+def predict_mean_var(state: FAGPState, Xs: jax.Array,
+                     cfg: Optional[FAGPConfig] = None):
     """Posterior mean and *marginal variance* (N*,) — the production serving
-    path: never materializes the N* x N* covariance (kernels/diag_quad)."""
-    backend = get_backend(cfg.backend)
-    aux = _backend_aux(backend, state.idx, cfg.n)
-    return backend.mean_var(state, Xs, aux, cfg.n)
+    path: never materializes the N* x N* covariance (kernels/diag_quad).
+
+    Mean is (N*,) or (N*, T) for multi-output states; the variance is shared
+    across tasks.  Backend and n_max derive from the baked spec; ``cfg`` is
+    a one-release deprecation shim."""
+    spec = _resolve_spec(state, cfg, "predict_mean_var(state, Xs)")
+    backend = _check_backend_support(spec)
+    aux = _backend_aux(backend, state.idx, spec.n)
+    return backend.mean_var(state, Xs, aux, spec.n)
 
 
 # ---------------------------------------------------------------------------
@@ -526,28 +975,53 @@ def predict_mean_var(state: FAGPState, Xs: jax.Array, cfg: FAGPConfig):
 
 
 @partial(jax.jit, static_argnames=("n_max", "block_rows"))
-def nlml(X, y, params: SEKernelParams, idx, n_max: int, block_rows: int = 4096):
-    """NLML of the decomposed-kernel GP, O(N M^2 + M^3).
-
-    Matrix determinant lemma + Woodbury on (Phi Lambda Phi^T + sigma^2 I):
-        logdet = logdet(Lbar) + logdet(Lambda) + N log sigma^2
-        quad   = (y^T y - b^T Lbar^{-1} b) / ... with b = Phi^T y / sigma^2
-    Differentiable in (eps, rho, noise) for gradient-based hyperparameter
-    learning (see examples/hyperparam_learning.py).
-    """
+def _nlml(X, y, params: SEKernelParams, idx, n_max: int, block_rows: int):
     N = X.shape[0]
+    T = 1 if y.ndim == 1 else y.shape[1]
     sig2 = params.noise**2
     loglam = log_eigenvalues_nd(idx, params)
-    sqrtlam = jnp.exp(0.5 * loglam)
     G, b = _accumulate_moments(X, y, params, idx, n_max, block_rows)
-    M = idx.shape[0]
-    B = jnp.eye(M, dtype=G.dtype) + (sqrtlam[:, None] * G * sqrtlam[None, :]) / sig2
+    B, sqrtlam = _assemble_scaled_system(G, loglam, sig2)
     chol = jnp.linalg.cholesky(B)
-    bs = sqrtlam * b / sig2                      # D b / sig2
+    bs = _tscale(sqrtlam, b) / sig2              # D b / sig2, per task column
     w = jax.scipy.linalg.cho_solve((chol, True), bs)
     # y^T Kinv y = y^T y/sig2 - b^T Lbar^{-1} b / sig2^2
-    #            = y^T y/sig2 - (Db/sig2)^T B^{-1} (Db/sig2) = ... - dot(bs, w)
-    quad = jnp.dot(y, y) / sig2 - jnp.dot(bs, w)
-    # logdet(K) = logdet(B) + N log sig2   (determinant lemma, scaled form)
+    #            = y^T y/sig2 - (Db/sig2)^T B^{-1} (Db/sig2), summed over tasks
+    quad = jnp.sum(y * y) / sig2 - jnp.sum(bs * w)
+    # logdet(K) = logdet(B) + N log sig2   (determinant lemma, scaled form);
+    # the T tasks share K, so the logdet terms appear once per task
     logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol))) + N * jnp.log(sig2)
-    return 0.5 * (quad + logdet + N * jnp.log(2.0 * jnp.pi))
+    return 0.5 * (quad + T * (logdet + N * jnp.log(2.0 * jnp.pi)))
+
+
+def nlml(X, y, spec: GPSpec, idx=None, n_max: Optional[int] = None,
+         block_rows: Optional[int] = None):
+    """NLML of the decomposed-kernel GP, O(N M^2 + M^3).
+
+    Matrix determinant lemma + Woodbury on (Phi Lambda Phi^T + sigma^2 I),
+    assembled through the same scaled system as ``fit``.  Differentiable in
+    the spec's (eps, rho, noise) leaves for gradient-based hyperparameter
+    learning (``GP.optimize``, examples/hyperparam_learning.py).  For
+    multi-output y (N, T) the tasks share one factorization and the result
+    is the sum of the per-task NLMLs.
+
+    Deprecated form ``nlml(X, y, params, idx, n_max, block_rows)`` still
+    works for one release.
+    """
+    if idx is not None or n_max is not None or isinstance(spec, SEKernelParams):
+        if isinstance(spec, GPSpec):
+            raise TypeError(
+                "nlml(X, y, spec) takes no idx/n_max — the spec already "
+                "carries the whole configuration"
+            )
+        if idx is None or n_max is None:
+            raise TypeError("nlml(X, y, params, idx, n_max): missing idx/n_max")
+        _warn_deprecated(
+            "nlml(X, y, params, idx, n_max)",
+            "build a GPSpec and call nlml(X, y, spec)",
+        )
+        return _nlml(X, y, spec, idx, n_max, block_rows or 4096)
+    _check_p(spec, X.shape[1])
+    idx_j = jnp.asarray(spec.indices(X.shape[1]))
+    return _nlml(X, y, spec.params, idx_j, spec.n,
+                 block_rows or spec.block_rows)

@@ -1,0 +1,157 @@
+"""`GP` — one facade over the whole predictive-posterior pipeline.
+
+The paper's contribution is a single pipeline (Eqs. 8-12) run end-to-end on
+an accelerator; this module exposes it as a single self-describing session
+object instead of six free functions that each re-take configuration:
+
+    from repro.core.gp import GP, GPSpec
+
+    spec = GPSpec.create(n=8, eps=[0.8, 0.8], noise=0.05)
+    gp = GP.fit(X, y, spec)              # spec baked into the session
+    mu, cov = gp.predict(Xs)             # nothing re-passed
+    mu, var = gp.mean_var(Xs)            # serving path (marginal variance)
+    gp = gp.update(X_new, y_new)         # rank-k ingest, no refit
+    loss = gp.nlml(X, y)                 # NLML under the session's spec
+    gp = GP.optimize(X, y, spec)         # gradient NLML hyperparameter fit
+
+    gp.with_spec(backend="pallas")       # serve-time backend swap (validated)
+
+`GP` is an immutable pytree wrapping the fitted :class:`FAGPState`; every
+method returns results or a new `GP`.  Multi-output targets ``y`` of shape
+``(N, T)`` share one M x M Cholesky factorization with per-task mean
+weights — ``predict``/``mean_var`` then return ``(N*, T)`` means and a
+shared variance.  `serve_gp`, `core.distributed` and the benchmarks all
+speak this one interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import fagp
+from .fagp import FAGPState, GPSpec
+
+__all__ = ["GP", "GPSpec"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GP:
+    """A fitted GP session: the state (with its spec baked in) plus methods.
+
+    Construct with :meth:`fit`, :meth:`optimize`, or :meth:`from_state`; the
+    default constructor is for internal use.
+    """
+
+    state: FAGPState
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def fit(cls, X: jax.Array, y: jax.Array, spec: GPSpec) -> "GP":
+        """Fit the posterior; y is (N,) or (N, T) for T tasks sharing one
+        factorization.  The spec is baked into the session."""
+        return cls(state=fagp.fit(X, y, spec))
+
+    @classmethod
+    def from_state(cls, state: FAGPState) -> "GP":
+        """Wrap an existing fitted state (e.g. from ``fit_distributed``)."""
+        if state.spec is None:
+            raise ValueError(
+                "state has no baked GPSpec; attach one with "
+                "state.with_spec(spec) before wrapping it in a GP"
+            )
+        return cls(state=state)
+
+    @classmethod
+    def optimize(
+        cls,
+        X: jax.Array,
+        y: jax.Array,
+        spec: GPSpec,
+        *,
+        steps: int = 100,
+        lr: float = 5e-2,
+        callback: Optional[Callable[[int, float, GPSpec], None]] = None,
+    ) -> "GP":
+        """Gradient-based NLML hyperparameter learning (the paper's declared
+        future work), then fit at the learned hyperparameters.
+
+        Minimizes ``nlml(X, y, spec)/N`` over (eps, rho, noise) in log space
+        with AdamW; the expansion structure (n, index set, backend) stays
+        fixed.  ``callback(step, nlml_per_row, current_spec)`` is invoked
+        every 10% of the run for progress reporting.
+        """
+        from repro import optim
+
+        hp = {
+            "log_eps": jnp.log(spec.eps),
+            "log_rho": jnp.log(spec.rho),
+            "log_noise": jnp.log(spec.noise),
+        }
+
+        def with_hp(spec, hp):
+            return dataclasses.replace(
+                spec,
+                eps=jnp.exp(hp["log_eps"]),
+                rho=jnp.exp(hp["log_rho"]),
+                noise=jnp.exp(hp["log_noise"]),
+            )
+
+        # X, y passed as arguments (not closed over) so jit traces them as
+        # inputs instead of baking the dataset into the executable
+        def loss(hp, X, y):
+            return fagp.nlml(X, y, with_hp(spec, hp)) / X.shape[0]
+
+        ocfg = optim.AdamWConfig(lr=lr, weight_decay=0.0, clip_norm=10.0)
+        ostate = optim.init(hp, ocfg)
+        loss_grad = jax.jit(jax.value_and_grad(loss))
+        every = max(1, steps // 10)
+        for step in range(steps):
+            val, g = loss_grad(hp, X, y)
+            hp, ostate, _ = optim.apply_updates(hp, g, ostate, ocfg)
+            if callback is not None and (step % every == 0 or step == steps - 1):
+                callback(step, float(val), with_hp(spec, hp))
+        return cls.fit(X, y, with_hp(spec, hp))
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def spec(self) -> GPSpec:
+        return self.state.spec
+
+    @property
+    def n_features(self) -> int:
+        """M, the number of Mercer features (size of the fitted system)."""
+        return self.state.n_features
+
+    @property
+    def n_tasks(self) -> int:
+        return self.state.n_tasks
+
+    # -- the pipeline -------------------------------------------------------
+
+    def predict(self, Xs: jax.Array, *, mode: str = "fused"):
+        """Posterior mean and full covariance at Xs (paper Eqs. 11-12)."""
+        return fagp.predict(self.state, Xs, mode=mode)
+
+    def mean_var(self, Xs: jax.Array):
+        """Posterior mean and marginal variance — the serving path."""
+        return fagp.predict_mean_var(self.state, Xs)
+
+    def update(self, X_new: jax.Array, y_new: jax.Array) -> "GP":
+        """Absorb new observations via the rank-k Cholesky update."""
+        return GP(state=fagp.fit_update(self.state, X_new, y_new))
+
+    def nlml(self, X: jax.Array, y: jax.Array):
+        """NLML of (X, y) under this session's spec."""
+        return fagp.nlml(X, y, self.spec)
+
+    def with_spec(self, spec: Optional[GPSpec] = None, **overrides) -> "GP":
+        """Serve-time escape hatch: swap execution knobs (backend,
+        block_rows); structural changes are rejected (see
+        :meth:`FAGPState.with_spec`)."""
+        return GP(state=self.state.with_spec(spec, **overrides))

@@ -1,11 +1,15 @@
 """GP serving loop: microbatched posterior queries + online observation ingest.
 
-The production shape of the paper's workload: a fitted FAGP posterior serves
-``predict_mean_var`` queries while new observations stream in.  Queries are
-served in fixed-size microbatches (one compiled shape, padded tail) so
-latency is bounded and there is exactly one XLA executable per backend;
-observations are absorbed with ``fit_update`` — a rank-k Cholesky update,
-O(k M^2) per ingest batch, never a refit over the accumulated N.
+The production shape of the paper's workload: a fitted GP session serves
+``mean_var`` queries while new observations stream in.  Queries are served
+in fixed-size microbatches (one compiled shape, padded tail) so latency is
+bounded and there is exactly one XLA executable per backend; observations
+are absorbed with ``GP.update`` — a rank-k Cholesky update, O(k M^2) per
+ingest batch, never a refit over the accumulated N.
+
+The whole loop speaks the self-describing ``GP`` facade: the spec (index
+set, backend, block size) is baked into the session at fit time, so neither
+the query path nor the ingest path re-passes configuration.
 
   PYTHONPATH=src python -m repro.launch.serve_gp --backend pallas \\
       --n-train 2048 --p 2 --n 8 --rounds 4 --update-size 64 \\
@@ -20,17 +24,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fagp, mercer
+from repro.core import fagp
+from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
 
 __all__ = ["serve_gp", "microbatched_mean_var"]
 
 
-def microbatched_mean_var(state, Xs, cfg, *, microbatch: int):
-    """predict_mean_var in fixed-size microbatches (padded tail).
+def microbatched_mean_var(gp, Xs, *, microbatch: int):
+    """``mean_var`` in fixed-size microbatches (padded tail).
 
-    Returns (mu, var, per_batch_seconds).  Every call sees the same (B, p)
-    shape, so the serving path compiles exactly once per state shape."""
+    ``gp`` is a :class:`GP` session (a spec-carrying :class:`FAGPState` is
+    also accepted and wrapped).  Returns (mu, var, per_batch_seconds).
+    Every call sees the same (B, p) shape, so the serving path compiles
+    exactly once per state shape."""
+    if isinstance(gp, fagp.FAGPState):
+        gp = GP.from_state(gp)
     Nq = Xs.shape[0]
     nb = max(1, (Nq + microbatch - 1) // microbatch)
     pad = nb * microbatch - Nq
@@ -39,7 +48,7 @@ def microbatched_mean_var(state, Xs, cfg, *, microbatch: int):
     for i in range(nb):
         blk = jax.lax.dynamic_slice_in_dim(Xp, i * microbatch, microbatch)
         t0 = time.perf_counter()
-        mu, var = fagp.predict_mean_var(state, blk, cfg)
+        mu, var = gp.mean_var(blk)
         jax.block_until_ready((mu, var))
         times.append(time.perf_counter() - t0)
         mus.append(np.asarray(mu))
@@ -62,9 +71,8 @@ def serve_gp(
     noise: float = 0.05,
     seed: int = 0,
 ) -> dict:
-    cfg = fagp.FAGPConfig(n=n, store_train=False, backend=backend)
-    params = mercer.SEKernelParams.create(
-        jnp.full((p,), 0.8), jnp.full((p,), 2.0), noise
+    spec = GPSpec.create(
+        n, eps=jnp.full((p,), 0.8), rho=2.0, noise=noise, backend=backend,
     )
     # n_train initial rows + rounds * update_size streamed rows, one pool
     total = n_train + rounds * update_size
@@ -72,8 +80,8 @@ def serve_gp(
     X0, y0 = X_all[:n_train], y_all[:n_train]
 
     t0 = time.perf_counter()
-    state = fagp.fit(X0, y0, params, cfg)
-    jax.block_until_ready(state.u)
+    gp = GP.fit(X0, y0, spec)
+    jax.block_until_ready(gp.state.u)
     t_fit = time.perf_counter() - t0
 
     Xq = Xs[:queries] if queries <= Xs.shape[0] else Xs
@@ -84,11 +92,11 @@ def serve_gp(
         lo = n_train + r * update_size
         Xn, yn = X_all[lo : lo + update_size], y_all[lo : lo + update_size]
         t0 = time.perf_counter()
-        state = fagp.fit_update(state, Xn, yn, cfg)
-        jax.block_until_ready(state.u)
+        gp = gp.update(Xn, yn)
+        jax.block_until_ready(gp.state.u)
         t_update = time.perf_counter() - t0
 
-        mu, var, times = microbatched_mean_var(state, Xq, cfg, microbatch=microbatch)
+        mu, var, times = microbatched_mean_var(gp, Xq, microbatch=microbatch)
         rmse = float(np.sqrt(np.mean((mu - ysq) ** 2)))
         times.sort()
         history.append({
@@ -99,7 +107,7 @@ def serve_gp(
             "queries_per_s": Xq.shape[0] / sum(times),
             "rmse": rmse,
         })
-    return {"fit_s": t_fit, "rounds": history, "M": int(state.idx.shape[0])}
+    return {"fit_s": t_fit, "rounds": history, "M": gp.n_features}
 
 
 def main():

@@ -1,4 +1,6 @@
-"""System tests for the FAGP posterior (paper Eqs. 8-12)."""
+"""System tests for the FAGP posterior (paper Eqs. 8-12), spec-first API."""
+import dataclasses
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -18,27 +20,29 @@ def _params(p, eps=0.8, rho=2.0, noise=0.05):
     return mercer.SEKernelParams.create(jnp.full((p,), eps), jnp.full((p,), rho), noise)
 
 
+def _spec(p, n, eps=0.8, rho=2.0, noise=0.05, **kw):
+    return fagp.GPSpec.create(
+        n, eps=jnp.full((p,), eps), rho=jnp.full((p,), rho), noise=noise, **kw
+    )
+
+
 class TestPosterior:
     def test_fagp_matches_exact_gp_1d(self):
         """FAGP -> exact GP as n grows (the Joukov-Kulic claim FAGP rests on)."""
         X, y = _data(N=80, p=1)
         Xs = jnp.linspace(-0.9, 0.9, 33)[:, None]
-        params = _params(1)
-        mu_e, cov_e = exact_gp.predict(exact_gp.fit(X, y, params), Xs)
-        cfg = fagp.FAGPConfig(n=40)
-        st = fagp.fit(X, y, params, cfg)
-        mu_a, cov_a = fagp.predict(st, Xs, cfg)
+        mu_e, cov_e = exact_gp.predict(exact_gp.fit(X, y, _params(1)), Xs)
+        st = fagp.fit(X, y, _spec(1, 40))
+        mu_a, cov_a = fagp.predict(st, Xs)
         np.testing.assert_allclose(np.asarray(mu_a), np.asarray(mu_e), atol=2e-3)
         np.testing.assert_allclose(np.asarray(cov_a), np.asarray(cov_e), atol=2e-3)
 
     def test_fagp_matches_exact_gp_2d(self):
         X, y = _data(N=120, p=2)
         Xs, _ = _data(N=25, p=2, seed=7)
-        params = _params(2)
-        mu_e, cov_e = exact_gp.predict(exact_gp.fit(X, y, params), Xs)
-        cfg = fagp.FAGPConfig(n=16)
-        st = fagp.fit(X, y, params, cfg)
-        mu_a, cov_a = fagp.predict(st, Xs, cfg)
+        mu_e, cov_e = exact_gp.predict(exact_gp.fit(X, y, _params(2)), Xs)
+        st = fagp.fit(X, y, _spec(2, 16))
+        mu_a, cov_a = fagp.predict(st, Xs)
         np.testing.assert_allclose(np.asarray(mu_a), np.asarray(mu_e), atol=5e-3)
         np.testing.assert_allclose(np.asarray(cov_a), np.asarray(cov_e), atol=5e-3)
 
@@ -46,11 +50,9 @@ class TestPosterior:
         """Literal Eq. 11-12 GEMM chain == weight-space simplification."""
         X, y = _data(N=50, p=2)
         Xs, _ = _data(N=17, p=2, seed=3)
-        params = _params(2)
-        cfg = fagp.FAGPConfig(n=8, store_train=True)
-        st = fagp.fit(X, y, params, cfg)
-        mu_f, cov_f = fagp.predict(st, Xs, cfg, mode="fused")
-        mu_p, cov_p = fagp.predict(st, Xs, cfg, mode="paper")
+        st = fagp.fit(X, y, _spec(2, 8, store_train=True))
+        mu_f, cov_f = fagp.predict(st, Xs, mode="fused")
+        mu_p, cov_p = fagp.predict(st, Xs, mode="paper")
         # paper mode forms the N x N approximate inverse in f32; a few ulps of
         # extra rounding vs the fused path is expected (part of why fused wins)
         np.testing.assert_allclose(np.asarray(mu_p), np.asarray(mu_f), atol=5e-3)
@@ -61,12 +63,12 @@ class TestPosterior:
         X, y = _data(N=40, p=1)
         Xs = jnp.linspace(-0.8, 0.8, 9)[:, None]
         params = _params(1)
-        cfg = fagp.FAGPConfig(n=12)
-        st = fagp.fit(X, y, params, cfg)
-        mu_a, cov_a = fagp.predict(st, Xs, cfg)
+        spec = _spec(1, 12)
+        st = fagp.fit(X, y, spec)
+        mu_a, cov_a = fagp.predict(st, Xs)
 
-        Phi = np.asarray(mercer.phi_nd(X, st.idx, params, cfg.n))
-        Phis = np.asarray(mercer.phi_nd(Xs, st.idx, params, cfg.n))
+        Phi = np.asarray(mercer.phi_nd(X, st.idx, params, spec.n))
+        Phis = np.asarray(mercer.phi_nd(Xs, st.idx, params, spec.n))
         lam = np.asarray(st.lam)
         sig2 = float(params.noise) ** 2
         Kapprox = Phi * lam @ Phi.T + sig2 * np.eye(X.shape[0])
@@ -80,11 +82,9 @@ class TestPosterior:
     def test_streaming_blocks_invariant(self):
         """Moment accumulation is block-size independent."""
         X, y = _data(N=100, p=2)
-        params = _params(2)
         outs = []
         for block in (7, 32, 100, 256):
-            cfg = fagp.FAGPConfig(n=6, block_rows=block, store_train=False)
-            st = fagp.fit(X, y, params, cfg)
+            st = fagp.fit(X, y, _spec(2, 6, block_rows=block))
             outs.append(np.asarray(st.u))
         for o in outs[1:]:
             np.testing.assert_allclose(o, outs[0], rtol=2e-4, atol=1e-5)
@@ -92,10 +92,8 @@ class TestPosterior:
     def test_predictive_cov_psd_and_symmetric(self):
         X, y = _data(N=70, p=2)
         Xs, _ = _data(N=20, p=2, seed=5)
-        params = _params(2)
-        cfg = fagp.FAGPConfig(n=8)
-        st = fagp.fit(X, y, params, cfg)
-        _, cov = fagp.predict(st, Xs, cfg)
+        st = fagp.fit(X, y, _spec(2, 8))
+        _, cov = fagp.predict(st, Xs)
         cov = np.asarray(cov)
         np.testing.assert_allclose(cov, cov.T, atol=1e-5)
         assert np.linalg.eigvalsh(cov).min() > -1e-4
@@ -104,13 +102,12 @@ class TestPosterior:
         """Hyperbolic-cross with far fewer columns stays close to full grid."""
         X, y = _data(N=150, p=3)
         Xs, _ = _data(N=20, p=3, seed=9)
-        params = _params(3, eps=0.6)
-        cfg_full = fagp.FAGPConfig(n=6, index_set="full")
-        cfg_hc = fagp.FAGPConfig(n=6, index_set="hyperbolic_cross", degree=12)
-        mu_full, _ = fagp.predict(fagp.fit(X, y, params, cfg_full), Xs, cfg_full)
-        mu_hc, _ = fagp.predict(fagp.fit(X, y, params, cfg_hc), Xs, cfg_hc)
-        M_full = cfg_full.indices(3).shape[0]
-        M_hc = cfg_hc.indices(3).shape[0]
+        spec_full = _spec(3, 6, eps=0.6, index_set="full")
+        spec_hc = _spec(3, 6, eps=0.6, index_set="hyperbolic_cross", degree=12)
+        mu_full, _ = fagp.predict(fagp.fit(X, y, spec_full), Xs)
+        mu_hc, _ = fagp.predict(fagp.fit(X, y, spec_hc), Xs)
+        M_full = spec_full.indices(3).shape[0]
+        M_hc = spec_hc.indices(3).shape[0]
         assert M_hc < M_full / 3  # 56 vs 216 columns at n=6, p=3
         np.testing.assert_allclose(np.asarray(mu_hc), np.asarray(mu_full), atol=0.05)
 
@@ -118,21 +115,21 @@ class TestPosterior:
 class TestNLML:
     def test_fagp_nlml_matches_exact(self):
         X, y = _data(N=60, p=1)
-        params = _params(1)
-        idx = jnp.asarray(mercer.full_grid(40, 1))
-        v_fagp = float(fagp.nlml(X, y, params, idx, 40))
-        v_exact = float(exact_gp.nlml(X, y, params))
+        v_fagp = float(fagp.nlml(X, y, _spec(1, 40)))
+        v_exact = float(exact_gp.nlml(X, y, _params(1)))
         assert abs(v_fagp - v_exact) < 0.05 * max(1.0, abs(v_exact))
 
     def test_nlml_differentiable(self):
+        """Gradients flow through the spec's hyperparameter leaves."""
         X, y = _data(N=50, p=2)
-        idx = jnp.asarray(mercer.full_grid(6, 2))
+        spec0 = _spec(2, 6)
 
         def loss(log_eps, log_rho, log_noise):
-            params = mercer.SEKernelParams(
-                eps=jnp.exp(log_eps), rho=jnp.exp(log_rho), noise=jnp.exp(log_noise)
+            spec = dataclasses.replace(
+                spec0, eps=jnp.exp(log_eps), rho=jnp.exp(log_rho),
+                noise=jnp.exp(log_noise),
             )
-            return fagp.nlml(X, y, params, idx, 6)
+            return fagp.nlml(X, y, spec)
 
         g = jax.grad(loss, argnums=(0, 1, 2))(
             jnp.zeros(2), jnp.log(jnp.full((2,), 2.0)), jnp.log(jnp.asarray(0.05))
@@ -142,9 +139,8 @@ class TestNLML:
 
     def test_nlml_prefers_true_noise_scale(self):
         X, y = _data(N=120, p=1, noise=0.1)
-        idx = jnp.asarray(mercer.full_grid(24, 1))
         vals = {
-            s: float(fagp.nlml(X, y, _params(1, noise=s), idx, 24))
+            s: float(fagp.nlml(X, y, _spec(1, 24, noise=s)))
             for s in (0.01, 0.1, 1.0)
         }
         assert vals[0.1] == min(vals.values())
@@ -154,24 +150,19 @@ class TestPallasBackend:
     def test_pallas_fit_matches_jnp(self):
         X, y = _data(N=150, p=2)
         Xs, _ = _data(N=30, p=2, seed=11)
-        params = _params(2)
-        cfg_j = fagp.FAGPConfig(n=8, backend="jnp")
-        cfg_p = fagp.FAGPConfig(n=8, backend="pallas")
-        st_j = fagp.fit(X, y, params, cfg_j)
-        st_p = fagp.fit(X, y, params, cfg_p)
+        st_j = fagp.fit(X, y, _spec(2, 8, backend="jnp"))
+        st_p = fagp.fit(X, y, _spec(2, 8, backend="pallas"))
         np.testing.assert_allclose(np.asarray(st_p.u), np.asarray(st_j.u), rtol=5e-3, atol=1e-4)
-        mu_j, var_j = fagp.predict_mean_var(st_j, Xs, cfg_j)
-        mu_p, var_p = fagp.predict_mean_var(st_p, Xs, cfg_p)
+        mu_j, var_j = fagp.predict_mean_var(st_j, Xs)
+        mu_p, var_p = fagp.predict_mean_var(st_p, Xs)
         np.testing.assert_allclose(np.asarray(mu_p), np.asarray(mu_j), rtol=1e-3, atol=1e-4)
         np.testing.assert_allclose(np.asarray(var_p), np.asarray(var_j), rtol=5e-3, atol=1e-6)
 
     def test_mean_var_consistent_with_full_cov(self):
         X, y = _data(N=90, p=2)
         Xs, _ = _data(N=21, p=2, seed=13)
-        params = _params(2)
-        cfg = fagp.FAGPConfig(n=8)
-        st = fagp.fit(X, y, params, cfg)
-        mu_a, cov = fagp.predict(st, Xs, cfg)
-        mu_b, var = fagp.predict_mean_var(st, Xs, cfg)
+        st = fagp.fit(X, y, _spec(2, 8))
+        mu_a, cov = fagp.predict(st, Xs)
+        mu_b, var = fagp.predict_mean_var(st, Xs)
         np.testing.assert_allclose(np.asarray(mu_b), np.asarray(mu_a), rtol=1e-5, atol=1e-6)
         np.testing.assert_allclose(np.asarray(var), np.diag(np.asarray(cov)), rtol=1e-4, atol=1e-7)

@@ -1,0 +1,324 @@
+"""Redesign-hazard tests for the self-describing GP session API.
+
+Pins the contracts of the `GP` facade / `GPSpec` redesign:
+  1. spec/state mismatches raise (never silently evaluate wrong features);
+  2. deprecated (params, cfg) shims keep working, emit exactly one
+     DeprecationWarning per call, and agree with the new API;
+  3. multi-output (N, T) fits share one factorization and match T
+     independent single-output fits on both backends;
+  4. the public surface of `repro.core.gp` is snapshot so future PRs cannot
+     change it silently;
+  5. backends declare capabilities: an unsupported spec is refused with a
+     clear error at dispatch, not a crash deep in kernel preparation.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fagp, mercer
+from repro.core.gp import GP, GPSpec
+from repro.data import make_gp_dataset
+
+
+def _problem(N=200, p=2, n=6, seed=0, **kw):
+    X, y, Xs, ys = make_gp_dataset(N, p, seed=seed)
+    spec = GPSpec.create(n, eps=[0.8] * p, rho=2.0, noise=0.05, **kw)
+    return X, y, Xs, spec
+
+
+class TestPublicSurface:
+    def test_public_api_snapshot(self):
+        """The session API is exactly GP + GPSpec; widening or renaming it is
+        a deliberate act, not a drive-by."""
+        import repro.core.gp as gpmod
+
+        assert sorted(gpmod.__all__) == ["GP", "GPSpec"]
+
+    def test_facade_method_surface(self):
+        expected = {"fit", "from_state", "optimize", "predict", "mean_var",
+                    "update", "nlml", "with_spec"}
+        assert expected <= {m for m in dir(GP) if not m.startswith("_")}
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_fit_predict_roundtrip(self, backend):
+        """The acceptance gate: GP.fit(...).predict(Xs) round-trips with
+        nothing re-passed, on both backends."""
+        X, y, Xs, spec = _problem(backend=backend)
+        gp = GP.fit(X, y, spec)
+        mu, cov = gp.predict(Xs)
+        mu2, var = gp.mean_var(Xs)
+        assert mu.shape == (Xs.shape[0],) and cov.shape == (Xs.shape[0],) * 2
+        np.testing.assert_allclose(np.asarray(mu2), np.asarray(mu),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(var), np.diag(np.asarray(cov)),
+                                   rtol=1e-3, atol=1e-5)
+
+
+class TestSpecStateMismatch:
+    def test_deprecated_cfg_with_wrong_n_raises(self):
+        """The bug class the redesign removes: fit with n=6, predict with a
+        cfg saying n=8 must raise, not silently use wrong features."""
+        X, y, Xs, spec = _problem(n=6)
+        st = fagp.fit(X, y, spec)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            with pytest.raises(ValueError, match="spec/state mismatch"):
+                fagp.predict_mean_var(st, Xs, fagp.FAGPConfig(n=8))
+            with pytest.raises(ValueError, match="spec/state mismatch"):
+                fagp.predict(st, Xs, fagp.FAGPConfig(n=8))
+            with pytest.raises(ValueError, match="spec/state mismatch"):
+                fagp.fit_update(st, Xs, jnp.zeros(Xs.shape[0]),
+                                fagp.FAGPConfig(n=8))
+
+    def test_with_spec_rejects_structural_change(self):
+        X, y, _, spec = _problem()
+        gp = GP.fit(X, y, spec)
+        with pytest.raises(ValueError, match="spec/state mismatch"):
+            gp.with_spec(n=spec.n + 2)
+        with pytest.raises(ValueError, match="spec/state mismatch"):
+            gp.with_spec(index_set="hyperbolic_cross")
+        with pytest.raises(ValueError, match="spec/state mismatch"):
+            gp.with_spec(noise=jnp.asarray(0.5, jnp.float32))
+
+    def test_with_spec_rejects_enabling_store_train(self):
+        X, y, _, spec = _problem()
+        gp = GP.fit(X, y, spec)  # store_train defaults to False
+        with pytest.raises(ValueError, match="store_train"):
+            gp.with_spec(store_train=True)
+
+    def test_with_spec_backend_swap_is_valid_and_agrees(self):
+        """The one legitimate serve-time use: swap execution backends."""
+        X, y, Xs, spec = _problem()
+        gp = GP.fit(X, y, spec)
+        mu_j, var_j = gp.mean_var(Xs)
+        gp_p = gp.with_spec(backend="pallas")
+        assert gp_p.spec.backend == "pallas"
+        mu_p, var_p = gp_p.mean_var(Xs)
+        np.testing.assert_allclose(np.asarray(mu_p), np.asarray(mu_j),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(var_p), np.asarray(var_j),
+                                   rtol=5e-3, atol=1e-6)
+
+    def test_wrong_input_dim_raises(self):
+        X, y, _, spec = _problem(p=2)
+        X3 = jnp.concatenate([X, X[:, :1]], axis=1)
+        with pytest.raises(ValueError, match="p=2"):
+            fagp.fit(X3, y, spec)
+        with pytest.raises(ValueError, match="p=2"):
+            fagp.nlml(X3, y, spec)
+
+    def test_specless_state_with_wrong_cfg_raises(self):
+        """A legacy spec-less state driven through the deprecated cfg path
+        still validates: a cfg whose n cannot regenerate the fitted index
+        set raises instead of evaluating garbage features."""
+        X, y, Xs, spec = _problem(n=6)
+        st = fagp._fit(X, y, spec.params, jnp.asarray(spec.indices(2)),
+                       spec.n, spec.block_rows, False)
+        assert st.spec is None
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            with pytest.raises(ValueError, match="spec/state mismatch"):
+                fagp.predict_mean_var(st, Xs, fagp.FAGPConfig(n=8))
+
+    def test_spec_plus_cfg_is_a_type_error(self):
+        """Passing BOTH a GPSpec and a cfg must not silently merge them."""
+        X, y, _, spec = _problem()
+        with pytest.raises(TypeError, match="takes no cfg"):
+            fagp.fit(X, y, spec, fagp.FAGPConfig(n=4))
+        with pytest.raises(TypeError, match="takes no idx"):
+            fagp.nlml(X, y, spec, jnp.asarray(spec.indices(2)), 4)
+
+    def test_specless_state_needs_explicit_attach(self):
+        """Internal/legacy states without a baked spec are rejected by the
+        spec-first entry points and accepted after with_spec."""
+        X, y, Xs, spec = _problem()
+        st = fagp._fit(X, y, spec.params, jnp.asarray(spec.indices(2)),
+                       spec.n, spec.block_rows, False)
+        assert st.spec is None
+        with pytest.raises(ValueError, match="no baked GPSpec"):
+            fagp.predict_mean_var(st, Xs)
+        mu, _ = fagp.predict_mean_var(st.with_spec(spec), Xs)
+        mu_ref, _ = GP.fit(X, y, spec).mean_var(Xs)
+        np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_ref),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestDeprecatedShims:
+    def _legacy(self):
+        X, y, Xs, spec = _problem()
+        return X, y, Xs, spec, spec.params, spec.cfg
+
+    @pytest.mark.parametrize("call", ["fit", "predict", "predict_mean_var",
+                                      "fit_update", "nlml"])
+    def test_shim_warns_exactly_once_and_matches(self, call):
+        X, y, Xs, spec, params, cfg = self._legacy()
+        st_new = fagp.fit(X, y, spec)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            if call == "fit":
+                out = fagp.fit(X, y, params, cfg).u
+                ref = st_new.u
+            elif call == "predict":
+                out = fagp.predict(st_new, Xs, cfg)[0]
+                ref = fagp.predict(st_new, Xs)[0]
+            elif call == "predict_mean_var":
+                out = fagp.predict_mean_var(st_new, Xs, cfg)[0]
+                ref = fagp.predict_mean_var(st_new, Xs)[0]
+            elif call == "fit_update":
+                out = fagp.fit_update(st_new, Xs, jnp.zeros(Xs.shape[0]), cfg).u
+                ref = fagp.fit_update(st_new, Xs, jnp.zeros(Xs.shape[0])).u
+            else:
+                idx = jnp.asarray(spec.indices(2))
+                out = fagp.nlml(X, y, params, idx, spec.n)
+                ref = fagp.nlml(X, y, spec)
+        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 1, f"{call}: expected exactly one warning, got {rec}"
+        assert "deprecated" in str(dep[0].message)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_new_api_is_warning_free(self):
+        X, y, Xs, spec = _problem()
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            gp = GP.fit(X, y, spec)
+            gp.predict(Xs)
+            gp.mean_var(Xs)
+            gp.update(Xs, jnp.zeros(Xs.shape[0]))
+            gp.nlml(X, y)
+        ours = [w for w in rec if "will be removed in the next release"
+                in str(w.message)]
+        assert ours == []
+
+
+class TestMultiOutput:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_matches_per_task_fits(self, backend):
+        """(N, T) fit == T independent fits (shared Cholesky, per-task u)."""
+        X, y, Xs, spec = _problem(backend=backend)
+        tasks = [y, 2.0 * y, y - 0.5]
+        Y = jnp.stack(tasks, axis=1)
+        gp = GP.fit(X, Y, spec)
+        assert gp.n_tasks == 3
+        mu, var = gp.mean_var(Xs)
+        assert mu.shape == (Xs.shape[0], 3) and var.shape == (Xs.shape[0],)
+        for t, yt in enumerate(tasks):
+            mu_t, var_t = GP.fit(X, yt, spec).mean_var(Xs)
+            np.testing.assert_allclose(np.asarray(mu[:, t]), np.asarray(mu_t),
+                                       rtol=1e-3, atol=1e-4)
+            # variance is task-independent (one kernel, one noise level)
+            np.testing.assert_allclose(np.asarray(var), np.asarray(var_t),
+                                       rtol=1e-4, atol=1e-6)
+
+    def test_update_matches_refit(self):
+        X, y, Xs, spec = _problem()
+        Y = jnp.stack([y, -y], axis=1)
+        Xn, yn, *_ = make_gp_dataset(32, 2, seed=9)
+        Yn = jnp.stack([yn, -yn], axis=1)
+        up = GP.fit(X, Y, spec).update(Xn, Yn)
+        re = GP.fit(jnp.concatenate([X, Xn]), jnp.concatenate([Y, Yn]), spec)
+        np.testing.assert_allclose(np.asarray(up.state.u),
+                                   np.asarray(re.state.u),
+                                   rtol=5e-3, atol=1e-4)
+
+    def test_update_task_count_mismatch_raises(self):
+        X, y, _, spec = _problem()
+        gp = GP.fit(X, jnp.stack([y, -y], axis=1), spec)
+        Xn, yn, *_ = make_gp_dataset(8, 2, seed=3)
+        with pytest.raises(ValueError, match="task"):
+            gp.update(Xn, yn)
+
+    def test_nlml_sums_per_task(self):
+        X, y, _, spec = _problem()
+        Y = jnp.stack([y, 1.5 * y], axis=1)
+        total = float(fagp.nlml(X, Y, spec))
+        per = sum(float(fagp.nlml(X, Y[:, t], spec)) for t in range(2))
+        assert abs(total - per) < 1e-2 * max(1.0, abs(per))
+
+    def test_full_cov_predict_shares_cov(self):
+        X, y, Xs, spec = _problem()
+        Y = jnp.stack([y, 2.0 * y], axis=1)
+        mu, cov = GP.fit(X, Y, spec).predict(Xs)
+        _, cov_single = GP.fit(X, y, spec).predict(Xs)
+        assert mu.shape == (Xs.shape[0], 2)
+        np.testing.assert_allclose(np.asarray(cov), np.asarray(cov_single),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestBackendCapabilities:
+    def test_pallas_refuses_deep_recurrence(self):
+        """supports() refuses at dispatch with a clear error instead of
+        crashing inside kernel preparation."""
+        X, y, _, _ = _problem(p=1, n=4)
+        deep = GPSpec.create(fagp._PALLAS_MAX_N + 1, eps=[0.8],
+                             backend="pallas")
+        with pytest.raises(ValueError, match="does not support"):
+            fagp.fit(X, y, deep)
+
+    def test_restricted_plugin_refused_cleanly(self):
+        """A third-party backend declaring a capability limit is refused at
+        the call boundary (the registry honours supports())."""
+        base = fagp.get_backend("jnp")
+        limited = dataclasses.replace(
+            base, name="limited",
+            supports=lambda spec: (
+                None if spec.index_set == "full"
+                else f"index_set={spec.index_set!r} not implemented"
+            ),
+        )
+        fagp.register_backend(limited)
+        try:
+            X, y, _, _ = _problem()
+            ok = GPSpec.create(4, eps=[0.8, 0.8], backend="limited")
+            fagp.fit(X, y, ok)  # full grid: accepted
+            bad = ok.replace(index_set="hyperbolic_cross", degree=4)
+            with pytest.raises(ValueError, match="not implemented"):
+                fagp.fit(X, y, bad)
+        finally:
+            fagp._BACKENDS.pop("limited", None)
+
+    def test_unknown_backend_lists_registered(self):
+        X, y, _, spec = _problem()
+        with pytest.raises(ValueError, match="unknown backend"):
+            fagp.fit(X, y, spec.replace(backend="cuda"))
+
+
+class TestPaperModeErrorPath:
+    def test_message_names_fitted_spec(self):
+        """Satellite fix: the error validates on the *state* and reports the
+        fitted spec, not a hardcoded FAGPConfig hint."""
+        X, y, Xs, spec = _problem()
+        st = fagp.fit(X, y, spec)  # store_train=False
+        with pytest.raises(ValueError) as ei:
+            fagp.predict(st, Xs, mode="paper")
+        msg = str(ei.value)
+        assert "store_train=True" in msg and "GPSpec" in msg
+        assert "FAGPConfig" not in msg
+
+    def test_paper_mode_works_when_stored(self):
+        # N=50 keeps the paper chain's N x N f32 rounding inside tolerance
+        # (same scale as test_fagp's paper-vs-fused comparison)
+        X, y, Xs, spec = _problem(N=50, n=8)
+        st = fagp.fit(X, y, spec.replace(store_train=True))
+        mu_p, _ = fagp.predict(st, Xs, mode="paper")
+        mu_f, _ = fagp.predict(st, Xs)
+        np.testing.assert_allclose(np.asarray(mu_p), np.asarray(mu_f),
+                                   atol=5e-3)
+
+
+class TestOptimize:
+    def test_optimize_recovers_noise_scale(self):
+        """GP.optimize moves badly-initialized hyperparameters toward the
+        truth and returns a fitted session at the learned values."""
+        X, y, Xs, _ = _problem(N=300, seed=2)
+        spec0 = GPSpec.create(6, eps=[2.5, 2.5], rho=2.0, noise=0.5)
+        seen = []
+        gp = GP.optimize(X, y, spec0, steps=60, lr=8e-2,
+                         callback=lambda s, v, sp: seen.append(v))
+        assert len(seen) >= 2 and seen[-1] < seen[0]  # NLML decreased
+        assert float(gp.spec.noise) < 0.5  # moved off the bad init
+        mu, _ = gp.mean_var(Xs)
+        assert np.all(np.isfinite(np.asarray(mu)))

@@ -150,9 +150,9 @@ class TestEndToEndKernelFAGP:
             (np.sum(np.cos(np.asarray(X)), axis=1) + 0.05 * rng.standard_normal(N)).astype(np.float32)
         )
         params = mercer.SEKernelParams.create(eps, rho, noise=0.05)
-        cfg = fagp.FAGPConfig(n=n_max)
-        st_ = fagp.fit(X, y, params, cfg)
-        mu_ref, cov_ref = fagp.predict(st_, Xs, cfg)
+        spec = fagp.GPSpec.create(n_max, eps=params.eps, rho=params.rho, noise=0.05)
+        st_ = fagp.fit(X, y, spec)
+        mu_ref, cov_ref = fagp.predict(st_, Xs)
 
         # kernel pipeline
         Phi = ops.hermite_phi(X, consts, S, n_max=n_max)

@@ -131,6 +131,10 @@ class TestTrainLoop:
         assert rep["final_step"] < 10_000
         assert checkpoint.latest_step(d) == rep["final_step"]
 
+    @pytest.mark.skipif(
+        not hasattr(jax.sharding, "AxisType"),
+        reason="mesh AxisType API unavailable in this jax version",
+    )
     def test_elastic_restore_resharding(self, tmp_path):
         """Checkpoint written unsharded restores onto a live mesh sharding."""
         from jax.sharding import NamedSharding, PartitionSpec as P

@@ -183,14 +183,11 @@ class TestStreamingFitEngine:
     def test_pallas_fit_matches_jnp_fit(self):
         N, p, n = 700, 2, 8
         X, y, Xs, ys = make_gp_dataset(N, p, seed=2)
-        params = mercer.SEKernelParams.create(
-            jnp.full((p,), 0.8), jnp.full((p,), 2.0), 0.05
+        spec = fagp.GPSpec.create(
+            n, eps=jnp.full((p,), 0.8), rho=2.0, noise=0.05
         )
-        st_j = fagp.fit(X, y, params, fagp.FAGPConfig(n=n, backend="jnp"))
-        st_p = fagp.fit(
-            X, y, params,
-            fagp.FAGPConfig(n=n, backend="pallas", store_train=False),
-        )
+        st_j = fagp.fit(X, y, spec)
+        st_p = fagp.fit(X, y, spec.replace(backend="pallas"))
         np.testing.assert_allclose(
             np.asarray(st_p.u), np.asarray(st_j.u), rtol=5e-3, atol=1e-4
         )
@@ -212,26 +209,26 @@ class TestStreamingFitEngine:
 class TestFitUpdate:
     def _fitted(self, backend, store_train=False, N=400, p=2, n=8):
         X, y, Xs, ys = make_gp_dataset(N, p, seed=4)
-        params = mercer.SEKernelParams.create(
-            jnp.full((p,), 0.8), jnp.full((p,), 2.0), 0.05
+        spec = fagp.GPSpec.create(
+            n, eps=jnp.full((p,), 0.8), rho=2.0, noise=0.05,
+            backend=backend, store_train=store_train,
         )
-        cfg = fagp.FAGPConfig(n=n, backend=backend, store_train=store_train)
-        return X, y, Xs, params, cfg, fagp.fit(X, y, params, cfg)
+        return X, y, Xs, spec, fagp.fit(X, y, spec)
 
     @pytest.mark.parametrize("backend", ["jnp", "pallas"])
     @pytest.mark.parametrize("k", [4, 64])  # sweep branch / refactor branch
     def test_update_equals_refit(self, backend, k):
-        X, y, Xs, params, cfg, st = self._fitted(backend)
+        X, y, Xs, spec, st = self._fitted(backend)
         Xn, yn, *_ = make_gp_dataset(k, 2, seed=11)
-        up = fagp.fit_update(st, Xn, yn, cfg)
+        up = fagp.fit_update(st, Xn, yn)
         re = fagp.fit(
-            jnp.concatenate([X, Xn]), jnp.concatenate([y, yn]), params, cfg
+            jnp.concatenate([X, Xn]), jnp.concatenate([y, yn]), spec
         )
         np.testing.assert_allclose(
             np.asarray(up.u), np.asarray(re.u), rtol=5e-3, atol=1e-4
         )
-        mu_u, var_u = fagp.predict_mean_var(up, Xs, cfg)
-        mu_r, var_r = fagp.predict_mean_var(re, Xs, cfg)
+        mu_u, var_u = fagp.predict_mean_var(up, Xs)
+        mu_r, var_r = fagp.predict_mean_var(re, Xs)
         np.testing.assert_allclose(
             np.asarray(mu_u), np.asarray(mu_r), rtol=1e-3, atol=1e-4
         )
@@ -241,19 +238,19 @@ class TestFitUpdate:
 
     def test_sequential_updates_track_refit(self):
         """Several ingest rounds compound without drifting from the refit."""
-        X, y, Xs, params, cfg, st = self._fitted("jnp")
+        X, y, Xs, spec, st = self._fitted("jnp")
         Xacc, yacc = X, y
         for r in range(3):
             Xn, yn, *_ = make_gp_dataset(16, 2, seed=20 + r)
-            st = fagp.fit_update(st, Xn, yn, cfg)
+            st = fagp.fit_update(st, Xn, yn)
             Xacc = jnp.concatenate([Xacc, Xn])
             yacc = jnp.concatenate([yacc, yn])
-        re = fagp.fit(Xacc, yacc, params, cfg)
+        re = fagp.fit(Xacc, yacc, spec)
         np.testing.assert_allclose(
             np.asarray(st.u), np.asarray(re.u), rtol=1e-2, atol=1e-4
         )
-        mu_u, _ = fagp.predict_mean_var(st, Xs, cfg)
-        mu_r, _ = fagp.predict_mean_var(re, Xs, cfg)
+        mu_u, _ = fagp.predict_mean_var(st, Xs)
+        mu_r, _ = fagp.predict_mean_var(re, Xs)
         np.testing.assert_allclose(
             np.asarray(mu_u), np.asarray(mu_r), rtol=2e-3, atol=2e-4
         )
@@ -261,21 +258,21 @@ class TestFitUpdate:
     def test_update_extends_stored_train_set(self):
         """store_train=True: Phi/y grow, and mode='paper' prediction on the
         updated state equals the refit's."""
-        X, y, Xs, params, cfg, st = self._fitted(
+        X, y, Xs, spec, st = self._fitted(
             "jnp", store_train=True, N=120, n=6
         )
         Xn, yn, *_ = make_gp_dataset(10, 2, seed=31)
-        up = fagp.fit_update(st, Xn, yn, cfg)
+        up = fagp.fit_update(st, Xn, yn)
         assert up.Phi.shape[0] == X.shape[0] + 10
         assert up.y.shape[0] == X.shape[0] + 10
         re = fagp.fit(
-            jnp.concatenate([X, Xn]), jnp.concatenate([y, yn]), params, cfg
+            jnp.concatenate([X, Xn]), jnp.concatenate([y, yn]), spec
         )
         # paper mode forms the N x N approximate inverse in f32; extra
         # rounding vs the fused path is expected (same tolerance as
         # test_fagp's paper-vs-fused comparison)
-        mu_u, cov_u = fagp.predict(up, Xs[:9], cfg, mode="paper")
-        mu_r, cov_r = fagp.predict(re, Xs[:9], cfg, mode="paper")
+        mu_u, cov_u = fagp.predict(up, Xs[:9], mode="paper")
+        mu_r, cov_r = fagp.predict(re, Xs[:9], mode="paper")
         np.testing.assert_allclose(
             np.asarray(mu_u), np.asarray(mu_r), atol=5e-3
         )
@@ -284,11 +281,11 @@ class TestFitUpdate:
         )
 
     def test_legacy_state_without_b_raises(self):
-        _, _, _, _, cfg, st = self._fitted("jnp", N=64, n=4)
+        _, _, _, _, st = self._fitted("jnp", N=64, n=4)
         legacy = dataclasses.replace(st, b=None)
         Xn, yn, *_ = make_gp_dataset(4, 2, seed=1)
         with pytest.raises(ValueError, match="fit_update"):
-            fagp.fit_update(legacy, Xn, yn, cfg)
+            fagp.fit_update(legacy, Xn, yn)
 
 
 class TestServingLoop:
@@ -297,13 +294,12 @@ class TestServingLoop:
 
         N, p, n = 200, 2, 6
         X, y, Xs, ys = make_gp_dataset(N, p, seed=6)
-        params = mercer.SEKernelParams.create(
-            jnp.full((p,), 0.8), jnp.full((p,), 2.0), 0.05
+        spec = fagp.GPSpec.create(
+            n, eps=jnp.full((p,), 0.8), rho=2.0, noise=0.05
         )
-        cfg = fagp.FAGPConfig(n=n, store_train=False)
-        st = fagp.fit(X, y, params, cfg)
-        mu_d, var_d = fagp.predict_mean_var(st, Xs, cfg)
-        mu_m, var_m, _ = microbatched_mean_var(st, Xs, cfg, microbatch=8)
+        st = fagp.fit(X, y, spec)
+        mu_d, var_d = fagp.predict_mean_var(st, Xs)
+        mu_m, var_m, _ = microbatched_mean_var(st, Xs, microbatch=8)
         np.testing.assert_allclose(mu_m, np.asarray(mu_d), rtol=1e-5, atol=1e-6)
         np.testing.assert_allclose(var_m, np.asarray(var_d), rtol=1e-5, atol=1e-7)
 
