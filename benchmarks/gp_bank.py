@@ -1,0 +1,155 @@
+"""GPBank vs a Python loop of single-model calls, and a bank-size sweep.
+
+The fleet-serving claim: B independent small GPs answered as ONE stacked
+batched call beat B sequential single-model ``GP.mean_var`` calls, because
+the loop pays per-call dispatch + kernel launch + solve setup B times.
+Both sides serve the *identical* fitted states (the loop serves
+``bank.state(t)``), so the comparison isolates serving cost; parity of the
+results is asserted here (≤1e-5 abs) and pinned in tests/test_gp_bank.py.
+
+Writes machine-readable ``BENCH_gp_bank.json`` next to the repo root (CI
+runs ``--smoke`` and fails when the file is missing or malformed).
+
+  PYTHONPATH=src python -m benchmarks.gp_bank [--smoke | --full]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bank import GPBank
+from repro.core.gp import GP, GPSpec
+from repro.data import make_gp_dataset
+
+from .common import emit, time_fn
+
+ROOT = Path(__file__).resolve().parents[1]
+JSON_PATH = ROOT / "BENCH_gp_bank.json"
+
+# the acceptance-criteria workload: B=64 small tenants, n=8, p=2 (M=64).
+# Q_PER_TENANT=2 is the fleet-traffic shape the bank exists for: many
+# tenants, a few queries each per flush (the router's microbatch) — the
+# loop pays per-call dispatch B times regardless, the bank once.
+B_MAIN, N_ROWS, P, N_MERCER = 64, 8, 2, 8
+Q_PER_TENANT = 2
+
+
+def _fleet_problem(B, n_rows, p, n, *, seed=0, backend="jnp"):
+    rng = np.random.default_rng(seed)
+    spec = GPSpec.create(n, eps=[0.8] * p, rho=2.0, noise=0.05,
+                         backend=backend)
+    Xb = np.zeros((B, n_rows, p), np.float32)
+    yb = np.zeros((B, n_rows), np.float32)
+    for s in range(B):
+        X, y, *_ = make_gp_dataset(n_rows, p, seed=seed + s)
+        Xb[s], yb[s] = np.asarray(X), np.asarray(y)
+    Q = B * Q_PER_TENANT
+    Xq = rng.uniform(-1, 1, size=(Q, p)).astype(np.float32)
+    tenants = rng.integers(0, B, Q)
+    return spec, jnp.asarray(Xb), jnp.asarray(yb), jnp.asarray(Xq), tenants
+
+
+def _loop_of_singles(sessions, tenants, Xq_np):
+    """The baseline a bank replaces: per-tenant single-model calls in a
+    Python loop (one gather of that tenant's query rows each)."""
+    out_mu = np.zeros(len(tenants), np.float32)
+    out_var = np.zeros(len(tenants), np.float32)
+    for t, gp in sessions.items():
+        rows = np.flatnonzero(tenants == t)
+        if rows.size == 0:
+            continue
+        mu, var = gp.mean_var(jnp.asarray(Xq_np[rows]))
+        out_mu[rows] = np.asarray(mu)
+        out_var[rows] = np.asarray(var)
+    return out_mu, out_var
+
+
+def _bank_vs_loop(backend: str, *, B, n_rows, record):
+    spec, Xb, yb, Xq, tenants = _fleet_problem(
+        B, n_rows, P, N_MERCER, backend=backend
+    )
+    bank = GPBank.fit(Xb, yb, spec)
+    tenant_list = [int(t) for t in tenants]
+    Xq_np = np.asarray(Xq)
+    sessions = {t: GP.from_state(bank.state(t)) for t in bank.tenants}
+
+    mu_b, var_b = bank.mean_var(tenant_list, Xq)
+    mu_l, var_l = _loop_of_singles(sessions, tenants, Xq_np)
+    parity = {
+        "mean_abs": float(np.max(np.abs(np.asarray(mu_b) - mu_l))),
+        "var_abs": float(np.max(np.abs(np.asarray(var_b) - var_l))),
+    }
+    assert parity["mean_abs"] <= 1e-5 and parity["var_abs"] <= 1e-5, parity
+
+    t_bank = time_fn(lambda: bank.mean_var(tenant_list, Xq))
+    t_loop = time_fn(lambda: _loop_of_singles(sessions, tenants, Xq_np))
+    speedup = t_loop / t_bank
+    tag = f"B={B};Q={len(tenant_list)};M={bank.n_features}"
+    emit(f"gp_bank/{backend}-bank-mean_var", t_bank, tag)
+    emit(f"gp_bank/{backend}-loop-of-singles", t_loop,
+         f"{tag};speedup={speedup:.1f}x")
+    record(f"{backend}-bank-mean_var", t_bank, tag)
+    record(f"{backend}-loop-of-singles", t_loop, tag)
+    return parity, speedup
+
+
+def _size_sweep(sizes, *, record):
+    for B in sizes:
+        spec, Xb, yb, Xq, tenants = _fleet_problem(B, N_ROWS, P, N_MERCER)
+        bank = GPBank.fit(Xb, yb, spec)
+        tenant_list = [int(t) for t in tenants]
+        t_fit = time_fn(lambda: GPBank.fit(Xb, yb, spec).stack.u)
+        t_q = time_fn(lambda: bank.mean_var(tenant_list, Xq))
+        per_q = t_q / len(tenant_list)
+        tag = f"B={B};per_query_us={per_q * 1e6:.1f}"
+        emit(f"gp_bank/sweep-fit-B{B}", t_fit, tag)
+        emit(f"gp_bank/sweep-mean_var-B{B}", t_q, tag)
+        record(f"sweep-fit-B{B}", t_fit, tag)
+        record(f"sweep-mean_var-B{B}", t_q, tag)
+
+
+def run(full: bool = False, smoke: bool = False):
+    results = []
+
+    def record(name, seconds, derived=""):
+        results.append(
+            {"name": name, "seconds": seconds, "derived": derived}
+        )
+
+    B = 16 if smoke else B_MAIN
+    backends = ["jnp"] if smoke else ["jnp", "pallas"]
+    parity = {}
+    speedup = {}
+    for backend in backends:
+        parity[backend], speedup[backend] = _bank_vs_loop(
+            backend, B=B, n_rows=N_ROWS, record=record
+        )
+    if not smoke:
+        _size_sweep([8, 32, 64, 128] if full else [8, 32, 64],
+                    record=record)
+
+    payload = {
+        "schema": 1,
+        "smoke": bool(smoke),
+        "config": {"B": B, "n_rows": N_ROWS, "p": P, "n": N_MERCER,
+                   "q_per_tenant": Q_PER_TENANT},
+        "results": results,
+        "parity_abs": parity,
+        "speedup_bank_vs_loop": speedup,
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    emit("gp_bank/json-written", 0.0, str(JSON_PATH.name))
+    return payload
+
+
+def main():
+    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

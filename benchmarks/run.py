@@ -1,6 +1,9 @@
 """Benchmark harness: one module per paper table/figure + extras.
 
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines.  Modules with a
+machine-readable trajectory additionally write ``BENCH_<name>.json`` at
+the repo root (today: ``BENCH_gp_bank.json`` from benchmarks/gp_bank.py;
+CI validates its shape every run).
 
   PYTHONPATH=src python -m benchmarks.run [--full]
 """
@@ -15,6 +18,7 @@ def main() -> None:
     from . import (
         fagp_vs_exact,
         fig1_time_vs_n_p,
+        gp_bank,
         index_set_ablation,
         kernel_micro,
         multi_output,
@@ -29,6 +33,7 @@ def main() -> None:
         ("kernel_micro", kernel_micro),              # Pallas kernels
         ("streaming_fit", streaming_fit),            # fused 1-pass fit; fit_update
         ("multi_output", multi_output),              # shared-Cholesky T-task fit
+        ("gp_bank", gp_bank),                        # fleet bank vs loop of singles
         ("roofline_table", roofline_table),          # dry-run summary
     ]
     failed = 0

@@ -1,0 +1,13 @@
+"""Batched multi-tenant GP serving: a bank of sessions + a serving router.
+
+``GPBank`` keeps B independent fitted GP sessions device-resident as one
+stacked ``FAGPState`` and drives fit / mixed-tenant mean_var / rank-k
+update for the whole fleet with single batched executables;
+``BankRouter`` coalesces per-tenant query and observation queues into the
+padded fixed-shape batches the bank wants.  See ``bank.bank`` for the
+design notes.
+"""
+from .bank import GPBank
+from .router import BankRouter
+
+__all__ = ["GPBank", "BankRouter"]

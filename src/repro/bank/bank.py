@@ -1,0 +1,566 @@
+"""GPBank — a fleet of independent GP sessions served as one batched model.
+
+The production analogue of the paper's "cheap posterior on an accelerator"
+claim is not one GP but *fleets* of small independent GPs — one per sensor,
+user, task, or region — served concurrently.  A Python loop of single-model
+calls pays per-call dispatch, per-call kernel launch, and per-call H2D
+latency B times; a bank pays them once.
+
+``GPBank`` keeps B fitted sessions resident on the device as ONE stacked
+:class:`~repro.core.fagp.FAGPState`:
+
+* leading bank axis on ``chol`` (C, M, M), ``u`` (C, M), ``b`` (C, M),
+  ``lam``/``sqrtlam`` (C, M) — the per-tenant factorizations;
+* one shared static :class:`~repro.core.fagp.GPSpec` (index set, Mercer
+  depth n, backend, hyperparameters) — so every tenant shares one feature
+  map and one compiled executable per entry point.
+
+Capacity is fixed at construction: the stack always holds ``capacity``
+slots, of which some are *active* (hold a fitted tenant) and the rest hold
+the prior state (chol = I, u = b = 0 — a valid "no data yet" posterior).
+Membership churn (:meth:`insert` / :meth:`evict`) writes slot leaves with a
+*traced* slot index through module-level jitted helpers, so adding or
+removing tenants NEVER recompiles the serving executable — the executables
+are keyed only on the stack's (capacity, M) shapes.
+
+Entry points (all single compiled calls over the whole fleet):
+
+* :meth:`GPBank.fit`      — B datasets -> B factorizations: one batched
+  moment accumulation (``FitBackend.bank_moments``: vmapped scan on the jnp
+  backend; a bank grid axis in the streaming fused Pallas kernel on the
+  pallas backend) + one batched Cholesky.  Ragged per-tenant N is expressed
+  with per-slot row masks on a fixed (B, N, p) stack.
+* :meth:`GPBank.mean_var` — a *mixed-tenant* query batch: row q is answered
+  by tenant ``tenant_ids[q]``'s posterior, via gather from the stack
+  (``FitBackend.bank_mean_var``).
+* :meth:`GPBank.update`   — batched rank-k Cholesky ingest for several
+  tenants at once (vmapped ``_update_arrays``), scattered back into the
+  stack.
+
+``bank.router.BankRouter`` turns per-tenant query/observation queues into
+the padded fixed-shape batches these entry points want.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Hashable, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fagp
+from repro.core.fagp import FAGPState, GPSpec
+from repro.core.gp import GP
+from repro.core.mercer import log_eigenvalues_nd
+
+__all__ = ["GPBank"]
+
+
+# ---------------------------------------------------------------------------
+# Module-level jitted kernels.  Deliberately NOT methods: their jit caches
+# are keyed on (capacity, M, Q, k) shapes only, so membership churn and
+# arbitrary tenant mixes reuse one executable — pinned by
+# tests/test_gp_bank.py via _cache_size().
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _bank_solve(G, b, loglam, sig2):
+    """Batched fit epilogue: raw moments (C, M, M)/(C, M) -> stacked
+    (lam, sqrtlam, chol, u).  The scaled system keeps its one home
+    (fagp._assemble_scaled_system), vmapped over slots; the Cholesky and the
+    mean-weight solves batch natively."""
+    Bm, sqrtlam = jax.vmap(
+        lambda Gs: fagp._assemble_scaled_system(Gs, loglam, sig2)
+    )(G)
+    chol = jnp.linalg.cholesky(Bm)
+    u = jax.vmap(
+        lambda c, d, bs: fagp._solve_mean_weights(c, d, bs, sig2)
+    )(chol, sqrtlam, b)
+    lam = jnp.broadcast_to(jnp.exp(loglam), sqrtlam.shape)
+    return lam, sqrtlam, chol, u
+
+
+@jax.jit
+def _bank_update_scatter(chol_s, u_s, b_s, sqrtlam_s, noise, slots,
+                         Phi_g, y_g, mask_g):
+    """Gather slot states, apply the rank-k update per group row, scatter
+    back.  Padded rows (mask 0) zero their feature row, which makes the
+    rank-1 sweep an identity for them — ragged ingest is a masking detail,
+    not a shape change.  A *fully*-masked group (the router's group-axis
+    shape padding) writes its gathered values back verbatim: the identity
+    sweep is exact only up to sqrt rounding, and an untouched tenant must
+    not drift by ulps per serving round."""
+    Phi_g = Phi_g * mask_g[..., None]
+    y_g = y_g * mask_g
+    ch, bb, uu = jax.vmap(
+        lambda c, bm, d, P, y: fagp._update_arrays(c, bm, d, noise, P, y)
+    )(chol_s[slots], b_s[slots], sqrtlam_s[slots], Phi_g, y_g)
+    real = jnp.max(mask_g, axis=1) > 0                  # (G,) any live row?
+    ch = jnp.where(real[:, None, None], ch, chol_s[slots])
+    uu = jnp.where(real[:, None], uu, u_s[slots])
+    bb = jnp.where(real[:, None], bb, b_s[slots])
+    return (chol_s.at[slots].set(ch), u_s.at[slots].set(uu),
+            b_s.at[slots].set(bb))
+
+
+@jax.jit
+def _write_slot(chol_s, u_s, b_s, slot, chol, u, b):
+    """Write one tenant's leaves at a *traced* slot index: insert/evict of
+    any slot hit the same executable."""
+    return (chol_s.at[slot].set(chol), u_s.at[slot].set(u),
+            b_s.at[slot].set(b))
+
+
+def _fallback_bank_moments(backend):
+    """vmap of the single-model moments for backends that do not declare a
+    native bank_moments."""
+    def f(Xb, yb, params, idx, aux, n_max, block_rows, maskb):
+        one = lambda X, y, m: backend.moments(
+            X, y, params, idx, aux, n_max, block_rows, m
+        )
+        return jax.vmap(one)(Xb, yb, maskb)
+    return f
+
+
+def _fallback_bank_mean_var(backend):
+    """Gathered posterior on top of the backend's feature map, for backends
+    that do not declare a native bank_mean_var."""
+    return fagp._gathered_bank_mean_var(backend.features)
+
+
+def _bank_spec(spec: GPSpec) -> GPSpec:
+    """Normalize a spec for bank use: banks are a serving structure and
+    never store per-tenant training features, so ``store_train`` is
+    downgraded — otherwise every unstacked ``state(t)`` would carry a spec
+    claiming stored features while holding ``Phi=None``, and paper-mode
+    prediction's 'refit with store_train=True' guidance would loop."""
+    return spec.replace(store_train=False) if spec.store_train else spec
+
+
+def _prior_leaves(loglam: jax.Array, count: int) -> dict:
+    """The per-slot leaves of the 'no data yet' state — chol = I,
+    u = b = 0, spec eigenvalues — a valid prior posterior (zero mean,
+    prior variance).  The ONE definition of an empty slot: ``create``
+    builds whole banks from it and ``fit`` pads reserved capacity with it,
+    so the fully-masked-slot == fresh-slot invariant cannot drift."""
+    M = loglam.shape[0]
+    return {
+        "lam": jnp.broadcast_to(jnp.exp(loglam), (count, M)),
+        "sqrtlam": jnp.broadcast_to(jnp.exp(0.5 * loglam), (count, M)),
+        "chol": jnp.broadcast_to(jnp.eye(M, dtype=jnp.float32),
+                                 (count, M, M)),
+        "u": jnp.zeros((count, M), jnp.float32),
+        "b": jnp.zeros((count, M), jnp.float32),
+    }
+
+
+def _check_bankable(state: FAGPState, spec: GPSpec, who: str) -> None:
+    """A state can join a bank iff it was factorized under the bank's shared
+    spec (structure AND hyperparameters) and is single-output with the raw
+    moment vector present."""
+    fagp._check_spec_regenerates_idx(state, spec)
+    for f in fagp._HYPER_FIELDS:
+        if not np.array_equal(
+            np.asarray(getattr(spec, f)), np.asarray(getattr(state.params, f))
+        ):
+            raise ValueError(
+                f"{who}: state was fitted with a different {f} than the "
+                f"bank's shared spec; a bank shares one feature map and one "
+                f"eigenvalue scaling across all tenants — refit the tenant "
+                f"under the bank spec"
+            )
+    if state.u.ndim != 1:
+        raise ValueError(
+            f"{who}: multi-output states (T={state.n_tasks}) cannot join a "
+            f"bank; banks batch over tenants, one task each"
+        )
+    if state.b is None:
+        raise ValueError(
+            f"{who}: state lacks the raw moment vector b (produced by a "
+            f"pre-PR-1 fit path); refit before inserting"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class GPBank:
+    """A fixed-capacity bank of independent GP sessions (see module doc).
+
+    Construct with :meth:`fit`, :meth:`create`, or :meth:`from_states`; the
+    default constructor is internal.  Instances are immutable — mutating
+    methods return a new ``GPBank`` sharing the device stack buffers that
+    did not change.
+
+    stack:   stacked FAGPState — bank axis on chol/u/b/lam/sqrtlam,
+             shared idx/params/spec.
+    active:  (capacity,) host-side bool mask of occupied slots.
+    slots:   tenant id -> slot index (host-side; insertion order preserved).
+    """
+
+    stack: FAGPState
+    active: np.ndarray
+    slots: Mapping[Hashable, int]
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def create(cls, spec: GPSpec, capacity: int) -> "GPBank":
+        """An empty bank: every slot holds the prior state (chol = I,
+        u = b = 0 — zero mean, prior variance)."""
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        spec = _bank_spec(spec)
+        fagp._check_backend_support(spec)
+        idx = jnp.asarray(spec.indices(spec.p))
+        loglam = log_eigenvalues_nd(idx, spec.params)
+        stack = FAGPState(
+            idx=idx, params=spec.params, Phi=None, y=None, spec=spec,
+            **_prior_leaves(loglam, capacity),
+        )
+        return cls(stack=stack, active=np.zeros(capacity, bool), slots={})
+
+    @classmethod
+    def fit(
+        cls,
+        Xb: jax.Array,
+        yb: jax.Array,
+        spec: GPSpec,
+        *,
+        mask: Optional[jax.Array] = None,
+        tenant_ids: Optional[Sequence[Hashable]] = None,
+        capacity: Optional[int] = None,
+    ) -> "GPBank":
+        """Fit B independent GPs in one batched pass.
+
+        Xb: (B, N, p) stacked inputs; yb: (B, N) stacked targets;
+        mask: (B, N) row validity — tenants with fewer than N real rows pad
+        to N and mask the padding (ragged N).  ``tenant_ids`` default to
+        ``range(B)``; ``capacity`` (>= B) reserves extra prior slots for
+        later :meth:`insert` without reshaping the stack.
+        """
+        Xb = jnp.asarray(Xb)
+        yb = jnp.asarray(yb)
+        if Xb.ndim != 3 or yb.ndim != 2 or yb.shape != Xb.shape[:2]:
+            raise ValueError(
+                f"GPBank.fit wants Xb (B, N, p) and yb (B, N); got "
+                f"{Xb.shape} and {yb.shape}"
+            )
+        B, N, p = Xb.shape
+        spec = _bank_spec(spec)
+        fagp._check_p(spec, p)
+        cap = B if capacity is None else int(capacity)
+        if cap < B:
+            raise ValueError(f"capacity {cap} < number of tenants {B}")
+        if tenant_ids is None:
+            tenant_ids = range(B)
+        tenant_ids = list(tenant_ids)
+        if len(tenant_ids) != B or len(set(tenant_ids)) != B:
+            raise ValueError(
+                f"tenant_ids must be {B} distinct ids, got {tenant_ids!r}"
+            )
+        if mask is None:
+            mask = jnp.ones((B, N), Xb.dtype)
+        else:
+            mask = jnp.asarray(mask).astype(Xb.dtype)
+            if mask.shape != (B, N):
+                raise ValueError(
+                    f"mask must be (B, N) = {(B, N)}, got {mask.shape}"
+                )
+        backend = fagp._check_backend_support(spec)
+        idx_np = spec.indices(p)
+        idx = jnp.asarray(idx_np)
+        aux = backend.prepare(idx_np, spec.n)
+        moments = backend.bank_moments or _fallback_bank_moments(backend)
+        # small tenants: never let a scan-based moments hook pad each
+        # slot's few rows up to the default serving block
+        block_rows = min(spec.block_rows, max(1, N))
+        G, b = moments(Xb, yb, spec.params, idx, aux, spec.n,
+                       block_rows, mask)
+        loglam = log_eigenvalues_nd(idx, spec.params)
+        lam, sqrtlam, chol, u = _bank_solve(G, b, loglam, spec.noise**2)
+        if cap > B:
+            # reserved slots get the prior leaves directly — never pay the
+            # O(N M^2) moment pass or the M^3 Cholesky for an empty slot
+            prior = _prior_leaves(loglam, cap - B)
+            lam = jnp.concatenate([lam, prior["lam"]])
+            sqrtlam = jnp.concatenate([sqrtlam, prior["sqrtlam"]])
+            chol = jnp.concatenate([chol, prior["chol"]])
+            u = jnp.concatenate([u, prior["u"]])
+            b = jnp.concatenate([b, prior["b"]])
+        stack = FAGPState(
+            idx=idx, lam=lam, sqrtlam=sqrtlam, chol=chol, u=u,
+            params=spec.params, Phi=None, y=None, b=b, spec=spec,
+        )
+        active = np.zeros(cap, bool)
+        active[:B] = True
+        return cls(stack=stack, active=active,
+                   slots={t: s for s, t in enumerate(tenant_ids)})
+
+    @classmethod
+    def from_states(
+        cls,
+        states: Mapping[Hashable, Any],
+        *,
+        capacity: Optional[int] = None,
+    ) -> "GPBank":
+        """Stack already-fitted sessions (``GP`` or ``FAGPState``) into a
+        bank.  All must share one structural spec and one hyperparameter
+        set (the bank's shared feature map)."""
+        if not states:
+            raise ValueError("from_states needs at least one state")
+        items = [
+            (t, s.state if isinstance(s, GP) else s) for t, s in states.items()
+        ]
+        spec = items[0][1].spec
+        if spec is None:
+            raise ValueError(
+                "from_states: first state has no baked GPSpec; attach one "
+                "with state.with_spec(spec)"
+            )
+        spec = _bank_spec(spec)
+        for t, st in items:
+            _check_bankable(st, spec, f"from_states(tenant {t!r})")
+        B = len(items)
+        cap = B if capacity is None else int(capacity)
+        if cap < B:
+            raise ValueError(f"capacity {cap} < number of states {B}")
+        bank = cls.create(spec, cap)
+        stacked = {
+            f: jnp.stack([getattr(st, f) for _, st in items])
+            for f in ("lam", "sqrtlam", "chol", "u", "b")
+        }
+        pad = {
+            f: jnp.concatenate([stacked[f], getattr(bank.stack, f)[B:]])
+            for f in stacked
+        }
+        stack = dataclasses.replace(bank.stack, **pad)
+        active = np.zeros(cap, bool)
+        active[:B] = True
+        return cls(stack=stack, active=active,
+                   slots={t: s for s, (t, _) in enumerate(items)})
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def spec(self) -> GPSpec:
+        return self.stack.spec
+
+    @property
+    def capacity(self) -> int:
+        return self.stack.u.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.stack.idx.shape[0]
+
+    @property
+    def tenants(self) -> list:
+        return list(self.slots)
+
+    def __len__(self) -> int:
+        return len(self.slots)
+
+    def __contains__(self, tenant: Hashable) -> bool:
+        return tenant in self.slots
+
+    def slot_of(self, tenant: Hashable) -> int:
+        try:
+            return self.slots[tenant]
+        except KeyError:
+            raise KeyError(
+                f"tenant {tenant!r} is not in this bank (tenants: "
+                f"{self.tenants!r})"
+            ) from None
+
+    def state(self, tenant: Hashable) -> FAGPState:
+        """The tenant's session, unstacked — a normal single-model
+        FAGPState usable with every ``fagp``/``GP`` entry point."""
+        s = self.slot_of(tenant)
+        return dataclasses.replace(
+            self.stack,
+            lam=self.stack.lam[s], sqrtlam=self.stack.sqrtlam[s],
+            chol=self.stack.chol[s], u=self.stack.u[s], b=self.stack.b[s],
+        )
+
+    def states(self) -> dict:
+        """All tenants' sessions, unstacked (tenant -> FAGPState)."""
+        return {t: self.state(t) for t in self.slots}
+
+    @property
+    def _binv(self) -> jax.Array:
+        """Per-slot B^{-1} serving cache (C, M, M).  Lazily computed and
+        memoized on the instance: GPBank is immutable and every mutating
+        method returns a *new* bank, so the cache can never go stale.
+        Mutations that know which slots they touched carry the cache
+        forward with only those rows refreshed (``_carry_binv_into``)."""
+        cached = self.__dict__.get("_binv_cache")
+        if cached is None:
+            cached = fagp._bank_binv(self.stack.chol)
+            object.__setattr__(self, "_binv_cache", cached)
+        return cached
+
+    def _carry_binv_into(self, new: "GPBank", slots: jax.Array) -> None:
+        """Incremental cache maintenance: a mutation touched only ``slots``
+        (possibly one), so if this bank already paid for the full cache,
+        refresh those rows and hand the rest forward instead of making the
+        next query recompute B^{-1} for the whole capacity."""
+        cached = self.__dict__.get("_binv_cache")
+        if cached is not None:
+            slots = jnp.atleast_1d(slots)
+            rows = fagp._bank_binv(new.stack.chol[slots])
+            object.__setattr__(
+                new, "_binv_cache", cached.at[slots].set(rows)
+            )
+
+    def _slots_for(self, tenant_ids) -> jax.Array:
+        if isinstance(tenant_ids, (str, bytes)) or not hasattr(
+            tenant_ids, "__iter__"
+        ):
+            raise TypeError(
+                "tenant_ids must be a sequence of tenant ids, one per row "
+                f"(got a scalar {tenant_ids!r}); for a single-tenant batch "
+                "pass [tenant] * len(Xq)"
+            )
+        return jnp.asarray(
+            np.fromiter(
+                (self.slot_of(t) for t in tenant_ids), np.int32,
+            )
+        )
+
+    # -- the batched pipeline ----------------------------------------------
+
+    def mean_var(self, tenant_ids, Xq: jax.Array):
+        """Posterior mean and marginal variance for a MIXED-tenant query
+        batch: row q of ``Xq`` (Q, p) is answered by ``tenant_ids[q]``'s
+        posterior.  One compiled call for the whole fleet."""
+        Xq = jnp.asarray(Xq)
+        slots = self._slots_for(tenant_ids)
+        if slots.shape[0] != Xq.shape[0]:
+            raise ValueError(
+                f"one tenant id per query row: got {slots.shape[0]} ids "
+                f"for {Xq.shape[0]} rows"
+            )
+        backend = fagp._check_backend_support(self.spec)
+        aux = fagp._backend_aux(backend, self.stack.idx, self.spec.n)
+        fn = backend.bank_mean_var or _fallback_bank_mean_var(backend)
+        return fn(self.stack, self._binv, slots, Xq, aux, self.spec.n)
+
+    def update(self, tenant_ids, Xk: jax.Array, yk: jax.Array,
+               mask: Optional[jax.Array] = None) -> "GPBank":
+        """Batched rank-k ingest: group g absorbs (Xk[g], yk[g]) into tenant
+        ``tenant_ids[g]``'s factorization — vmapped rank-k Cholesky update,
+        scattered back into the stack.  ``mask`` (G, k) zeroes padded rows
+        (ragged ingest).  Tenants must be distinct within one call (the
+        scatter would race); the router serializes duplicates into rounds."""
+        Xk = jnp.asarray(Xk)
+        yk = jnp.asarray(yk)
+        if Xk.ndim != 3 or yk.shape != Xk.shape[:2]:
+            raise ValueError(
+                f"GPBank.update wants Xk (G, k, p) and yk (G, k); got "
+                f"{Xk.shape} and {yk.shape}"
+            )
+        ids = list(tenant_ids)
+        if len(set(ids)) != len(ids):
+            raise ValueError(
+                f"duplicate tenant in one update batch ({ids!r}): the "
+                f"scattered writes would collide — split into rounds "
+                f"(BankRouter.ingest does this)"
+            )
+        if len(ids) != Xk.shape[0]:
+            raise ValueError(
+                f"one tenant id per update group: got {len(ids)} ids for "
+                f"{Xk.shape[0]} groups"
+            )
+        return self._update_at_slots(self._slots_for(ids), Xk, yk, mask)
+
+    def _update_at_slots(self, slots: jax.Array, Xk: jax.Array,
+                         yk: jax.Array,
+                         mask: Optional[jax.Array] = None) -> "GPBank":
+        """Slot-addressed core of :meth:`update`.  Also the router's
+        fixed-shape entry: a fully-masked group is an exact identity update
+        (zeroed feature rows make every rank-1 sweep a no-op), so the
+        router pads the group axis to a shape bucket with masked groups
+        aimed at distinct unused slots — bounding the number of compiled
+        update executables by log2(capacity) instead of one per distinct
+        tenant-mix size.  Slots must be distinct (scatter would race)."""
+        G, k, p = Xk.shape
+        fagp._check_p(self.spec, p)
+        if mask is None:
+            mask = jnp.ones((G, k), Xk.dtype)
+        else:
+            mask = jnp.asarray(mask).astype(Xk.dtype)
+            if mask.shape != (G, k):
+                raise ValueError(
+                    f"mask must be (G, k) = {(G, k)}, got {mask.shape} — a "
+                    f"broadcastable mask would silently drop rows from "
+                    f"every group"
+                )
+        backend = fagp._check_backend_support(self.spec)
+        aux = fagp._backend_aux(backend, self.stack.idx, self.spec.n)
+        Phi_g = backend.features(
+            Xk.reshape(G * k, p), self.stack.params, self.stack.idx, aux,
+            self.spec.n,
+        ).reshape(G, k, -1)
+        chol, u, b = _bank_update_scatter(
+            self.stack.chol, self.stack.u, self.stack.b, self.stack.sqrtlam,
+            self.stack.params.noise, slots, Phi_g, yk, mask,
+        )
+        stack = dataclasses.replace(self.stack, chol=chol, u=u, b=b)
+        new = dataclasses.replace(self, stack=stack)
+        self._carry_binv_into(new, slots)
+        return new
+
+    # -- membership churn (never recompiles: fixed capacity, traced slot) ---
+
+    def insert(self, tenant: Hashable, source) -> "GPBank":
+        """Add a tenant into a free slot.  ``source`` is a fitted ``GP`` /
+        ``FAGPState`` sharing the bank's spec, or an ``(X, y)`` tuple to be
+        fitted under it.  Raises when full or when the id is taken."""
+        if tenant in self.slots:
+            raise ValueError(f"tenant {tenant!r} already in the bank")
+        free = np.flatnonzero(~self.active)
+        if free.size == 0:
+            raise ValueError(
+                f"bank is full ({self.capacity} slots); evict a tenant or "
+                f"rebuild with a larger capacity"
+            )
+        if isinstance(source, tuple):
+            X, y = source
+            st = fagp.fit(jnp.asarray(X), jnp.asarray(y), self.spec)
+        else:
+            st = source.state if isinstance(source, GP) else source
+        _check_bankable(st, self.spec, f"insert({tenant!r})")
+        slot = int(free[0])
+        chol, u, b = _write_slot(
+            self.stack.chol, self.stack.u, self.stack.b,
+            jnp.int32(slot), st.chol, st.u, st.b,
+        )
+        stack = dataclasses.replace(self.stack, chol=chol, u=u, b=b)
+        active = self.active.copy()
+        active[slot] = True
+        slots = dict(self.slots)
+        slots[tenant] = slot
+        new = dataclasses.replace(self, stack=stack, active=active,
+                                  slots=slots)
+        self._carry_binv_into(new, jnp.int32(slot))
+        return new
+
+    def evict(self, tenant: Hashable) -> "GPBank":
+        """Remove a tenant; its slot is reset to the prior state and becomes
+        reusable by the next :meth:`insert` — same executable either way."""
+        slot = self.slot_of(tenant)
+        M = self.n_features
+        chol, u, b = _write_slot(
+            self.stack.chol, self.stack.u, self.stack.b,
+            jnp.int32(slot), jnp.eye(M, dtype=jnp.float32),
+            jnp.zeros((M,), jnp.float32), jnp.zeros((M,), jnp.float32),
+        )
+        stack = dataclasses.replace(self.stack, chol=chol, u=u, b=b)
+        active = self.active.copy()
+        active[slot] = False
+        slots = {t: s for t, s in self.slots.items() if t != tenant}
+        new = dataclasses.replace(self, stack=stack, active=active,
+                                  slots=slots)
+        self._carry_binv_into(new, jnp.int32(slot))
+        return new

@@ -1,0 +1,196 @@
+"""BankRouter — per-tenant queues coalesced into fixed-shape fleet batches.
+
+A serving frontend for :class:`~repro.bank.GPBank`: callers enqueue work
+addressed to individual tenants; the router coalesces everything pending
+into *padded mixed-tenant microbatches* of one fixed shape, so the whole
+fleet is served by exactly one compiled executable per (microbatch, p)
+shape — no matter how many tenants exist or how unevenly traffic is
+distributed across them.
+
+Two paths:
+
+* **Queries** — :meth:`submit` enqueues a query row for a tenant and
+  returns a ticket; :meth:`flush` packs all pending rows (arrival order)
+  into (microbatch, p) blocks, pads the tail by *repeating the last real
+  row* (same shapes, results discarded), answers each block with one
+  ``GPBank.mean_var`` call, and returns ``ticket -> (mu, var)``.  Results
+  are keyed by ticket, so interleaved multi-tenant traffic keeps its
+  per-caller association no matter how the batcher reorders rows.
+* **Observations** — :meth:`observe` enqueues an (x, y) pair for a tenant;
+  :meth:`ingest` groups pending observations by tenant, pads each group to
+  a fixed chunk of ``ingest_chunk`` rows (row-masked, so padding is
+  mathematically inert), and absorbs them with batched
+  ``GPBank.update`` calls.  A tenant with more than one chunk pending is
+  scheduled across *rounds* (distinct-tenant batches), because two updates
+  to one factorization cannot commute within a single scattered write.
+
+The router owns the bank reference: :meth:`ingest` replaces it with the
+updated (immutable) bank, and subsequent :meth:`flush` calls serve the new
+posterior.
+"""
+from __future__ import annotations
+
+from typing import Hashable
+
+import jax.numpy as jnp
+import numpy as np
+
+from .bank import GPBank
+
+__all__ = ["BankRouter"]
+
+
+class BankRouter:
+    """See module docstring.  Not thread-safe; one router per serving loop."""
+
+    def __init__(self, bank: GPBank, *, microbatch: int = 64,
+                 ingest_chunk: int = 16):
+        if microbatch < 1 or ingest_chunk < 1:
+            raise ValueError("microbatch and ingest_chunk must be >= 1")
+        self.bank = bank
+        self.microbatch = int(microbatch)
+        self.ingest_chunk = int(ingest_chunk)
+        self._pending: list[tuple[int, Hashable, np.ndarray]] = []
+        self._observations: dict[Hashable, list[tuple[np.ndarray, float]]] = {}
+        self._next_ticket = 0
+
+    # -- query path ---------------------------------------------------------
+
+    def submit(self, tenant: Hashable, x) -> int:
+        """Enqueue one query row for ``tenant``; returns a ticket redeemed
+        by the next :meth:`flush`."""
+        self.bank.slot_of(tenant)  # fail fast on unknown tenants
+        x = np.asarray(x, np.float32).reshape(-1)
+        if x.shape[0] != self.bank.spec.p:
+            raise ValueError(
+                f"query row has p={x.shape[0]}, bank serves p="
+                f"{self.bank.spec.p}"
+            )
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, tenant, x))
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def flush(self) -> dict:
+        """Serve every pending query; returns ``ticket -> (mu, var)``
+        (floats).  Pending rows are packed in arrival order into fixed
+        (microbatch, p) blocks — one executable regardless of the tenant
+        mix — and the padded tail's results are discarded.
+
+        If a block fails mid-flush (e.g. a queued tenant was evicted from a
+        bank swapped in behind the router's back), the WHOLE backlog —
+        served blocks included, since queries are idempotent reads whose
+        results would otherwise be discarded with the exception — is
+        restored to the queue before the error propagates, so every ticket
+        stays redeemable by a later flush once the caller repairs the
+        bank."""
+        if not self._pending:
+            return {}
+        todo, self._pending = self._pending, []
+        out: dict[int, tuple[float, float]] = {}
+        mb = self.microbatch
+        for lo in range(0, len(todo), mb):
+            block = todo[lo : lo + mb]
+            pad = mb - len(block)
+            tenants = [t for _, t, _ in block] + [block[-1][1]] * pad
+            Xq = np.stack([x for _, _, x in block] + [block[-1][2]] * pad)
+            try:
+                mu, var = self.bank.mean_var(tenants, jnp.asarray(Xq))
+            except Exception:
+                self._pending = todo + self._pending
+                raise
+            mu = np.asarray(mu)
+            var = np.asarray(var)
+            for i, (ticket, _, _) in enumerate(block):
+                out[ticket] = (float(mu[i]), float(var[i]))
+        return out
+
+    # -- ingest path --------------------------------------------------------
+
+    def observe(self, tenant: Hashable, x, y) -> None:
+        """Enqueue one observation (x, y) for ``tenant``; absorbed by the
+        next :meth:`ingest`."""
+        self.bank.slot_of(tenant)
+        x = np.asarray(x, np.float32).reshape(-1)
+        if x.shape[0] != self.bank.spec.p:
+            raise ValueError(
+                f"observation row has p={x.shape[0]}, bank serves p="
+                f"{self.bank.spec.p}"
+            )
+        self._observations.setdefault(tenant, []).append((x, float(y)))
+
+    def ingest(self) -> int:
+        """Absorb every pending observation through batched
+        ``GPBank.update`` rounds; returns the number of rows absorbed.
+        Each round is a distinct-tenant batch: per-tenant chunks are padded
+        to ``ingest_chunk`` rows and row-masked, and tenants with several
+        chunks pending are spread across successive rounds.  The group
+        axis is padded to a power-of-two bucket with fully-masked identity
+        groups aimed at distinct unused slots, so at most log2(capacity)
+        update executables ever exist no matter how the tenant mix varies
+        round to round.
+
+        If a round fails (e.g. a queued tenant was evicted from a bank
+        swapped in behind the router's back), the current round's rows and
+        everything still queued are restored to the observation queue
+        before the error propagates — earlier rounds stay absorbed (their
+        updates already landed), nothing is silently dropped."""
+        if not self._observations:
+            return 0
+        queues = {t: list(rows) for t, rows in self._observations.items()}
+        self._observations = {}
+        k = self.ingest_chunk
+        absorbed = 0
+        p = self.bank.spec.p
+        while queues:
+            slots, Xg, yg, mg = [], [], [], []
+            taken: dict[Hashable, list] = {}
+            try:
+                for t in list(queues):
+                    rows, rest = queues[t][:k], queues[t][k:]
+                    if rest:
+                        queues[t] = rest
+                    else:
+                        del queues[t]
+                    taken[t] = rows
+                    X = np.zeros((k, p), np.float32)
+                    y = np.zeros((k,), np.float32)
+                    m = np.zeros((k,), np.float32)
+                    for i, (x, yv) in enumerate(rows):
+                        X[i], y[i], m[i] = x, yv, 1.0
+                    slots.append(self.bank.slot_of(t))
+                    Xg.append(X)
+                    yg.append(y)
+                    mg.append(m)
+                # pad the group axis to a shape bucket (masked identity
+                # groups on distinct unused slots — GPBank._update_at_slots)
+                G = len(slots)
+                bucket = min(self.bank.capacity, 1 << (G - 1).bit_length())
+                if bucket > G:
+                    used = set(slots)
+                    free = (s for s in range(self.bank.capacity)
+                            if s not in used)
+                    for _ in range(bucket - G):
+                        slots.append(next(free))
+                        Xg.append(np.zeros((k, p), np.float32))
+                        yg.append(np.zeros((k,), np.float32))
+                        mg.append(np.zeros((k,), np.float32))
+                self.bank = self.bank._update_at_slots(
+                    jnp.asarray(np.array(slots, np.int32)),
+                    jnp.asarray(np.stack(Xg)), jnp.asarray(np.stack(yg)),
+                    jnp.asarray(np.stack(mg)),
+                )
+            except Exception:
+                for t, rows in taken.items():
+                    queues[t] = rows + queues.get(t, [])
+                for t, rows in queues.items():
+                    self._observations[t] = rows + self._observations.get(
+                        t, []
+                    )
+                raise
+            absorbed += sum(len(rows) for rows in taken.values())
+        return absorbed

@@ -524,6 +524,21 @@ class FitBackend:
               core.distributed (partial sums, psum'd before the solve).
     supports: (spec) -> None if the backend can run the spec, else a short
               reason string surfaced in the ValueError raised at dispatch.
+
+    Bank hooks (the multi-tenant fleet path, ``repro.bank.GPBank``) — both
+    optional; ``bank.GPBank`` falls back to a vmap of the single-model
+    entry points when a backend leaves them None:
+
+    bank_moments:  (Xb (B,N,p), yb (B,N), params, idx, aux, n_max,
+                   block_rows, maskb (B,N)) -> (G (B,M,M), b (B,M)) — raw
+                   fit moments for B independent datasets in one batched
+                   call; per-slot row masks express ragged per-tenant N.
+    bank_mean_var: (stack, binv (C,M,M), slots (Q,), Xq (Q,p), aux, n_max)
+                   -> (mu, var) for a mixed-tenant query batch against a
+                   stacked FAGPState (leading bank axis on
+                   chol/u/b/lam/sqrtlam); ``binv`` is the per-slot B^{-1}
+                   serving cache (``_bank_binv``), recomputed by GPBank
+                   only when the stack changes.
     """
 
     name: str
@@ -533,6 +548,8 @@ class FitBackend:
     mean_var: Callable[..., tuple]
     moments: Callable[..., tuple]
     supports: Callable[["GPSpec"], Optional[str]] = _supports_everything
+    bank_moments: Optional[Callable[..., tuple]] = None
+    bank_mean_var: Optional[Callable[..., tuple]] = None
 
 
 _BACKENDS: dict[str, FitBackend] = {}
@@ -619,6 +636,72 @@ def _jnp_mean_var(state, Xs, aux, n_max):
     return _mean_var_jnp(state, Xs, n_max)
 
 
+# --- bank (multi-tenant) hooks ---------------------------------------------
+# One stacked FAGPState holds B independent fitted sessions (leading bank
+# axis on chol/u/b/lam/sqrtlam; idx/params/spec shared).  ``bank_moments``
+# computes B fits' sufficient statistics in one batched call;
+# ``bank_mean_var`` answers one padded mixed-tenant query batch by gathering
+# each query row's slot state — both are single compiled executables
+# regardless of how many tenants are in flight (see repro.bank).
+
+
+@jax.jit
+def _bank_binv(chol_s):
+    """Per-slot B^{-1} (C, M, M) from the stacked Cholesky factors — the
+    bank's serving cache.  Computed once per bank *version* (GPBank caches
+    it until the next fit/update/insert/evict), so the per-query serving
+    path below is pure gather + GEMV instead of Q tiny triangular solves
+    (which are dispatch-bound: one LAPACK call per query row)."""
+    M = chol_s.shape[-1]
+    eye = jnp.eye(M, dtype=chol_s.dtype)
+    return jax.vmap(lambda c: jax.scipy.linalg.cho_solve((c, True), eye))(
+        chol_s
+    )
+
+
+@jax.jit
+def _bank_gathered_posterior(binv_s, u_s, sqrtlam_s, slots, Phis):
+    """Mixed-tenant posterior from a stacked state: query row q reads slot
+    ``slots[q]``.  Shared by every backend's bank_mean_var — only the
+    feature construction differs.  binv_s (C,M,M) from ``_bank_binv``,
+    u_s (C,M), sqrtlam_s (C,M), slots (Q,), Phis (Q,M)
+    -> (mu (Q,), var (Q,))."""
+    mu = jnp.sum(Phis * u_s[slots], axis=1)
+    PhisD = Phis * sqrtlam_s[slots]                      # (Q, M)
+    var = jnp.einsum("qm,qmn,qn->q", PhisD, binv_s[slots], PhisD)
+    return mu, var
+
+
+@partial(jax.jit, static_argnames=("n_max", "block_rows"))
+def _jnp_bank_moments_jit(Xb, yb, params, idx, n_max, block_rows, maskb):
+    f = lambda X, y, m: _accumulate_moments(
+        X, y, params, idx, n_max, block_rows, row_mask=m
+    )
+    return jax.vmap(f)(Xb, yb, maskb)
+
+
+def _jnp_bank_moments(Xb, yb, params, idx, aux, n_max, block_rows, maskb=None):
+    if maskb is None:
+        maskb = jnp.ones(Xb.shape[:2], Xb.dtype)
+    # banks hold SMALL tenants: never let the scan pad a slot's few rows up
+    # to the default serving block (the pallas path clamps block_k likewise)
+    block_rows = min(block_rows, max(1, Xb.shape[1]))
+    return _jnp_bank_moments_jit(Xb, yb, params, idx, n_max, block_rows, maskb)
+
+
+def _gathered_bank_mean_var(features):
+    """Build a ``bank_mean_var`` from a backend's feature map: the gathered
+    serving path is backend-independent (one home, above) — only the
+    feature construction differs.  Used for both built-in backends and as
+    the fallback for third-party backends that declare no bank hooks."""
+    def f(stack, binv, slots, Xq, aux, n_max):
+        Phis = features(Xq, stack.params, stack.idx, aux, n_max)
+        return _bank_gathered_posterior(
+            binv, stack.u, stack.sqrtlam, slots, Phis
+        )
+    return f
+
+
 # --- pallas backend (fused TPU kernels; interpret mode on CPU) -------------
 
 # The kernels unroll the scaled Hermite recurrence n_max times inside the
@@ -673,14 +756,32 @@ def _pallas_mean_var(state, Xs, aux, n_max):
     return _mean_var_pallas(state, Xs, aux, n_max)
 
 
+def _pallas_bank_moments(Xb, yb, params, idx, aux, n_max, block_rows,
+                         maskb=None):
+    """One kernel launch for the whole bank: the bank axis is a leading
+    grid dimension of the streaming fused kernel, so Hermite-feature tiles
+    for different tenants are generated in VMEM tile-by-tile — B separate
+    N x M Phis never materialize (kernels/phi_gram.bank_phi_gram_kernel)."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    consts = kref.phi_consts(params.eps, params.rho)
+    return kops.bank_fused_fit_moments(Xb, yb, consts, aux, maskb,
+                                       n_max=n_max)
+
+
 register_backend(FitBackend(
     name="jnp", prepare=lambda idx_np, n: None, fit=_jnp_fit,
     features=_jnp_features, mean_var=_jnp_mean_var, moments=_jnp_moments,
+    bank_moments=_jnp_bank_moments,
+    bank_mean_var=_gathered_bank_mean_var(_jnp_features),
 ))
 register_backend(FitBackend(
     name="pallas", prepare=_pallas_prepare, fit=_pallas_fit,
     features=_pallas_features, mean_var=_pallas_mean_var,
     moments=_pallas_moments, supports=_pallas_supports,
+    bank_moments=_pallas_bank_moments,
+    bank_mean_var=_gathered_bank_mean_var(_pallas_features),
 ))
 
 
@@ -803,26 +904,35 @@ def _chol_rank1_update(L: jax.Array, w: jax.Array) -> jax.Array:
     return L
 
 
-@jax.jit
-def _update_state(state: FAGPState, Phi_new: jax.Array, y_new: jax.Array):
-    sig2 = state.params.noise**2
+def _update_arrays(chol, b, sqrtlam, noise, Phi_new, y_new):
+    """Array-level rank-K update core: (chol, b) -> (chol', b', u').
+
+    Shared by the single-session ``fit_update`` and the bank's batched
+    update (``repro.bank``, vmapped over slots — every op here batches)."""
+    sig2 = noise**2
     # B_new = B + sum_k v_k v_k^T,  v_k = D phi_k / sigma  (rank-K update)
-    W = Phi_new * state.sqrtlam[None, :] / state.params.noise
+    W = Phi_new * sqrtlam[None, :] / noise
     K, M = W.shape
     if K * 8 <= M:
         # small K: sequential rank-1 sweeps, O(K M^2), beats refactorization
         chol, _ = jax.lax.scan(
-            lambda L, w: (_chol_rank1_update(L, w), None), state.chol, W
+            lambda L, w: (_chol_rank1_update(L, w), None), chol, W
         )
     else:
         # K comparable to M: the rank-1 sweep is K*M sequential latency-bound
         # steps; rebuilding the M x M factor is O(M^3/3) fully-parallel work
         # and still never touches the original N rows
-        B = state.chol @ state.chol.T + W.T @ W
+        B = chol @ chol.T + W.T @ W
         chol = jnp.linalg.cholesky(B)
-    b = state.b + Phi_new.T @ y_new
-    u = _solve_mean_weights(chol, state.sqrtlam, b, sig2)
+    b = b + Phi_new.T @ y_new
+    u = _solve_mean_weights(chol, sqrtlam, b, sig2)
     return chol, b, u
+
+
+@jax.jit
+def _update_state(state: FAGPState, Phi_new: jax.Array, y_new: jax.Array):
+    return _update_arrays(state.chol, state.b, state.sqrtlam,
+                          state.params.noise, Phi_new, y_new)
 
 
 def fit_update(

@@ -18,11 +18,11 @@ from . import ref
 from .diag_quad import diag_quad_kernel
 from .gram import scaled_gram_kernel
 from .hermite_phi import hermite_phi_kernel
-from .phi_gram import phi_gram_kernel
+from .phi_gram import bank_phi_gram_kernel, phi_gram_kernel
 
 __all__ = [
     "hermite_phi", "scaled_gram", "diag_quad", "fused_fit_moments",
-    "resolve_interpret",
+    "bank_fused_fit_moments", "resolve_interpret",
 ]
 
 
@@ -123,6 +123,53 @@ def fused_fit_moments(
     # padded columns (d = 0, S = 0) contribute identity rows when scale=True
     # and zero rows otherwise; both slice away
     return B[:M, :M], b[0, :M]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_max", "block_m", "block_k", "interpret"),
+)
+def bank_fused_fit_moments(
+    Xb: jax.Array,           # (B, N, p) per-slot inputs (N = padded row cap)
+    yb: jax.Array,           # (B, N)    per-slot targets
+    consts: jax.Array,       # (p, 3) from ref.phi_consts (shared spec)
+    S: jax.Array,            # (p*n_max, M) one-hot from ref.one_hot_selection
+    mask: jax.Array | None = None,  # (B, N) per-slot row validity (ragged N)
+    *,
+    n_max: int,
+    block_m: int = 256,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Raw fit moments for a whole bank of B independent GPs in ONE kernel
+    launch: G (B, M, M) with G_s = Phi_s^T Phi_s and b (B, M) with
+    b_s = Phi_s^T y_s.  The bank axis is a leading grid dimension of the
+    streaming fused kernel (kernels/phi_gram.bank_phi_gram_kernel), so the
+    Hermite-feature tiles of different slots are generated in VMEM one tile
+    at a time — B separate N x M Phi matrices never exist in HBM.
+
+    ``mask`` rows with 0.0 are excluded from both statistics, which is how
+    ragged per-tenant N is expressed on a fixed (B, N, p) stack.
+    """
+    nbank, N, p = Xb.shape
+    M = S.shape[1]
+    interp = resolve_interpret(interpret)
+    block_k = min(block_k, max(8, 1 << (N - 1).bit_length()))
+    block_m = min(block_m, max(128, 1 << (M - 1).bit_length()))
+    Xt = _pad_to(jnp.swapaxes(Xb, 1, 2).astype(jnp.float32), 2, block_k)
+    Sp = _pad_to(S.astype(jnp.float32), 1, block_m)
+    yp = _pad_to(yb.reshape(nbank, 1, N).astype(jnp.float32), 2, block_k)
+    if mask is None:
+        mask = jnp.ones((nbank, 1, N), jnp.float32)
+    else:
+        mask = mask.reshape(nbank, 1, N).astype(jnp.float32)
+    mask = _pad_to(mask, 2, block_k)
+    G, b = bank_phi_gram_kernel(
+        Xt, consts, Sp, yp, mask, n_max=n_max, block_m=block_m,
+        block_k=block_k, interpret=interp,
+    )
+    # padded columns (S = 0) contribute zero rows/cols; both slice away
+    return G[:, :M, :M], b[:, 0, :M]
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))

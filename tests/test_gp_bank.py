@@ -1,0 +1,456 @@
+"""Tests for the GPBank multi-tenant subsystem (repro.bank).
+
+Pins the contracts of the bank tentpole:
+  1. batched == loop-of-singles: GPBank.fit / mean_var / update agree with
+     per-tenant single-model GP calls on BOTH backends (pallas in interpret
+     mode on CPU) — serving the same states matches to <= 1e-5 abs (the
+     acceptance gate), refitting matches to f32-fit tolerance;
+  2. the bank Pallas kernel (bank grid axis in kernels/phi_gram) == the
+     vmapped jnp moments, including ragged per-tenant row masks;
+  3. membership churn (insert / evict / slot reuse) never recompiles the
+     serving executable — pinned via jax.jit cache-miss counts;
+  4. the router preserves per-ticket association for mixed-tenant traffic
+     regardless of arrival order, microbatch packing, and tail padding,
+     and its ingest path equals direct batched updates.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.bank import BankRouter, GPBank
+from repro.bank import bank as bank_mod
+from repro.core import fagp
+from repro.core.gp import GP, GPSpec
+from repro.data import make_gp_dataset
+
+
+def _fleet(B, N, p, n, *, seed=0, backend="jnp", capacity=None):
+    rng = np.random.default_rng(seed)
+    spec = GPSpec.create(n, eps=[0.8] * p, rho=2.0, noise=0.05,
+                         backend=backend)
+    Xb = np.zeros((B, N, p), np.float32)
+    yb = np.zeros((B, N), np.float32)
+    for s in range(B):
+        X, y, *_ = make_gp_dataset(N, p, seed=seed + s)
+        Xb[s], yb[s] = np.asarray(X), np.asarray(y)
+    bank = GPBank.fit(jnp.asarray(Xb), jnp.asarray(yb), spec,
+                      capacity=capacity)
+    Xq = jnp.asarray(rng.uniform(-1, 1, size=(3 * B, p)).astype(np.float32))
+    tenants = [int(t) for t in rng.integers(0, B, 3 * B)]
+    return bank, Xb, yb, spec, Xq, tenants
+
+
+class TestBankMoments:
+    @pytest.mark.parametrize("ragged", [False, True])
+    def test_pallas_bank_kernel_matches_jnp_vmap(self, ragged):
+        """The new bank grid axis in kernels/phi_gram == vmapped jnp scan
+        moments, with and without per-slot row masks."""
+        B, N, p, n = 5, 40, 2, 6
+        rng = np.random.default_rng(3)
+        spec = GPSpec.create(n, eps=[0.8] * p, rho=2.0, noise=0.05)
+        Xb = jnp.asarray(rng.uniform(-1, 1, (B, N, p)).astype(np.float32))
+        yb = jnp.asarray(rng.standard_normal((B, N)).astype(np.float32))
+        mask = jnp.asarray(
+            (rng.uniform(size=(B, N)) > 0.4).astype(np.float32)
+        ) if ragged else jnp.ones((B, N), jnp.float32)
+        idx_np = spec.indices(p)
+        idx = jnp.asarray(idx_np)
+        out = {}
+        for name in ("jnp", "pallas"):
+            be = fagp.get_backend(name)
+            aux = be.prepare(idx_np, n)
+            out[name] = be.bank_moments(
+                Xb, yb, spec.params, idx, aux, n, 64, mask
+            )
+        np.testing.assert_allclose(
+            np.asarray(out["pallas"][0]), np.asarray(out["jnp"][0]),
+            rtol=1e-3, atol=1e-3,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out["pallas"][1]), np.asarray(out["jnp"][1]),
+            rtol=1e-3, atol=1e-3,
+        )
+
+
+class TestBatchedVsLoop:
+    """The acceptance gate: a B=64 bank of small tenants (n=8, p=2) serves
+    a mixed-tenant batch identically (<= 1e-5 abs) to a Python loop of
+    single-model GP.mean_var over the same per-tenant sessions."""
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_mean_var_matches_loop_b64(self, backend):
+        bank, *_ , Xq, tenants = _fleet(64, 8, 2, 8, backend=backend)
+        mu, var = bank.mean_var(tenants, Xq)
+        mu, var = np.asarray(mu), np.asarray(var)
+        for t in sorted(set(tenants)):
+            rows = np.flatnonzero(np.asarray(tenants) == t)
+            gp = GP.from_state(bank.state(t))
+            m1, v1 = gp.mean_var(Xq[jnp.asarray(rows)])
+            np.testing.assert_allclose(mu[rows], np.asarray(m1), atol=1e-5)
+            np.testing.assert_allclose(var[rows], np.asarray(v1), atol=1e-5)
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_bank_fit_matches_single_fits(self, backend):
+        """Batched fit == per-tenant fit to f32-fit tolerance (independent
+        factorizations, different reduction orders)."""
+        bank, Xb, yb, spec, Xq, _ = _fleet(6, 24, 2, 6, backend=backend)
+        for t in range(6):
+            st = fagp.fit(jnp.asarray(Xb[t]), jnp.asarray(yb[t]), spec)
+            m1, v1 = fagp.predict_mean_var(st, Xq[:8])
+            m2, v2 = bank.mean_var([t] * 8, Xq[:8])
+            np.testing.assert_allclose(
+                np.asarray(m2), np.asarray(m1), rtol=5e-3, atol=2e-4
+            )
+            np.testing.assert_allclose(
+                np.asarray(v2), np.asarray(v1), rtol=5e-3, atol=2e-4
+            )
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_batched_update_matches_loop(self, backend):
+        """GPBank.update == per-tenant fit_update on the same states,
+        including a ragged (row-masked) ingest group."""
+        bank, *_, Xq, _ = _fleet(6, 24, 2, 6, backend=backend)
+        rng = np.random.default_rng(11)
+        ids = [1, 4, 5]
+        k = 8
+        Xk = rng.uniform(-1, 1, size=(3, k, 2)).astype(np.float32)
+        yk = rng.standard_normal((3, k)).astype(np.float32)
+        mask = np.ones((3, k), np.float32)
+        mask[2, 3:] = 0.0  # tenant 5 ingests only 3 real rows
+        before = {t: bank.state(t) for t in ids}
+        up = bank.update(ids, jnp.asarray(Xk), jnp.asarray(yk),
+                         jnp.asarray(mask))
+        for g, t in enumerate(ids):
+            kept = int(mask[g].sum())
+            st = fagp.fit_update(
+                before[t], jnp.asarray(Xk[g, :kept]), jnp.asarray(yk[g, :kept])
+            )
+            m1, v1 = fagp.predict_mean_var(st, Xq[:6])
+            m2, v2 = up.mean_var([t] * 6, Xq[:6])
+            np.testing.assert_allclose(
+                np.asarray(m2), np.asarray(m1), atol=1e-5
+            )
+            np.testing.assert_allclose(
+                np.asarray(v2), np.asarray(v1), atol=1e-5
+            )
+        # untouched tenants keep their exact posterior
+        m0a, _ = bank.mean_var([0] * 4, Xq[:4])
+        m0b, _ = up.mean_var([0] * 4, Xq[:4])
+        np.testing.assert_array_equal(np.asarray(m0a), np.asarray(m0b))
+
+    def test_update_rejects_duplicate_tenants(self):
+        bank, *_ = _fleet(4, 16, 2, 5)
+        Xk = jnp.zeros((2, 3, 2))
+        yk = jnp.zeros((2, 3))
+        with pytest.raises(ValueError, match="duplicate tenant"):
+            bank.update([2, 2], Xk, yk)
+
+    def test_update_rejects_misshapen_mask(self):
+        """A (1, k) mask would broadcast over every group and silently
+        drop rows fleet-wide; the shape is validated like fit's."""
+        bank, *_ = _fleet(4, 16, 2, 5)
+        Xk = jnp.zeros((2, 3, 2))
+        yk = jnp.zeros((2, 3))
+        with pytest.raises(ValueError, match="mask must be"):
+            bank.update([0, 1], Xk, yk, mask=jnp.ones((1, 3)))
+
+    def test_incremental_binv_carry_matches_fresh_cache(self):
+        """A bank whose serving cache was carried through update / insert /
+        evict answers exactly like one that rebuilds the cache from
+        scratch."""
+        bank, *_, Xq, tenants = _fleet(5, 16, 2, 5, capacity=6)
+        bank.mean_var(tenants[:6], Xq[:6])  # populate the parent cache
+        rng = np.random.default_rng(8)
+        Xk = jnp.asarray(rng.uniform(-1, 1, (2, 4, 2)).astype(np.float32))
+        yk = jnp.asarray(rng.standard_normal((2, 4)).astype(np.float32))
+        Xn, yn, *_ = make_gp_dataset(16, 2, seed=70)
+        mutate = lambda b: (
+            b.update([1, 3], Xk, yk).evict(0).insert("n", (Xn, yn))
+        )
+        carried = mutate(bank)
+        assert "_binv_cache" in carried.__dict__  # cache rode along
+        fresh = mutate(GPBank.from_states(bank.states(), capacity=6))
+        assert "_binv_cache" not in fresh.__dict__
+        q = ["n", 1, 3, 2, "n", 4]
+        m1, v1 = carried.mean_var(q, Xq[:6])
+        m2, v2 = fresh.mean_var(q, Xq[:6])
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+        np.testing.assert_allclose(
+            np.asarray(v1), np.asarray(v2), rtol=1e-6, atol=1e-9
+        )
+
+
+class TestFallbackHooks:
+    def test_backend_without_bank_hooks_falls_back_to_vmap(self):
+        """A third-party backend that never heard of banks still works:
+        GPBank vmaps its single-model moments and gathers over its feature
+        map — and matches the native-hook result exactly."""
+        base = fagp.get_backend("jnp")
+        plain = dataclasses.replace(
+            base, name="plain", bank_moments=None, bank_mean_var=None
+        )
+        fagp.register_backend(plain)
+        try:
+            bank, Xb, yb, spec, Xq, tenants = _fleet(4, 16, 2, 5)
+            bank2 = GPBank.fit(
+                jnp.asarray(Xb), jnp.asarray(yb),
+                spec.replace(backend="plain"),
+            )
+            m1, v1 = bank.mean_var(tenants, Xq)
+            m2, v2 = bank2.mean_var(tenants, Xq)
+            np.testing.assert_allclose(
+                np.asarray(m2), np.asarray(m1), atol=1e-6
+            )
+            np.testing.assert_allclose(
+                np.asarray(v2), np.asarray(v1), atol=1e-6
+            )
+        finally:
+            fagp._BACKENDS.pop("plain", None)
+
+
+class TestRaggedFit:
+    def test_masked_fit_equals_unpadded_fits(self):
+        """Tenants with different true N on one fixed (B, N, p) stack: the
+        row mask must make padding mathematically invisible."""
+        B, N, p, n = 5, 32, 2, 6
+        bank_full, Xb, yb, spec, Xq, _ = _fleet(B, N, p, n)
+        true_n = [32, 20, 7, 32, 1]
+        mask = np.zeros((B, N), np.float32)
+        for t, cut in enumerate(true_n):
+            mask[t, :cut] = 1.0
+        bank = GPBank.fit(jnp.asarray(Xb), jnp.asarray(yb), spec,
+                          mask=jnp.asarray(mask))
+        for t, cut in enumerate(true_n):
+            st = fagp.fit(
+                jnp.asarray(Xb[t, :cut]), jnp.asarray(yb[t, :cut]), spec
+            )
+            m1, v1 = fagp.predict_mean_var(st, Xq[:6])
+            m2, v2 = bank.mean_var([t] * 6, Xq[:6])
+            np.testing.assert_allclose(
+                np.asarray(m2), np.asarray(m1), rtol=5e-3, atol=2e-4
+            )
+            np.testing.assert_allclose(
+                np.asarray(v2), np.asarray(v1), rtol=5e-3, atol=2e-4
+            )
+
+    def test_fully_masked_slot_serves_the_prior(self):
+        """A reserved (capacity > B) slot holds the prior state (chol = I,
+        u = b = 0) — exactly what create() builds."""
+        bank, *_, spec, Xq, _ = _fleet(3, 16, 2, 5, capacity=5)
+        st = dataclasses.replace(
+            bank.stack,
+            lam=bank.stack.lam[3], sqrtlam=bank.stack.sqrtlam[3],
+            chol=bank.stack.chol[3], u=bank.stack.u[3], b=bank.stack.b[3],
+        )
+        np.testing.assert_allclose(
+            np.asarray(st.chol), np.eye(bank.n_features), atol=1e-6
+        )
+        np.testing.assert_array_equal(np.asarray(st.u), 0.0)
+
+
+class TestMembershipChurn:
+    def test_insert_evict_reuse_slot_without_recompile(self):
+        """The serving executable and the slot-write executable are keyed
+        on the stack shapes only: churning tenants through a fixed-capacity
+        bank must not add a single jit cache entry."""
+        bank, Xb, yb, spec, Xq, _ = _fleet(3, 16, 2, 5, capacity=4)
+        q = [0, 1, 2, 0]
+        bank.mean_var(q, Xq[:4])  # warm every executable once
+        X4, y4, *_ = make_gp_dataset(16, 2, seed=50)
+        bank.insert("warm", (X4, y4))  # warm insert's fit+write path
+        writes0 = bank_mod._write_slot._cache_size()
+        serve0 = fagp._bank_gathered_posterior._cache_size()
+
+        b = bank
+        for r in range(3):  # churn: insert -> serve -> evict -> reinsert
+            Xn, yn, *_ = make_gp_dataset(16, 2, seed=60 + r)
+            b = b.insert(f"tenant-{r}", (Xn, yn))
+            assert b.slot_of(f"tenant-{r}") == 3  # slot reused every round
+            mu, var = b.mean_var([f"tenant-{r}", 0, 1, f"tenant-{r}"], Xq[:4])
+            assert np.all(np.isfinite(np.asarray(mu)))
+            b = b.evict(f"tenant-{r}")
+
+        assert bank_mod._write_slot._cache_size() == writes0
+        assert fagp._bank_gathered_posterior._cache_size() == serve0
+
+    def test_insert_validates_spec_and_capacity(self):
+        bank, Xb, yb, spec, *_ = _fleet(2, 16, 2, 5)
+        X, y, *_ = make_gp_dataset(16, 2, seed=9)
+        with pytest.raises(ValueError, match="bank is full"):
+            bank.insert("t", (X, y))
+        bank4 = GPBank.create(spec, 4)
+        other = fagp.fit(X, y, spec.replace(n=4))
+        with pytest.raises(ValueError, match="spec/state mismatch"):
+            bank4.insert("t", other)
+        hyper = fagp.fit(X, y, spec.replace(noise=jnp.float32(0.5)))
+        with pytest.raises(ValueError, match="different noise"):
+            bank4.insert("t", hyper)
+        with pytest.raises(ValueError, match="already in the bank"):
+            bank.insert(0, (X, y))
+
+    def test_store_train_is_downgraded_not_contradicted(self):
+        """Banks never store per-tenant Phi; a store_train=True spec is
+        normalized so unstacked states stay self-consistent (a state whose
+        spec claims stored features while Phi is None would turn the
+        paper-mode 'refit with store_train=True' guidance into a loop)."""
+        B, N, p, n = 3, 16, 2, 5
+        spec = GPSpec.create(n, eps=[0.8] * p, rho=2.0, noise=0.05,
+                             store_train=True)
+        Xb = np.zeros((B, N, p), np.float32)
+        yb = np.zeros((B, N), np.float32)
+        for s in range(B):
+            X, y, *_ = make_gp_dataset(N, p, seed=s)
+            Xb[s], yb[s] = np.asarray(X), np.asarray(y)
+        bank = GPBank.fit(jnp.asarray(Xb), jnp.asarray(yb), spec)
+        assert bank.spec.store_train is False
+        st = bank.state(0)
+        assert st.spec.store_train is False and st.Phi is None
+        with pytest.raises(ValueError, match="store_train=True"):
+            fagp.predict(st, jnp.asarray(Xb[0][:4]), mode="paper")
+
+    def test_evicted_tenant_is_gone_and_states_roundtrip(self):
+        bank, *_ = _fleet(3, 16, 2, 5)
+        b = bank.evict(1)
+        assert 1 not in b and len(b) == 2
+        with pytest.raises(KeyError, match="not in this bank"):
+            b.slot_of(1)
+        rebuilt = GPBank.from_states(b.states(), capacity=3)
+        Xq = jnp.asarray(
+            np.random.default_rng(1).uniform(-1, 1, (4, 2)).astype(np.float32)
+        )
+        m1, v1 = b.mean_var([0, 2, 0, 2], Xq)
+        m2, v2 = rebuilt.mean_var([0, 2, 0, 2], Xq)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(m1), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(v1), atol=1e-6)
+
+
+class TestRouter:
+    def test_mixed_tenant_order_preservation(self):
+        """Tickets map back to the right (tenant, query) no matter how the
+        batcher packs them: interleaved arrival, microbatch smaller than
+        the backlog, padded tail."""
+        bank, *_ = _fleet(4, 16, 2, 5)
+        router = BankRouter(bank, microbatch=5)
+        order = [0, 3, 1, 0, 2, 3, 3, 1, 0, 2, 1, 2, 0]  # 13 rows -> 3 blocks
+        Xq = jnp.asarray(
+            np.random.default_rng(7)
+            .uniform(-1, 1, (len(order), 2))
+            .astype(np.float32)
+        )
+        tickets = [
+            (router.submit(t, np.asarray(Xq[i])), t, i)
+            for i, t in enumerate(order)
+        ]
+        assert router.pending == len(order)
+        results = router.flush()
+        assert router.pending == 0
+        assert set(results) == {tk for tk, _, _ in tickets}
+        for tk, t, i in tickets:
+            m1, v1 = bank.mean_var([t], Xq[i : i + 1])
+            assert results[tk][0] == pytest.approx(float(m1[0]), abs=1e-6)
+            assert results[tk][1] == pytest.approx(float(v1[0]), abs=1e-6)
+
+    def test_flush_empty_is_noop(self):
+        bank, *_ = _fleet(2, 16, 2, 5)
+        assert BankRouter(bank).flush() == {}
+
+    def test_ingest_equals_direct_updates(self):
+        """Router ingest (grouped, padded, masked, multi-round) == direct
+        batched updates with the same rows."""
+        bank, *_, Xq, _ = _fleet(3, 16, 2, 5)
+        rng = np.random.default_rng(21)
+        rows = {0: 5, 2: 2}  # tenant 0 spans 2 chunks of 4 -> 2 rounds
+        router = BankRouter(bank, ingest_chunk=4)
+        direct = {t: bank.state(t) for t in rows}
+        for t, cnt in rows.items():
+            X = rng.uniform(-1, 1, (cnt, 2)).astype(np.float32)
+            y = rng.standard_normal(cnt).astype(np.float32)
+            for i in range(cnt):
+                router.observe(t, X[i], y[i])
+            direct[t] = fagp.fit_update(
+                direct[t], jnp.asarray(X), jnp.asarray(y)
+            )
+        assert router.ingest() == 7
+        for t in rows:
+            m1, v1 = fagp.predict_mean_var(direct[t], Xq[:5])
+            m2, v2 = router.bank.mean_var([t] * 5, Xq[:5])
+            np.testing.assert_allclose(
+                np.asarray(m2), np.asarray(m1), rtol=1e-4, atol=2e-5
+            )
+            np.testing.assert_allclose(
+                np.asarray(v2), np.asarray(v1), rtol=1e-4, atol=2e-5
+            )
+
+    def test_ingest_buckets_group_axis_no_recompile(self):
+        """Rounds with different tenant-mix sizes inside one power-of-two
+        bucket reuse the same update executable, and the masked identity
+        pad groups leave their pad-target slots bit-identical."""
+        bank, *_ = _fleet(6, 16, 2, 5, capacity=8)
+        rng = np.random.default_rng(33)
+        router = BankRouter(bank, ingest_chunk=4)
+
+        def observe(tenants):
+            for t in tenants:
+                router.observe(
+                    t, rng.uniform(-1, 1, 2).astype(np.float32),
+                    float(rng.standard_normal()),
+                )
+
+        spare = bank.state(3)   # slot 3 = first free slot -> pad target
+        observe([0, 1, 2])      # G=3 -> bucket 4 (one pad group on slot 3)
+        router.ingest()
+        size0 = bank_mod._bank_update_scatter._cache_size()
+        after = router.bank.state(3)
+        np.testing.assert_array_equal(
+            np.asarray(spare.chol), np.asarray(after.chol)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(spare.u), np.asarray(after.u)
+        )
+        observe([0, 2, 4, 5])   # G=4 -> same bucket, same executable
+        router.ingest()
+        assert bank_mod._bank_update_scatter._cache_size() == size0
+
+    def test_failed_flush_restores_whole_backlog(self):
+        """A mid-flush failure (tenant evicted from a bank swapped in
+        behind the router) must not destroy the backlog: queries are
+        idempotent reads, so EVERY ticket — including blocks that were
+        served before the failure, whose results die with the exception —
+        stays redeemable once the bank is repaired."""
+        bank, *_ = _fleet(3, 16, 2, 5)
+        router = BankRouter(bank, microbatch=2)
+        x = np.zeros(2, np.float32)
+        tickets = [router.submit(t, x) for t in (0, 1, 2, 0)]
+        router.bank = bank.evict(2)  # breaks the second block only
+        with pytest.raises(KeyError, match="not in this bank"):
+            router.flush()
+        assert router.pending == 4
+        router.bank = bank  # repair
+        results = router.flush()
+        assert set(results) == set(tickets)
+
+    def test_failed_ingest_restores_observations(self):
+        """Same contract on the ingest path: a failing round restores its
+        own rows and everything still queued; earlier rounds stay
+        absorbed."""
+        bank, *_ = _fleet(3, 16, 2, 5)
+        router = BankRouter(bank, ingest_chunk=4)
+        x = np.zeros(2, np.float32)
+        for t in (0, 1):
+            router.observe(t, x, 0.5)
+        router.bank = bank.evict(1)
+        with pytest.raises(KeyError, match="not in this bank"):
+            router.ingest()
+        router.bank = bank  # repair: both observations still queued
+        assert router.ingest() == 2
+
+    def test_unknown_tenant_rejected_at_submit(self):
+        bank, *_ = _fleet(2, 16, 2, 5)
+        router = BankRouter(bank)
+        with pytest.raises(KeyError, match="not in this bank"):
+            router.submit("ghost", np.zeros(2, np.float32))
+        with pytest.raises(KeyError, match="not in this bank"):
+            router.observe("ghost", np.zeros(2, np.float32), 0.0)
