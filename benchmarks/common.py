@@ -1,11 +1,92 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, and the merged
+kernel-family trajectory file ``BENCH_expansions.json``.
+
+Benchmarks that grew an ``--expansion`` axis (kernel_micro, fagp_vs_exact,
+gp_bank) record their per-expansion rows through
+:func:`record_expansion_result`; rows are merged by (bench, expansion,
+name) so re-running one benchmark or one expansion updates its rows in
+place and the file accumulates the whole capability x kernel-family matrix
+(CI validates the schema every run)."""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 
-__all__ = ["time_fn", "emit"]
+__all__ = ["time_fn", "emit", "record_expansion_result", "EXPANSIONS_JSON",
+           "expansion_names", "bench_spec", "cli_expansion"]
+
+
+def expansion_names() -> list:
+    """The registered kernel-expansion families — THE one list the
+    ``--expansion all`` benchmark axes iterate.  A newly registered family
+    appears here automatically but also needs a spec recipe in
+    :func:`bench_spec` before the benchmarks can drive it."""
+    from repro.core.expansions import available_expansions
+
+    return available_expansions()
+
+
+def bench_spec(expansion: str, p: int, *, n: int, num_features: int,
+               backend: str = "jnp", seed: int = 0, noise: float = 0.05):
+    """The one benchmark spec recipe per expansion family (shared by
+    kernel_micro / fagp_vs_exact / gp_bank so a new family is wired up in
+    exactly one place)."""
+    from repro.core.gp import GPSpec
+
+    if expansion == "hermite":
+        return GPSpec.create(n, eps=[0.8] * p, rho=2.0, noise=noise,
+                             backend=backend)
+    if expansion.startswith("rff_"):
+        return GPSpec.create_rff(
+            [0.8] * p, noise=noise, kernel=expansion[4:],
+            num_features=num_features, seed=seed, backend=backend,
+        )
+    raise ValueError(
+        f"no benchmark spec recipe for expansion {expansion!r}; add one in "
+        f"benchmarks/common.py::bench_spec"
+    )
+
+
+def cli_expansion(argv) -> str:
+    """Parse the shared ``--expansion NAME|all`` benchmark flag."""
+    if "--expansion" in argv:
+        i = argv.index("--expansion") + 1
+        if i >= len(argv):
+            raise SystemExit(
+                "usage: --expansion <hermite|rff_se|rff_matern52|...|all>"
+            )
+        return argv[i]
+    return "hermite"
+
+
+EXPANSIONS_JSON = Path(__file__).resolve().parents[1] / "BENCH_expansions.json"
+_EXPANSIONS_SCHEMA = 1
+
+
+def record_expansion_result(bench: str, expansion: str, name: str,
+                            seconds: float, derived: str = "") -> None:
+    """Merge one row into BENCH_expansions.json (read-modify-write keyed by
+    (bench, expansion, name) so partial re-runs never drop other rows)."""
+    payload = {"schema": _EXPANSIONS_SCHEMA, "results": []}
+    if EXPANSIONS_JSON.exists():
+        try:
+            loaded = json.loads(EXPANSIONS_JSON.read_text())
+            if loaded.get("schema") == _EXPANSIONS_SCHEMA:
+                payload = loaded
+        except (json.JSONDecodeError, AttributeError):
+            pass  # malformed file: rewrite from scratch
+    key = (bench, expansion, name)
+    rows = [r for r in payload.get("results", [])
+            if (r.get("bench"), r.get("expansion"), r.get("name")) != key]
+    rows.append({"bench": bench, "expansion": expansion, "name": name,
+                 "seconds": seconds, "derived": derived})
+    payload["results"] = sorted(
+        rows, key=lambda r: (r["bench"], r["expansion"], r["name"])
+    )
+    EXPANSIONS_JSON.write_text(json.dumps(payload, indent=2) + "\n")
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 3, **kw):

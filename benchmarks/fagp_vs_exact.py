@@ -1,6 +1,15 @@
 """FAGP vs exact GP: accuracy and time (the Joukov-Kulic comparison the
 paper builds on — FAGP must match exact-GP accuracy while removing the
-O(N^3) solve)."""
+O(N^3) solve), per kernel expansion.
+
+The ``--expansion`` axis compares each registered low-rank family against
+ITS exact kernel (Hermite-Mercer and RFF-SE against the SE kernel,
+RFF-Matern-5/2 against the exact Matern-5/2 form in core/exact_gp.py);
+rows land in BENCH_expansions.json.
+
+  PYTHONPATH=src python -m benchmarks.fagp_vs_exact [--full]
+      [--expansion hermite|rff_se|rff_matern52|all]
+"""
 from __future__ import annotations
 
 import sys
@@ -8,32 +17,69 @@ import sys
 import numpy as np
 
 from repro.core import exact_gp, mercer
-from repro.core.gp import GP, GPSpec
+from repro.core.gp import GP
 from repro.data import make_gp_dataset
 
-from .common import emit, time_fn
+from .common import (
+    bench_spec, cli_expansion, emit, expansion_names,
+    record_expansion_result, time_fn,
+)
+
+# the exact-GP oracle each family is measured against; kept in sync with
+# KernelExpansion.exact_kernel — unknown families must fail loudly, never
+# silently score against the SE oracle
+_EXACT_KERNEL = {"hermite": "se", "rff_se": "se", "rff_matern52": "matern52"}
 
 
-def run(full: bool = False):
+def _run_expansion(expansion: str, full: bool, exact_cache: dict):
     sizes = (500, 1000, 2000, 4000) if full else (500, 1000, 2000)
     p = 2
+    try:
+        kernel = _EXACT_KERNEL[expansion]
+    except KeyError:
+        raise ValueError(
+            f"no exact-GP oracle mapped for expansion {expansion!r}; add it "
+            f"to benchmarks/fagp_vs_exact.py::_EXACT_KERNEL"
+        ) from None
     for N in sizes:
         X, y, Xs, ys = make_gp_dataset(N, p, seed=1)
         params = mercer.SEKernelParams.create([0.8] * p, [2.0] * p, noise=0.05)
 
-        t_exact = time_fn(lambda: exact_gp.predict(exact_gp.fit(X, y, params), Xs)[0],
-                          iters=2)
-        mu_e, _ = exact_gp.predict(exact_gp.fit(X, y, params), Xs)
-        rmse_e = float(np.sqrt(np.mean((np.asarray(mu_e) - np.asarray(ys)) ** 2)))
-        emit(f"fagp_vs_exact/exact/N{N}", t_exact, f"rmse={rmse_e:.4f}")
+        # hermite and rff_se share the exact-SE baseline: the O(N^3) fit is
+        # timed once per (kernel, N) across an --expansion all sweep
+        if (kernel, N) not in exact_cache:
+            t_exact = time_fn(
+                lambda: exact_gp.predict(exact_gp.fit(X, y, params, kernel), Xs)[0],
+                iters=2,
+            )
+            mu_e, _ = exact_gp.predict(exact_gp.fit(X, y, params, kernel), Xs)
+            rmse_e = float(
+                np.sqrt(np.mean((np.asarray(mu_e) - np.asarray(ys)) ** 2))
+            )
+            exact_cache[(kernel, N)] = (t_exact, rmse_e)
+        t_exact, rmse_e = exact_cache[(kernel, N)]
+        emit(f"fagp_vs_exact/exact-{kernel}/N{N}", t_exact, f"rmse={rmse_e:.4f}")
+        record_expansion_result("fagp_vs_exact", expansion, f"exact/N{N}",
+                                t_exact, f"rmse={rmse_e:.4f}")
 
-        spec = GPSpec.create(10, eps=[0.8] * p, rho=2.0, noise=0.05)
+        # M = 2R = 100 matches the hermite M = 10^2 column count
+        spec = bench_spec(expansion, p, n=10, num_features=50)
+        M = spec.n_features(p)
         t_fagp = time_fn(lambda: GP.fit(X, y, spec).mean_var(Xs)[0])
         mu_a, _ = GP.fit(X, y, spec).mean_var(Xs)
         rmse_a = float(np.sqrt(np.mean((np.asarray(mu_a) - np.asarray(ys)) ** 2)))
-        emit(f"fagp_vs_exact/fagp/N{N}", t_fagp,
-             f"rmse={rmse_a:.4f};M={10**p};speedup={t_exact / t_fagp:.1f}x")
+        derived = f"rmse={rmse_a:.4f};M={M};speedup={t_exact / t_fagp:.1f}x"
+        emit(f"fagp_vs_exact/fagp-{expansion}/N{N}", t_fagp, derived)
+        record_expansion_result("fagp_vs_exact", expansion, f"fagp/N{N}",
+                                t_fagp, derived)
+
+
+def run(full: bool = False, expansion: str = "hermite"):
+    names = expansion_names() if expansion == "all" else [expansion]
+    exact_cache = {}
+    for name in names:
+        _run_expansion(name, full, exact_cache)
 
 
 if __name__ == "__main__":
-    run(full="--full" in sys.argv)
+    run(full="--full" in sys.argv, expansion=cli_expansion(sys.argv))

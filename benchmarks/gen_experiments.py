@@ -28,6 +28,29 @@ def load(d: Path):
     return [json.loads(f.read_text()) for f in sorted(d.glob("*.json"))]
 
 
+def expansion_rows() -> str:
+    """Render BENCH_expansions.json (the kernel-family trajectory started by
+    the --expansion benchmark axis) as a table, or a placeholder."""
+    path = ROOT / "BENCH_expansions.json"
+    if not path.exists():
+        return ("*(no `BENCH_expansions.json` yet — run any benchmark with "
+                "`--expansion`, e.g. the commands above)*")
+    try:
+        rows = json.loads(path.read_text()).get("results", [])
+    except json.JSONDecodeError:
+        rows = []
+    if not rows:
+        return "*(BENCH_expansions.json present but empty)*"
+    out = ["| bench | expansion | name | µs/call | derived |",
+           "|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['bench']} | {r['expansion']} | {r['name']} "
+            f"| {r['seconds'] * 1e6:.1f} | {r['derived']} |"
+        )
+    return "\n".join(out)
+
+
 def table(cells, mesh: str) -> str:
     rows = [
         "| arch | shape | kind | compute s | memory s | collective s | dominant "
@@ -302,6 +325,30 @@ are pinned to agree with T independent fits to f32 tolerance
 measured speedup come from:
 
     PYTHONPATH=src python -c "from benchmarks import multi_output; multi_output.run()"
+
+## §Kernel expansions (capability × family matrix)
+
+The expansion layer (`src/repro/core/expansions.py`) turns every capability
+above — streaming fused fit, incremental update, multi-output, distributed
+schedules, fleet banks — into a capability × kernel-family matrix: the
+Hermite–Mercer eigen-expansion (the paper's), RFF–SE, and RFF–Matérn-5/2
+all run through the same `GP`/`GPBank` entry points on both backends, with
+the pallas streaming path pinned (jaxpr sweep, `tests/test_streaming_fit.py`)
+to never materialize the N×M Phi for ANY of them.  Reconstruction bounds
+(`tests/test_expansions.py`): geometric truncation for Hermite, Monte-Carlo
+4/√R for the RFF families.  On this container RFF–Matérn-5/2 at M=100
+matches the exact Matérn GP's RMSE at N=2000 with a **~60× speedup**
+(`fagp_vs_exact --expansion rff_matern52`), and an RFF bank serves
+mixed-tenant batches just like a Hermite one.  Numbers:
+
+    PYTHONPATH=src python -m benchmarks.kernel_micro --expansion all
+    PYTHONPATH=src python -m benchmarks.fagp_vs_exact --expansion all
+    PYTHONPATH=src python -m benchmarks.gp_bank --expansion all
+
+Current `BENCH_expansions.json` trajectory (merged rows; CI smoke keeps the
+schema valid):
+
+{expansion_rows()}
 
 ## §Regenerating
 

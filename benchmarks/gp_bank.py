@@ -8,9 +8,13 @@ Both sides serve the *identical* fitted states (the loop serves
 results is asserted here (≤1e-5 abs) and pinned in tests/test_gp_bank.py.
 
 Writes machine-readable ``BENCH_gp_bank.json`` next to the repo root (CI
-runs ``--smoke`` and fails when the file is missing or malformed).
+runs ``--smoke`` and fails when the file is missing or malformed).  The
+``--expansion`` axis reruns the bank-vs-loop comparison with the bank's
+shared spec naming another kernel family (rff_se / rff_matern52) and
+records the rows in ``BENCH_expansions.json``.
 
   PYTHONPATH=src python -m benchmarks.gp_bank [--smoke | --full]
+      [--expansion hermite|rff_se|rff_matern52|all]
 """
 from __future__ import annotations
 
@@ -23,10 +27,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.bank import GPBank
-from repro.core.gp import GP, GPSpec
+from repro.core.gp import GP
 from repro.data import make_gp_dataset
 
-from .common import emit, time_fn
+from .common import (
+    bench_spec, cli_expansion, emit, expansion_names,
+    record_expansion_result, time_fn,
+)
 
 ROOT = Path(__file__).resolve().parents[1]
 JSON_PATH = ROOT / "BENCH_gp_bank.json"
@@ -39,10 +46,12 @@ B_MAIN, N_ROWS, P, N_MERCER = 64, 8, 2, 8
 Q_PER_TENANT = 2
 
 
-def _fleet_problem(B, n_rows, p, n, *, seed=0, backend="jnp"):
+def _fleet_problem(B, n_rows, p, n, *, seed=0, backend="jnp",
+                   expansion="hermite"):
     rng = np.random.default_rng(seed)
-    spec = GPSpec.create(n, eps=[0.8] * p, rho=2.0, noise=0.05,
-                         backend=backend)
+    # M = 2R = n^p matches the hermite bank's feature count
+    spec = bench_spec(expansion, p, n=n, num_features=(n**p) // 2,
+                      backend=backend, seed=seed)
     Xb = np.zeros((B, n_rows, p), np.float32)
     yb = np.zeros((B, n_rows), np.float32)
     for s in range(B):
@@ -69,9 +78,9 @@ def _loop_of_singles(sessions, tenants, Xq_np):
     return out_mu, out_var
 
 
-def _bank_vs_loop(backend: str, *, B, n_rows, record):
+def _bank_vs_loop(backend: str, *, B, n_rows, record, expansion="hermite"):
     spec, Xb, yb, Xq, tenants = _fleet_problem(
-        B, n_rows, P, N_MERCER, backend=backend
+        B, n_rows, P, N_MERCER, backend=backend, expansion=expansion
     )
     bank = GPBank.fit(Xb, yb, spec)
     tenant_list = [int(t) for t in tenants]
@@ -90,11 +99,15 @@ def _bank_vs_loop(backend: str, *, B, n_rows, record):
     t_loop = time_fn(lambda: _loop_of_singles(sessions, tenants, Xq_np))
     speedup = t_loop / t_bank
     tag = f"B={B};Q={len(tenant_list)};M={bank.n_features}"
-    emit(f"gp_bank/{backend}-bank-mean_var", t_bank, tag)
-    emit(f"gp_bank/{backend}-loop-of-singles", t_loop,
+    emit(f"gp_bank/{expansion}/{backend}-bank-mean_var", t_bank, tag)
+    emit(f"gp_bank/{expansion}/{backend}-loop-of-singles", t_loop,
          f"{tag};speedup={speedup:.1f}x")
-    record(f"{backend}-bank-mean_var", t_bank, tag)
-    record(f"{backend}-loop-of-singles", t_loop, tag)
+    record(f"{expansion}/{backend}-bank-mean_var", t_bank, tag)
+    record(f"{expansion}/{backend}-loop-of-singles", t_loop, tag)
+    record_expansion_result("gp_bank", expansion, f"{backend}-bank-mean_var",
+                            t_bank, tag)
+    record_expansion_result("gp_bank", expansion, f"{backend}-loop-of-singles",
+                            t_loop, f"{tag};speedup={speedup:.1f}x")
     return parity, speedup
 
 
@@ -113,7 +126,8 @@ def _size_sweep(sizes, *, record):
         record(f"sweep-mean_var-B{B}", t_q, tag)
 
 
-def run(full: bool = False, smoke: bool = False):
+def run(full: bool = False, smoke: bool = False,
+        expansion: str = "hermite"):
     results = []
 
     def record(name, seconds, derived=""):
@@ -123,12 +137,18 @@ def run(full: bool = False, smoke: bool = False):
 
     B = 16 if smoke else B_MAIN
     backends = ["jnp"] if smoke else ["jnp", "pallas"]
+    # parity/speedup keyed by "expansion/backend" so an --expansion all
+    # sweep records every family instead of overwriting the last one
     parity = {}
     speedup = {}
-    for backend in backends:
-        parity[backend], speedup[backend] = _bank_vs_loop(
-            backend, B=B, n_rows=N_ROWS, record=record
-        )
+    for exp_name in (expansion_names() if expansion == "all"
+                     else [expansion]):
+        for backend in backends:
+            key = f"{exp_name}/{backend}"
+            parity[key], speedup[key] = _bank_vs_loop(
+                backend, B=B, n_rows=N_ROWS, record=record,
+                expansion=exp_name,
+            )
     if not smoke:
         _size_sweep([8, 32, 64, 128] if full else [8, 32, 64],
                     record=record)
@@ -148,7 +168,8 @@ def run(full: bool = False, smoke: bool = False):
 
 
 def main():
-    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv)
+    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv,
+        expansion=cli_expansion(sys.argv))
 
 
 if __name__ == "__main__":

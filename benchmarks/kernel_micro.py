@@ -1,9 +1,18 @@
-"""Pallas kernel microbenchmarks vs jnp references.
+"""Pallas kernel microbenchmarks vs jnp references, per kernel expansion.
 
 On this CPU container the kernels run in interpret mode, so wall times
 measure the *correctness* path, not TPU performance — the numbers that
 matter for TPU are the roofline terms in EXPERIMENTS.md.  Reported here so
 regressions in kernel shape handling show up in CI.
+
+The ``--expansion`` axis sweeps the registered kernel families through the
+generic feature kernel (``ops.expansion_phi``) and the streaming fused-fit
+kernel (``ops.fused_fit_moments`` with the expansion's tile builder);
+per-expansion rows land in ``BENCH_expansions.json`` (schema validated by
+CI) so the bench trajectory records kernel-family numbers.
+
+  PYTHONPATH=src python -m benchmarks.kernel_micro [--full]
+      [--expansion hermite|rff_se|rff_matern52|all]
 """
 from __future__ import annotations
 
@@ -12,42 +21,63 @@ import sys
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import mercer
+from repro.core import expansions
 from repro.kernels import ops, ref
 
-from .common import emit, time_fn
+from .common import (
+    bench_spec, cli_expansion, emit, expansion_names,
+    record_expansion_result, time_fn,
+)
 
 
-def run(full: bool = False):
+def _run_expansion(expansion: str, full: bool):
     N, p, n_max = (4096, 3, 8) if full else (1024, 2, 6)
+    num_features = (n_max**p) // 2  # match the hermite M for fair rows
     rng = np.random.default_rng(0)
     X = jnp.asarray(rng.uniform(-1, 1, (N, p)).astype(np.float32))
-    eps = jnp.full((p,), 0.8, jnp.float32)
-    rho = jnp.full((p,), 2.0, jnp.float32)
-    idx = mercer.full_grid(n_max, p)
+    spec = bench_spec(expansion, p, n=n_max, num_features=num_features)
+    exp = expansions.get_expansion(expansion)
+    idx = jnp.asarray(spec.indices(p))
     M = idx.shape[0]
-    consts = ref.phi_consts(eps, rho)
-    S = jnp.asarray(ref.one_hot_selection(idx, n_max))
+    aux = exp.pallas_prepare(np.asarray(idx), spec)
+    consts = exp.tile_consts(spec)
+    table = exp.tile_table(aux, spec)
+    tile = exp.tile_fn()
+    tag = f"N={N};M={M}"
 
-    t = time_fn(lambda: ops.hermite_phi(X, consts, S, n_max=n_max))
-    emit("kernel/hermite_phi/pallas-interp", t, f"N={N};M={M}")
-    t = time_fn(lambda: ref.ref_phi(X.T, consts, S, n_max))
-    emit("kernel/hermite_phi/jnp-ref", t, f"N={N};M={M}")
+    def rec(name, seconds):
+        emit(f"kernel/{name}/{expansion}", seconds, tag)
+        record_expansion_result("kernel_micro", expansion, name, seconds, tag)
 
-    Phi = ops.hermite_phi(X, consts, S, n_max=n_max)
-    d = jnp.asarray(np.geomspace(1, 1e-5, M).astype(np.float32))
+    t = time_fn(lambda: ops.expansion_phi(X, consts, table, n_max=spec.n,
+                                          tile_fn=tile))
+    rec("phi/pallas-interp", t)
+    t = time_fn(lambda: exp.features(X, idx, spec))
+    rec("phi/jnp-ref", t)
+
+    Phi = ops.expansion_phi(X, consts, table, n_max=spec.n, tile_fn=tile)
+    d = jnp.exp(0.5 * exp.log_eigenvalues(idx, spec))
     sig2 = jnp.float32(0.01)
+    t = time_fn(lambda: ops.fused_fit_moments(
+        X, X[:, 0], consts, table, d, sig2, n_max=spec.n, tile_fn=tile))
+    rec("fused-fit/pallas-interp", t)
     t = time_fn(lambda: ops.scaled_gram(Phi, d, sig2))
-    emit("kernel/gram/pallas-interp", t, f"N={N};M={M}")
+    rec("gram/pallas-interp", t)
     t = time_fn(lambda: ref.ref_scaled_gram(Phi, d, sig2))
-    emit("kernel/gram/jnp-ref", t, f"N={N};M={M}")
+    rec("gram/jnp-ref", t)
 
     C = jnp.eye(M, dtype=jnp.float32)
     t = time_fn(lambda: ops.diag_quad(Phi, C))
-    emit("kernel/diag_quad/pallas-interp", t, f"N={N};M={M}")
+    rec("diag_quad/pallas-interp", t)
     t = time_fn(lambda: ref.ref_diag_quad(Phi, C))
-    emit("kernel/diag_quad/jnp-ref", t, f"N={N};M={M}")
+    rec("diag_quad/jnp-ref", t)
+
+
+def run(full: bool = False, expansion: str = "hermite"):
+    names = expansion_names() if expansion == "all" else [expansion]
+    for name in names:
+        _run_expansion(name, full)
 
 
 if __name__ == "__main__":
-    run(full="--full" in sys.argv)
+    run(full="--full" in sys.argv, expansion=cli_expansion(sys.argv))

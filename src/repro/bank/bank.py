@@ -50,9 +50,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fagp
+from repro.core.expansions import get_expansion
 from repro.core.fagp import FAGPState, GPSpec
 from repro.core.gp import GP
-from repro.core.mercer import log_eigenvalues_nd
 
 __all__ = ["GPBank"]
 
@@ -116,9 +116,9 @@ def _write_slot(chol_s, u_s, b_s, slot, chol, u, b):
 def _fallback_bank_moments(backend):
     """vmap of the single-model moments for backends that do not declare a
     native bank_moments."""
-    def f(Xb, yb, params, idx, aux, n_max, block_rows, maskb):
+    def f(Xb, yb, spec, idx, aux, block_rows, maskb):
         one = lambda X, y, m: backend.moments(
-            X, y, params, idx, aux, n_max, block_rows, m
+            X, y, spec, idx, aux, block_rows, m
         )
         return jax.vmap(one)(Xb, yb, maskb)
     return f
@@ -158,19 +158,17 @@ def _prior_leaves(loglam: jax.Array, count: int) -> dict:
 
 def _check_bankable(state: FAGPState, spec: GPSpec, who: str) -> None:
     """A state can join a bank iff it was factorized under the bank's shared
-    spec (structure AND hyperparameters) and is single-output with the raw
-    moment vector present."""
+    spec (structure AND hyperparameters, including any RFF spectral draws)
+    and is single-output with the raw moment vector present."""
     fagp._check_spec_regenerates_idx(state, spec)
-    for f in fagp._HYPER_FIELDS:
-        if not np.array_equal(
-            np.asarray(getattr(spec, f)), np.asarray(getattr(state.params, f))
-        ):
-            raise ValueError(
-                f"{who}: state was fitted with a different {f} than the "
-                f"bank's shared spec; a bank shares one feature map and one "
-                f"eigenvalue scaling across all tenants — refit the tenant "
-                f"under the bank spec"
-            )
+    try:
+        fagp._check_hypers_match(state, spec, who)
+    except ValueError as e:
+        raise ValueError(
+            f"{e}; a bank shares one feature map and one eigenvalue "
+            f"scaling across all tenants — refit the tenant under the "
+            f"bank spec"
+        ) from None
     if state.u.ndim != 1:
         raise ValueError(
             f"{who}: multi-output states (T={state.n_tasks}) cannot join a "
@@ -213,7 +211,7 @@ class GPBank:
         spec = _bank_spec(spec)
         fagp._check_backend_support(spec)
         idx = jnp.asarray(spec.indices(spec.p))
-        loglam = log_eigenvalues_nd(idx, spec.params)
+        loglam = get_expansion(spec.expansion).log_eigenvalues(idx, spec)
         stack = FAGPState(
             idx=idx, params=spec.params, Phi=None, y=None, spec=spec,
             **_prior_leaves(loglam, capacity),
@@ -270,14 +268,13 @@ class GPBank:
         backend = fagp._check_backend_support(spec)
         idx_np = spec.indices(p)
         idx = jnp.asarray(idx_np)
-        aux = backend.prepare(idx_np, spec.n)
+        aux = backend.prepare(idx_np, spec)
         moments = backend.bank_moments or _fallback_bank_moments(backend)
         # small tenants: never let a scan-based moments hook pad each
         # slot's few rows up to the default serving block
         block_rows = min(spec.block_rows, max(1, N))
-        G, b = moments(Xb, yb, spec.params, idx, aux, spec.n,
-                       block_rows, mask)
-        loglam = log_eigenvalues_nd(idx, spec.params)
+        G, b = moments(Xb, yb, spec, idx, aux, block_rows, mask)
+        loglam = get_expansion(spec.expansion).log_eigenvalues(idx, spec)
         lam, sqrtlam, chol, u = _bank_solve(G, b, loglam, spec.noise**2)
         if cap > B:
             # reserved slots get the prior leaves directly — never pay the
@@ -442,9 +439,9 @@ class GPBank:
                 f"for {Xq.shape[0]} rows"
             )
         backend = fagp._check_backend_support(self.spec)
-        aux = fagp._backend_aux(backend, self.stack.idx, self.spec.n)
+        aux = fagp._backend_aux(backend, self.stack.idx, self.spec)
         fn = backend.bank_mean_var or _fallback_bank_mean_var(backend)
-        return fn(self.stack, self._binv, slots, Xq, aux, self.spec.n)
+        return fn(self.stack, self._binv, slots, Xq, aux)
 
     def update(self, tenant_ids, Xk: jax.Array, yk: jax.Array,
                mask: Optional[jax.Array] = None) -> "GPBank":
@@ -497,10 +494,9 @@ class GPBank:
                     f"every group"
                 )
         backend = fagp._check_backend_support(self.spec)
-        aux = fagp._backend_aux(backend, self.stack.idx, self.spec.n)
+        aux = fagp._backend_aux(backend, self.stack.idx, self.spec)
         Phi_g = backend.features(
-            Xk.reshape(G * k, p), self.stack.params, self.stack.idx, aux,
-            self.spec.n,
+            Xk.reshape(G * k, p), self.spec, self.stack.idx, aux,
         ).reshape(G, k, -1)
         chol, u, b = _bank_update_scatter(
             self.stack.chol, self.stack.u, self.stack.b, self.stack.sqrtlam,

@@ -6,7 +6,13 @@ Approximation in CUDA" — reimplemented TPU-natively in JAX.
 The public session API is the `GP` facade (`core.gp`): one self-describing
 object over fit/predict/update/nlml with the spec baked into the state.
 """
-from . import exact_gp, fagp, gp, mercer
+from . import exact_gp, expansions, fagp, gp, mercer
+from .expansions import (
+    KernelExpansion,
+    available_expansions,
+    get_expansion,
+    register_expansion,
+)
 from .fagp import (
     FAGPConfig,
     FAGPState,
@@ -27,6 +33,7 @@ from .mercer import (
     log_eigenvalues_nd,
     full_grid,
     hyperbolic_cross,
+    k_matern52_ard,
     k_se_ard,
     make_index_set,
     phi_nd,

@@ -18,6 +18,12 @@ At pod scale the data no longer fits one device, so the algorithm becomes:
 Everything is pjit + sharding constraints: the all-reduces appear in the
 lowered HLO (verified by the dry-run's collective parse).
 
+The schedules are expansion-generic: the feature map and log weights come
+from the spec's registered :class:`~repro.core.expansions.KernelExpansion`,
+so an RFF fit shards exactly like a Hermite fit (the RFF spectral draws
+``spec.omega`` are replicated alongside eps/rho — they are hyperparameters,
+not data).
+
 API (same self-describing session contract as ``core.fagp``):
 
     state = fit_distributed(X, y, spec, mesh)       # a normal FAGPState
@@ -26,10 +32,11 @@ API (same self-describing session contract as ``core.fagp``):
 The returned state is interchangeable with a single-device fit — it feeds
 ``predict_mean_var``, ``fit_update`` and the ``GP`` facade directly.  The
 split ``fit_distributed(X, y, params, cfg, mesh) -> (u, chol, sqrtlam)``
-form is a one-release deprecation shim.
+form was deprecated for two releases and now raises TypeError.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -38,26 +45,43 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.parallel import hints
+from .expansions import get_expansion
 from .fagp import (
     FAGPState,
     GPSpec,
     _assemble_scaled_system,
+    _removed,
     _solve_mean_weights,
-    _warn_deprecated,
     get_backend,
 )
-from .mercer import SEKernelParams, log_eigenvalues_nd, phi_nd
 
 __all__ = ["fit_distributed", "predict_distributed", "lower_fit", "lower_predict"]
 
 
-@partial(jax.jit, static_argnames=("n_max", "nblk", "n_valid"))
-def _fit_fn(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
-            n_valid: int | None = None):
+def _spec_local(spec: GPSpec, eps, rho, omega) -> GPSpec:
+    """Rebuild the spec from shard-local leaves inside a shard_map body —
+    every data leaf is replaced, so no outer traced value leaks into the
+    body through the closure."""
+    return dataclasses.replace(
+        spec, eps=eps, rho=rho, noise=jnp.asarray(0.0, jnp.float32),
+        omega=omega,
+    )
+
+
+def _omega_args(spec: GPSpec) -> tuple:
+    """The spec's optional spectral-draw leaf as a *args tail (present only
+    when the expansion carries one — keeps the hermite schedules byte-
+    identical to before)."""
+    return () if spec.omega is None else (spec.omega,)
+
+
+@partial(jax.jit, static_argnames=("nblk", "n_valid"))
+def _fit_fn(X, y, spec: GPSpec, idx, nblk: int, n_valid: int | None = None):
+    exp = get_expansion(spec.expansion)
     N = X.shape[0]
     M = idx.shape[0]
-    sig2 = params.noise**2
-    loglam = log_eigenvalues_nd(idx, params)
+    sig2 = spec.noise**2
+    loglam = exp.log_eigenvalues(idx, spec)
 
     block = N // nblk
     Xb = hints.constrain(X.reshape(nblk, block, -1), (None, "dp", None))
@@ -67,7 +91,7 @@ def _fit_fn(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
         G, b = carry
         i, Xi, yi = inp
         Xi = hints.constrain(Xi, ("dp", None))
-        Phi_i = phi_nd(Xi, idx, params, n_max)           # rows sharded over dp
+        Phi_i = exp.features(Xi, idx, spec)              # rows sharded over dp
         if n_valid is not None and n_valid < N:          # mask padded rows
             mask = ((i * block + jnp.arange(block)) < n_valid).astype(Phi_i.dtype)
             Phi_i = Phi_i * mask[:, None]
@@ -88,10 +112,11 @@ def _fit_fn(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
     return u, chol, sqrtlam, b
 
 
-@partial(jax.jit, static_argnames=("n_max",))
-def _predict_fn(Xs, u, chol, sqrtlam, params: SEKernelParams, idx, n_max: int):
+@jax.jit
+def _predict_fn(Xs, u, chol, sqrtlam, spec: GPSpec, idx):
+    exp = get_expansion(spec.expansion)
     Xs = hints.constrain(Xs, ("dp", None))
-    Phis = phi_nd(Xs, idx, params, n_max)                # (N*, M) rows over dp
+    Phis = exp.features(Xs, idx, spec)                   # (N*, M) rows over dp
     mu = Phis @ u
     PhisD = Phis * sqrtlam[None, :]
     V = jax.scipy.linalg.solve_triangular(chol, PhisD.T, lower=True)
@@ -118,7 +143,6 @@ def _fit_distributed_spec(X, y, spec: GPSpec, mesh) -> FAGPState:
     """The actual distributed fit; returns a self-describing FAGPState
     (Phi/y not stored — they are sharded training data, not serving state)."""
     N, p = X.shape
-    params = spec.params
     idx_np = spec.indices(p)
     idx = jnp.asarray(idx_np)
     if spec.backend != "jnp":
@@ -127,14 +151,14 @@ def _fit_distributed_spec(X, y, spec: GPSpec, mesh) -> FAGPState:
         if N_pad != N:
             X = jnp.pad(X, ((0, N_pad - N), (0, 0)))
             y = jnp.pad(y, (0, N_pad - N))
-        aux = get_backend(spec.backend).prepare(idx_np, spec.n)
+        aux = get_backend(spec.backend).prepare(idx_np, spec)
         with jax.set_mesh(mesh), hints.activate(mesh):
             f = jax.jit(partial(
-                _fit_fn_v2, n_max=spec.n, nblk=16, mesh=mesh,
+                _fit_fn_v2, nblk=16, mesh=mesh,
                 n_valid=N if N_pad != N else None,
                 backend=spec.backend, aux=aux,
             ))
-            u, chol, sqrtlam, b = f(X, y, params, idx)
+            u, chol, sqrtlam, b = f(X, y, spec, idx)
     else:
         nblk, N_pad = _pick_nblk(N, idx.shape[0], _dp_size(mesh))
         if N_pad != N:
@@ -143,45 +167,38 @@ def _fit_distributed_spec(X, y, spec: GPSpec, mesh) -> FAGPState:
         with jax.set_mesh(mesh), hints.activate(mesh):
             dp = hints.dp_axes(mesh)
             f = jax.jit(
-                partial(_fit_fn, n_max=spec.n, nblk=nblk,
+                partial(_fit_fn, nblk=nblk,
                         n_valid=N if N_pad != N else None),
                 in_shardings=(
                     NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp)),
                     None, None,
                 ),
             )
-            u, chol, sqrtlam, b = f(X, y, params, idx)
-    loglam = log_eigenvalues_nd(idx, params)
+            u, chol, sqrtlam, b = f(X, y, spec, idx)
+    loglam = get_expansion(spec.expansion).log_eigenvalues(idx, spec)
     return FAGPState(
         idx=idx, lam=jnp.exp(loglam), sqrtlam=sqrtlam, chol=chol, u=u,
-        params=params, Phi=None, y=None, b=b, spec=spec,
+        params=spec.params, Phi=None, y=None, b=b, spec=spec,
     )
 
 
 def fit_distributed(X, y, spec, *args):
     """Distributed fit returning a self-describing :class:`FAGPState`.
 
-    New form: ``fit_distributed(X, y, spec, mesh)``.  ``spec.backend``
-    selects the per-shard engine via the core.fagp registry: 'jnp' runs the
-    v1 pjit schedule, anything else runs the v2 shard_map schedule with that
+    ``fit_distributed(X, y, spec, mesh)``.  ``spec.backend`` selects the
+    per-shard engine via the core.fagp registry: 'jnp' runs the v1 pjit
+    schedule, anything else runs the v2 shard_map schedule with that
     backend's streaming moments kernel per shard (e.g. 'pallas' = fused
-    phi+gram, Phi never materialized).
+    phi+gram, Phi never materialized — for any registered expansion).
 
-    Deprecated form ``fit_distributed(X, y, params, cfg, mesh)`` returns the
-    legacy ``(u, chol, sqrtlam)`` tuple for one release.
+    The split ``fit_distributed(X, y, params, cfg, mesh)`` form was removed.
     """
-    if isinstance(spec, SEKernelParams):
-        if len(args) != 2:
-            raise TypeError("fit_distributed(X, y, params, cfg, mesh): "
-                            "expected cfg and mesh")
-        cfg, mesh = args
-        _warn_deprecated(
+    if not isinstance(spec, GPSpec):
+        _removed(
             "fit_distributed(X, y, params, cfg, mesh)",
             "merge them with GPSpec.from_parts(params, cfg) and call "
             "fit_distributed(X, y, spec, mesh), which returns an FAGPState",
         )
-        state = _fit_distributed_spec(X, y, GPSpec.from_parts(spec, cfg), mesh)
-        return state.u, state.chol, state.sqrtlam
     if len(args) != 1:
         raise TypeError("fit_distributed(X, y, spec, mesh): expected mesh")
     return _fit_distributed_spec(X, y, spec, args[0])
@@ -190,41 +207,28 @@ def fit_distributed(X, y, spec, *args):
 def predict_distributed(Xs, state, *args):
     """Shard-local posterior mean/variance over the mesh.
 
-    New form: ``predict_distributed(Xs, state, mesh)`` with the
-    self-describing state returned by :func:`fit_distributed` (or a
-    single-device ``fit`` — the schedule only needs u/chol/sqrtlam).
+    ``predict_distributed(Xs, state, mesh)`` with the self-describing state
+    returned by :func:`fit_distributed` (or a single-device ``fit`` — the
+    schedule only needs u/chol/sqrtlam).
 
-    Deprecated form ``predict_distributed(Xs, (u, chol, sqrtlam), params,
-    cfg, mesh)`` still works for one release.
+    The ``predict_distributed(Xs, (u, chol, sqrtlam), params, cfg, mesh)``
+    form was removed.
     """
-    if len(args) == 1:
-        mesh = args[0]
-        if not isinstance(state, FAGPState) or state.spec is None:
-            raise ValueError(
-                "predict_distributed(Xs, state, mesh) needs a self-describing "
-                "FAGPState (from fit_distributed or fit); for the legacy "
-                "(u, chol, sqrtlam) tuple use the deprecated 5-arg form"
-            )
-        spec = state.spec
-        u, chol, sqrtlam = state.u, state.chol, state.sqrtlam
-        params = spec.params
-        idx = state.idx
-        n_max = spec.n
-    elif len(args) == 3:
-        params, cfg, mesh = args
-        _warn_deprecated(
+    if len(args) != 1:
+        _removed(
             "predict_distributed(Xs, state_tuple, params, cfg, mesh)",
             "fit with fit_distributed(X, y, spec, mesh) and call "
             "predict_distributed(Xs, state, mesh)",
         )
-        u, chol, sqrtlam = (
-            (state.u, state.chol, state.sqrtlam)
-            if isinstance(state, FAGPState) else state
+    mesh = args[0]
+    if not isinstance(state, FAGPState) or state.spec is None:
+        raise ValueError(
+            "predict_distributed(Xs, state, mesh) needs a self-describing "
+            "FAGPState (from fit_distributed or fit)"
         )
-        idx = jnp.asarray(cfg.indices(Xs.shape[1]))
-        n_max = cfg.n
-    else:
-        raise TypeError("predict_distributed(Xs, state, mesh)")
+    spec = state.spec
+    u, chol, sqrtlam = state.u, state.chol, state.sqrtlam
+    idx = state.idx
     N = Xs.shape[0]
     dpn = _dp_size(mesh)
     N_pad = (N + dpn - 1) // dpn * dpn
@@ -233,12 +237,12 @@ def predict_distributed(Xs, state, *args):
     with jax.set_mesh(mesh), hints.activate(mesh):
         dp = hints.dp_axes(mesh)
         f = jax.jit(
-            partial(_predict_fn, n_max=n_max),
+            _predict_fn,
             in_shardings=(
                 NamedSharding(mesh, P(dp, None)), None, None, None, None, None,
             ),
         )
-        mu, var = f(Xs, u, chol, sqrtlam, params, idx)
+        mu, var = f(Xs, u, chol, sqrtlam, spec, idx)
     return mu[:N], var[:N]
 
 
@@ -255,39 +259,40 @@ def predict_distributed(Xs, state, *args):
 # ---------------------------------------------------------------------------
 
 
-def _fit_fn_v2(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
-               mesh, n_valid: int | None = None, backend: str = "jnp",
-               aux=None):
+def _fit_fn_v2(X, y, spec: GPSpec, idx, nblk: int, mesh,
+               n_valid: int | None = None, backend: str = "jnp", aux=None):
+    exp = get_expansion(spec.expansion)
     N = X.shape[0]
     M = idx.shape[0]
-    sig2 = params.noise**2
-    loglam = log_eigenvalues_nd(idx, params)
+    sig2 = spec.noise**2
+    loglam = exp.log_eigenvalues(idx, spec)
     axes = tuple(mesh.axis_names)
     n_chips = int(np.prod([mesh.shape[a] for a in axes]))
     N_l = N // n_chips
     block = max(1, N_l // nblk)
 
-    def local(Xl, yl, eps, rho):
+    def local(Xl, yl, eps, rho, *omega_t):
         lo = jax.lax.axis_index(axes[0])
         for a in axes[1:]:
             lo = lo * mesh.shape[a] + jax.lax.axis_index(a)
         row0 = lo * N_l
-        p_loc = SEKernelParams(eps=eps, rho=rho, noise=jnp.asarray(0.0))
+        s_loc = _spec_local(spec, eps, rho, omega_t[0] if omega_t else None)
 
         if backend != "jnp":
             # registry path: the whole shard's moments in ONE streaming
-            # fused-kernel call (Phi tiles generated in VMEM, never in HBM)
+            # fused-kernel call (feature tiles generated in VMEM by the
+            # expansion's tile builder, never in HBM)
             mask = None
             if n_valid is not None and n_valid < N:
                 mask = ((row0 + jnp.arange(N_l)) < n_valid).astype(Xl.dtype)
             G_l, b_l = get_backend(backend).moments(
-                Xl, yl, p_loc, idx, aux, n_max, block, mask
+                Xl, yl, s_loc, idx, aux, block, mask
             )
         else:
             def step(carry, inp):
                 G, b = carry
                 i, Xi, yi = inp
-                Phi_i = phi_nd(Xi, idx, p_loc, n_max)
+                Phi_i = exp.features(Xi, idx, s_loc)
                 if n_valid is not None and n_valid < N:
                     mask = ((row0 + i * block + jnp.arange(block)) < n_valid)
                     Phi_i = Phi_i * mask.astype(Phi_i.dtype)[:, None]
@@ -304,12 +309,13 @@ def _fit_fn_v2(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
         b = jax.lax.psum(b_l, axes)
         return G, b
 
+    omega_args = _omega_args(spec)
     G, b = jax.shard_map(
         local, mesh=mesh,
-        in_specs=(P(axes), P(axes), P(), P()),
+        in_specs=(P(axes), P(axes), P(), P()) + (P(),) * len(omega_args),
         out_specs=(P(), P()),
         check_vma=False,
-    )(X.reshape(N, -1), y, params.eps, params.rho)
+    )(X.reshape(N, -1), y, spec.eps, spec.rho, *omega_args)
 
     B, sqrtlam = _assemble_scaled_system(G, loglam, sig2)
     chol = jnp.linalg.cholesky(B)
@@ -317,27 +323,28 @@ def _fit_fn_v2(X, y, params: SEKernelParams, idx, n_max: int, nblk: int,
     return u, chol, sqrtlam, b
 
 
-def _predict_fn_v2(Xs, u, chol, sqrtlam, params: SEKernelParams, idx, n_max: int,
-                   mesh):
+def _predict_fn_v2(Xs, u, chol, sqrtlam, spec: GPSpec, idx, mesh):
     """Fully local per row: Binv replicated, var = rowsum((Phi D Binv)*(Phi D))."""
+    exp = get_expansion(spec.expansion)
     M = idx.shape[0]
     Binv = jax.scipy.linalg.cho_solve((chol, True), jnp.eye(M, dtype=chol.dtype))
     axes = tuple(mesh.axis_names)
 
-    def local(Xl, u_, Binv_, sqrtlam_, eps, rho):
-        p_loc = SEKernelParams(eps=eps, rho=rho, noise=jnp.asarray(0.0))
-        Phis = phi_nd(Xl, idx, p_loc, n_max)
+    def local(Xl, u_, Binv_, sqrtlam_, eps, rho, *omega_t):
+        s_loc = _spec_local(spec, eps, rho, omega_t[0] if omega_t else None)
+        Phis = exp.features(Xl, idx, s_loc)
         mu = Phis @ u_
         PD = Phis * sqrtlam_[None, :]
         var = jnp.sum((PD @ Binv_) * PD, axis=1)
         return mu, var
 
+    omega_args = _omega_args(spec)
     return jax.shard_map(
         local, mesh=mesh,
-        in_specs=(P(axes), P(), P(), P(), P(), P()),
+        in_specs=(P(axes), P(), P(), P(), P(), P()) + (P(),) * len(omega_args),
         out_specs=(P(axes), P(axes)),
         check_vma=False,
-    )(Xs, u, Binv, sqrtlam, params.eps, params.rho)
+    )(Xs, u, Binv, sqrtlam, spec.eps, spec.rho, *omega_args)
 
 
 # ---------------------------------------------------------------------------
@@ -345,12 +352,17 @@ def _predict_fn_v2(Xs, u, chol, sqrtlam, params: SEKernelParams, idx, n_max: int
 # ---------------------------------------------------------------------------
 
 
-def _abstract_params(p: int) -> SEKernelParams:
+def _abstract_spec(cfg, p: int) -> GPSpec:
+    """Abstract (ShapeDtypeStruct-leaved) hermite GPSpec for a workload's
+    FAGPConfig — the dry-run never allocates hyperparameters."""
     f32 = jnp.float32
-    return SEKernelParams(
+    return GPSpec(
         eps=jax.ShapeDtypeStruct((p,), f32),
         rho=jax.ShapeDtypeStruct((p,), f32),
         noise=jax.ShapeDtypeStruct((), f32),
+        n=cfg.n, index_set=cfg.index_set, degree=cfg.degree,
+        block_rows=cfg.block_rows, store_train=cfg.store_train,
+        backend=cfg.backend,
     )
 
 
@@ -361,37 +373,39 @@ def _n_chips(mesh) -> int:
 def lower_fit(wl, mesh, *, schedule: str = "v2"):
     idx_np = wl.cfg.indices(wl.p)
     idx = jnp.asarray(idx_np)
+    spec_av = _abstract_spec(wl.cfg, wl.p)
     if schedule == "v2":
         quantum = _n_chips(mesh) * 16
         N_pad = (wl.N + quantum - 1) // quantum * quantum
         X = jax.ShapeDtypeStruct((N_pad, wl.p), jnp.float32)
         y = jax.ShapeDtypeStruct((N_pad,), jnp.float32)
         backend = wl.cfg.backend
-        aux = (get_backend(backend).prepare(idx_np, wl.cfg.n)
+        aux = (get_backend(backend).prepare(idx_np, spec_av)
                if backend != "jnp" else None)
         return jax.jit(
-            partial(_fit_fn_v2, n_max=wl.cfg.n, nblk=16, mesh=mesh,
+            partial(_fit_fn_v2, nblk=16, mesh=mesh,
                     n_valid=wl.N if N_pad != wl.N else None,
                     backend=backend, aux=aux),
-        ).lower(X, y, _abstract_params(wl.p), idx)
+        ).lower(X, y, spec_av, idx)
     nblk, N_pad = _pick_nblk(wl.N, idx_np.shape[0], _dp_size(mesh))
     X = jax.ShapeDtypeStruct((N_pad, wl.p), jnp.float32)
     y = jax.ShapeDtypeStruct((N_pad,), jnp.float32)
     dp = hints.dp_axes(mesh)
     return jax.jit(
-        partial(_fit_fn, n_max=wl.cfg.n, nblk=nblk,
+        partial(_fit_fn, nblk=nblk,
                 n_valid=wl.N if N_pad != wl.N else None),
         in_shardings=(
             NamedSharding(mesh, P(dp, None)), NamedSharding(mesh, P(dp)),
             None, None,
         ),
-    ).lower(X, y, _abstract_params(wl.p), idx)
+    ).lower(X, y, spec_av, idx)
 
 
 def lower_predict(wl, mesh, *, schedule: str = "v2"):
     idx_np = wl.cfg.indices(wl.p)
     M = idx_np.shape[0]
     idx = jnp.asarray(idx_np)
+    spec_av = _abstract_spec(wl.cfg, wl.p)
     u = jax.ShapeDtypeStruct((M,), jnp.float32)
     chol = jax.ShapeDtypeStruct((M, M), jnp.float32)
     sqrtlam = jax.ShapeDtypeStruct((M,), jnp.float32)
@@ -400,15 +414,15 @@ def lower_predict(wl, mesh, *, schedule: str = "v2"):
         N_pad = (wl.N + quantum - 1) // quantum * quantum
         Xs = jax.ShapeDtypeStruct((N_pad, wl.p), jnp.float32)
         return jax.jit(
-            partial(_predict_fn_v2, n_max=wl.cfg.n, mesh=mesh),
-        ).lower(Xs, u, chol, sqrtlam, _abstract_params(wl.p), idx)
+            partial(_predict_fn_v2, mesh=mesh),
+        ).lower(Xs, u, chol, sqrtlam, spec_av, idx)
     dpn = _dp_size(mesh)
     N_pad = (wl.N + dpn - 1) // dpn * dpn
     Xs = jax.ShapeDtypeStruct((N_pad, wl.p), jnp.float32)
     dp = hints.dp_axes(mesh)
     return jax.jit(
-        partial(_predict_fn, n_max=wl.cfg.n),
+        _predict_fn,
         in_shardings=(
             NamedSharding(mesh, P(dp, None)), None, None, None, None, None,
         ),
-    ).lower(Xs, u, chol, sqrtlam, _abstract_params(wl.p), idx)
+    ).lower(Xs, u, chol, sqrtlam, spec_av, idx)

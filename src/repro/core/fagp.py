@@ -1,10 +1,10 @@
 """Fast Approximate Gaussian Process (FAGP) — the paper's core technique.
 
-GP regression with the Mercer-decomposed SE kernel (paper Eqs. 8-12):
-the N x N kernel inverse is replaced, via the Woodbury identity, by the
-inverse of the M x M matrix
+GP regression with a *decomposed kernel* (paper Eqs. 8-12): the N x N
+kernel inverse is replaced, via the Woodbury identity, by the inverse of
+the M x M matrix
 
-    Lbar = Lambda^{-1} + Phi^T Sigma_n^{-1} Phi          (M = |index set|)
+    Lbar = Lambda^{-1} + Phi^T Sigma_n^{-1} Phi          (M = feature count)
 
 Public API (one self-describing session; see also ``core.gp.GP``):
 
@@ -14,18 +14,27 @@ Public API (one self-describing session; see also ``core.gp.GP``):
     state = fit_update(state, Xn, yn)
     loss = nlml(X, y, spec)
 
-``GPSpec`` merges what used to be ``FAGPConfig`` (static expansion choices)
-and ``SEKernelParams`` (differentiable kernel hyperparameters) into one
-frozen pytree: the hyperparameters are data leaves (gradients flow through
-``nlml``), the expansion choices are static metadata (hashable, trigger
-recompilation when changed).  ``fit`` bakes the spec into ``FAGPState``, so
-``predict``/``fit_update``/``predict_mean_var`` derive the index set, n_max,
+``GPSpec`` merges the kernel hyperparameters (differentiable data leaves:
+``eps``/``rho``/``noise``, plus the RFF spectral draws ``omega``) with the
+static expansion choices (hashable metadata, trigger recompilation when
+changed).  ``fit`` bakes the spec into ``FAGPState``, so
+``predict``/``fit_update``/``predict_mean_var`` derive the feature map,
 backend and block size from the state — a caller can no longer fit with
 ``n=12`` and predict with ``n=10`` and silently get wrong features.
 ``state.with_spec(...)`` is the explicit escape hatch for swapping the
 execution knobs (backend, block size) at serve time; structural changes
-(n, index set, hyperparameters) are rejected because they are frozen into
-the factorization.
+(expansion, n, index set, hyperparameters) are rejected because they are
+frozen into the factorization.
+
+The kernel decomposition itself is PLUGGABLE (``core.expansions``): the
+spec names a registered :class:`~repro.core.expansions.KernelExpansion`
+(``spec.expansion``), which supplies the static index table (its row count
+IS M), the log weights, the jnp feature map, and the in-VMEM Pallas tile
+builder.  ``hermite`` (the paper's Mercer eigen-expansion of the SE
+kernel) is the default; ``rff_se`` and ``rff_matern52`` (random Fourier
+features, spectral draws carried as spec data) ship as the second family —
+every entry point below, both distributed schedules, and the bank are
+expansion-generic.
 
 Targets ``y`` may be ``(N,)`` or multi-output ``(N, T)``: all T tasks share
 the one M x M Cholesky factorization (the expensive part) and get per-task
@@ -58,15 +67,16 @@ clear error up front instead of crashing deep inside kernel preparation:
 
 * ``backend="jnp"``    — scan over row blocks, pure XLA (any device);
 * ``backend="pallas"`` — the streaming fused-fit kernel
-  (``kernels/phi_gram``): Hermite-feature tiles are generated in VMEM inside
-  the Gram accumulation, so Phi is never written to HBM.
+  (``kernels/phi_gram``): feature tiles are generated in VMEM inside the
+  Gram accumulation by the expansion's tile builder, so Phi is never
+  written to HBM — for ANY registered expansion.
 
 The same registry serves ``predict_mean_var`` and the per-shard moment
 accumulation in ``core.distributed``.  ``fit_update`` absorbs new
 observations into a fitted state by a rank-k Cholesky update of B —
 O(k M^2), no pass over the original N rows (the serving ingest path).
 
-Numerical form (beyond-paper, required for f32): lambda_n decays
+Numerical form (beyond-paper, required for f32): Mercer lambda_n decays
 geometrically and underflows f32 by column ~40, so Lbar = Lambda^{-1} + ...
 cannot be formed directly.  We solve the symmetrically-scaled system
 
@@ -77,17 +87,17 @@ fit, nlml and the distributed schedules, with Lbar^{-1} = D B^{-1} D and
 logdet(Lbar) + logdet(Lambda) = logdet(B).  B has unit diagonal plus a PSD
 term (cond(B) bounded by 1 + ||DGD||/sig^2), and columns whose sqrt(lambda)
 underflows contribute an identity row — numerically inert, exactly as they
-should be.
+should be.  (RFF weights are flat 1/R — the same scaled form degrades
+gracefully to a plain normalized Gram.)
 
-Deprecated (one release, shims emit ``DeprecationWarning``): the split
-``fit(X, y, params, cfg)`` / ``predict(state, Xs, cfg)`` /
-``nlml(X, y, params, idx, n_max)`` signatures that re-took configuration at
-every call site.  See README §Migration.
+REMOVED (was deprecated for two releases): the split ``fit(X, y, params,
+cfg)`` / ``predict(state, Xs, cfg)`` / ``nlml(X, y, params, idx, n_max)``
+signatures that re-took configuration at every call site now raise
+``TypeError``.  See README §Migration.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -95,12 +105,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .expansions import (
+    available_expansions,
+    get_expansion,
+)
 from .mercer import (
     IndexSetKind,
     SEKernelParams,
-    log_eigenvalues_nd,
     make_index_set,
-    phi_nd,
 )
 
 __all__ = [
@@ -109,10 +121,12 @@ __all__ = [
     "FitBackend",
     "GPSpec",
     "available_backends",
+    "available_expansions",
     "build_features",
     "fit",
     "fit_update",
     "get_backend",
+    "get_expansion",
     "nlml",
     "predict",
     "predict_mean_var",
@@ -120,22 +134,21 @@ __all__ = [
 ]
 
 
-def _warn_deprecated(old: str, new: str) -> None:
-    warnings.warn(
-        f"{old} is deprecated and will be removed in the next release; {new}",
-        DeprecationWarning,
-        stacklevel=3,
+def _removed(old: str, new: str) -> None:
+    raise TypeError(
+        f"{old} was removed (deprecated two releases ago); {new}"
     )
 
 
 @dataclasses.dataclass(frozen=True)
 class FAGPConfig:
-    """Static configuration of the Mercer expansion.
+    """Static configuration of the Hermite-Mercer expansion.
 
-    Retained as the static half of ``GPSpec`` (workload tables in
-    ``configs/fagp.py`` carry it without hyperparameters); new code should
-    construct a ``GPSpec`` and never pass an ``FAGPConfig`` to the fit /
-    predict entry points.
+    Retained as the static half of the legacy split API (workload tables in
+    ``configs/fagp.py`` carry it without hyperparameters); it describes the
+    ``hermite`` expansion only.  New code constructs a ``GPSpec`` and never
+    passes an ``FAGPConfig`` to the fit / predict entry points — those
+    signatures were removed this release.
 
     n:          eigenvalues per input dimension (paper's n).
     index_set:  'full' (paper; M = n^p) | 'total_degree' | 'hyperbolic_cross'.
@@ -158,31 +171,37 @@ class FAGPConfig:
 
 @partial(
     jax.tree_util.register_dataclass,
-    data_fields=("eps", "rho", "noise"),
-    meta_fields=("n", "index_set", "degree", "block_rows", "store_train", "backend"),
+    data_fields=("eps", "rho", "noise", "omega"),
+    meta_fields=("n", "index_set", "degree", "block_rows", "store_train",
+                 "backend", "expansion"),
 )
 @dataclasses.dataclass(frozen=True)
 class GPSpec:
     """The one self-describing specification of a GP session.
 
-    Merges the former ``FAGPConfig`` (static Mercer-expansion choices) and
-    ``SEKernelParams`` (kernel hyperparameters) so a session is described by
-    exactly one object, baked into ``FAGPState`` at fit time.
+    Merges the kernel hyperparameters and the static expansion choices so a
+    session is described by exactly one object, baked into ``FAGPState`` at
+    fit time.
 
-    Pytree layout: ``eps``/``rho``/``noise`` are data leaves — ``nlml`` is
-    differentiable through them (build the loss with
+    Pytree layout: ``eps``/``rho``/``noise``/``omega`` are data leaves —
+    ``nlml`` is differentiable through them (build the loss with
     ``dataclasses.replace(spec, eps=..., ...)``); everything else is static
     metadata and participates in jit cache keys.
 
     eps:    per-dimension inverse length scales, shape (p,). Paper's eps_j.
-    rho:    per-dimension global scale factors, shape (p,). Paper's rho_j.
+    rho:    per-dimension global scale factors, shape (p,). Paper's rho_j
+            (Mercer Gaussian-measure scale; unused by the RFF families).
     noise:  observation noise std sigma_n (scalar).
-    n:      eigenvalues per input dimension (paper's n).
-    index_set / degree: multi-index truncation (see ``mercer.make_index_set``).
+    omega:  (R, p) eps-free spectral base draws for the RFF expansions
+            (None for ``hermite``); drawn once at spec creation and frozen
+            into the factorization like any other hyperparameter.
+    expansion: registered :class:`~repro.core.expansions.KernelExpansion`
+            name ('hermite' | 'rff_se' | 'rff_matern52' | plugins).
+    n:      eigenvalues per input dimension (paper's n; hermite only).
+    index_set / degree: multi-index truncation (hermite only; see
+            ``mercer.make_index_set``).
     block_rows: row-block size for the streaming moment accumulation.
     store_train: keep (Phi, y) in the fitted state (needed for mode='paper').
-                 Default False — the serving-oriented choice (the old
-                 ``FAGPConfig`` defaulted to True; see README §Migration).
     backend: execution backend name in the registry ('jnp' | 'pallas').
     """
 
@@ -195,6 +214,8 @@ class GPSpec:
     block_rows: int = 4096
     store_train: bool = False
     backend: str = "jnp"
+    expansion: str = "hermite"
+    omega: Optional[jax.Array] = None
 
     @staticmethod
     def create(
@@ -208,20 +229,80 @@ class GPSpec:
         block_rows: int = 4096,
         store_train: bool = False,
         backend: str = "jnp",
+        expansion: str = "hermite",
+        num_features: Optional[int] = None,
+        seed: int = 0,
+        omega=None,
     ) -> "GPSpec":
-        """Convenience constructor with scalar broadcasting (mirrors
-        ``SEKernelParams.create``): ``eps`` fixes p, scalars broadcast."""
+        """Convenience constructor with scalar broadcasting: ``eps`` fixes
+        p, scalars broadcast.  For non-deterministic expansions (the RFF
+        families) the spectral base draws are drawn here from
+        ``(num_features, seed)`` — or pass ``omega`` explicitly — and ride
+        on the spec as a data leaf."""
         eps = jnp.atleast_1d(jnp.asarray(eps, jnp.float32))
         rho = jnp.broadcast_to(jnp.asarray(rho, jnp.float32), eps.shape)
-        return GPSpec(
+        if omega is None:
+            if num_features is not None and num_features < 1:
+                raise ValueError(
+                    f"num_features must be >= 1, got {num_features}"
+                )
+            omega = get_expansion(expansion).draw_spec_data(
+                eps.shape[0], 256 if num_features is None else num_features,
+                seed,
+            )
+            if omega is None and num_features is not None:
+                # a deterministic expansion silently ignoring num_features
+                # almost always means a forgotten expansion= argument
+                raise ValueError(
+                    f"expansion {expansion!r} draws no spectral data; "
+                    f"num_features only applies to the RFF families — did "
+                    f"you mean expansion='rff_se' / 'rff_matern52'?"
+                )
+        elif get_expansion(expansion).draw_spec_data(1, 1, 0) is None:
+            raise ValueError(
+                f"expansion {expansion!r} takes no omega (it draws no "
+                f"spectral data)"
+            )
+        elif num_features is not None and np.shape(omega)[0] != num_features:
+            raise ValueError(
+                f"explicit omega has {np.shape(omega)[0]} rows but "
+                f"num_features={num_features}"
+            )
+        spec = GPSpec(
             eps=eps, rho=rho, noise=jnp.asarray(noise, jnp.float32),
             n=int(n), index_set=index_set, degree=degree,
             block_rows=block_rows, store_train=store_train, backend=backend,
+            expansion=expansion,
+            omega=None if omega is None else jnp.asarray(omega, jnp.float32),
+        )
+        get_expansion(expansion).validate(spec)
+        return spec
+
+    @staticmethod
+    def create_rff(
+        eps,
+        noise=1e-2,
+        *,
+        kernel: str = "se",
+        num_features: int = 256,
+        seed: int = 0,
+        rho=2.0,
+        block_rows: int = 4096,
+        store_train: bool = False,
+        backend: str = "jnp",
+    ) -> "GPSpec":
+        """Sugar for the RFF families: ``kernel`` is 'se' or 'matern52',
+        ``num_features`` is the number R of spectral frequencies (the
+        feature count is M = 2R; Monte-Carlo error O(1/sqrt(R)))."""
+        return GPSpec.create(
+            1, eps, rho, noise, block_rows=block_rows,
+            store_train=store_train, backend=backend,
+            expansion=f"rff_{kernel}", num_features=num_features, seed=seed,
         )
 
     @staticmethod
     def from_parts(params: SEKernelParams, cfg: FAGPConfig) -> "GPSpec":
-        """Merge a legacy (params, cfg) pair into one spec."""
+        """Merge a legacy (params, cfg) pair into one (hermite) spec."""
         return GPSpec(
             eps=params.eps, rho=params.rho, noise=params.noise,
             n=cfg.n, index_set=cfg.index_set, degree=cfg.degree,
@@ -246,24 +327,39 @@ class GPSpec:
         )
 
     def indices(self, p: Optional[int] = None) -> np.ndarray:
-        return make_index_set(self.index_set, self.n, p or self.p, self.degree)
+        """The expansion's static (M, w) index table — its row count is M."""
+        return get_expansion(self.expansion).indices(self, p or self.p)
+
+    def n_features(self, p: Optional[int] = None) -> int:
+        return self.indices(p).shape[0]
 
     def replace(self, **overrides) -> "GPSpec":
         return dataclasses.replace(self, **overrides)
 
     def describe(self) -> str:
         """Short human-readable summary for error messages."""
+        extra = (
+            f"n={self.n}, index_set={self.index_set!r}, degree={self.degree}"
+            if self.expansion == "hermite"
+            else f"R={0 if self.omega is None else np.shape(self.omega)[0]}"
+        )
         return (
-            f"GPSpec(n={self.n}, index_set={self.index_set!r}, "
-            f"degree={self.degree}, p={self.p}, backend={self.backend!r}, "
-            f"store_train={self.store_train})"
+            f"GPSpec(expansion={self.expansion!r}, {extra}, p={self.p}, "
+            f"backend={self.backend!r}, store_train={self.store_train})"
         )
 
 
-# spec fields frozen into the factorization: with_spec / deprecated-cfg calls
-# may not change these on a fitted state (idx, lam, chol all depend on them)
-_STRUCTURAL_FIELDS = ("n", "index_set", "degree")
-_HYPER_FIELDS = ("eps", "rho", "noise")
+# spec fields frozen into the factorization: with_spec calls may not change
+# these on a fitted state (idx, lam, chol all depend on them)
+_STRUCTURAL_FIELDS = ("expansion", "n", "index_set", "degree")
+_HYPER_FIELDS = ("eps", "rho", "noise", "omega")
+
+
+def _leaf_equal(a, b) -> bool:
+    if a is None or b is None:
+        return a is None and b is None
+    a, b = np.asarray(a), np.asarray(b)
+    return a.shape == b.shape and np.array_equal(a, b)
 
 
 @jax.tree_util.register_dataclass
@@ -275,8 +371,8 @@ class FAGPState:
     features, backend and block sizes — no call site re-passes configuration.
     """
 
-    idx: jax.Array            # (M, p) multi-index set (0-based degrees)
-    lam: jax.Array            # (M,)   product eigenvalues (may underflow; info only)
+    idx: jax.Array            # (M, w) expansion index table (static content)
+    lam: jax.Array            # (M,)   expansion weights (may underflow; info only)
     sqrtlam: jax.Array        # (M,)   exp(0.5 log lambda) — the scaling D
     chol: jax.Array           # (M, M) lower Cholesky of B = I + D G D / sigma^2
     u: jax.Array              # (M,) or (M, T) mean weights Lbar^{-1} Phi^T y / sigma^2
@@ -284,7 +380,7 @@ class FAGPState:
     Phi: Optional[jax.Array]  # (N, M) train features   (store_train only)
     y: Optional[jax.Array]    # (N,) or (N, T) train targets (store_train only)
     b: Optional[jax.Array] = None    # (M,) / (M, T) raw moment Phi^T y — fit_update
-    spec: Optional[GPSpec] = None    # baked at fit time; None only on legacy states
+    spec: Optional[GPSpec] = None    # baked at fit time; None only on internal states
 
     @property
     def n_features(self) -> int:
@@ -296,12 +392,13 @@ class FAGPState:
 
     def with_spec(self, spec: Optional[GPSpec] = None, **overrides) -> "FAGPState":
         """Escape hatch: swap execution knobs (backend, block_rows) at serve
-        time, or attach a spec to a legacy state.
+        time, or attach a spec to an internal spec-less state.
 
-        Validates that the requested spec regenerates *exactly* the index set
-        and hyperparameters this state was factorized with — structural
-        changes (n, index_set, degree, eps, rho, noise) are rejected because
-        chol/u/lam are frozen functions of them.
+        Validates that the requested spec regenerates *exactly* the index
+        table and hyperparameters this state was factorized with —
+        structural changes (expansion, n, index_set, degree, eps, rho,
+        noise, omega) are rejected because chol/u/lam are frozen functions
+        of them.
         """
         if spec is None:
             if self.spec is None:
@@ -313,16 +410,17 @@ class FAGPState:
         elif overrides:
             raise TypeError("pass either a full spec or keyword overrides, not both")
 
+        if self.spec is not None:
+            for f in _STRUCTURAL_FIELDS:
+                if getattr(spec, f) != getattr(self.spec, f):
+                    raise ValueError(
+                        f"spec/state mismatch: state was fitted with "
+                        f"{self.spec.describe()} but the new spec has "
+                        f"{f}={getattr(spec, f)!r}; structural choices are "
+                        f"frozen into the factorization — refit instead"
+                    )
         _check_spec_regenerates_idx(self, spec)
-        for f in _HYPER_FIELDS:
-            if not np.array_equal(
-                np.asarray(getattr(spec, f)), np.asarray(getattr(self.params, f))
-            ):
-                raise ValueError(
-                    f"spec/state mismatch: {f} differs from the value this state "
-                    f"was fitted with; hyperparameters are frozen into the "
-                    f"factorization — refit (or fit_update) instead"
-                )
+        _check_hypers_match(self, spec, "with_spec")
         if spec.store_train and self.Phi is None:
             raise ValueError(
                 "with_spec cannot enable store_train on an already-fitted state "
@@ -333,25 +431,58 @@ class FAGPState:
         return dataclasses.replace(self, spec=spec, params=spec.params)
 
 
+def _check_hypers_match(state: "FAGPState", spec: "GPSpec", who: str) -> None:
+    """Raise unless ``spec`` carries exactly the hyperparameter leaves
+    (eps/rho/noise, plus any RFF spectral draws) the state was factorized
+    with — the data half of every spec/state compatibility check (shared by
+    ``FAGPState.with_spec`` and the bank's membership validation)."""
+    for f in _HYPER_FIELDS:
+        # spec-less states carry no omega record, so they compare as None:
+        # a spec WITH spectral draws can never attach to one (we could not
+        # verify the draws match the factorization), which also blocks the
+        # cross-family aliasing where an RFF arange(2R) index table happens
+        # to equal a 1-D hermite grid
+        have = (
+            getattr(state.spec, f) if state.spec is not None
+            else getattr(state.params, f, None)
+        )
+        if not _leaf_equal(getattr(spec, f), have):
+            raise ValueError(
+                f"{who}: spec/state mismatch: {f} differs from the value "
+                f"this state was fitted with; hyperparameters are frozen "
+                f"into the factorization — refit (or fit_update) instead"
+            )
+
+
 def _check_spec_regenerates_idx(state: "FAGPState", spec: "GPSpec") -> None:
-    """Raise unless ``spec`` regenerates exactly the index set baked into the
-    state — the structural half of every spec/state compatibility check."""
+    """Raise unless ``spec`` regenerates exactly the index table baked into
+    the state — the structural half of every spec/state compatibility
+    check."""
     idx_np = np.asarray(state.idx)
-    want = spec.indices(idx_np.shape[1])
+    want = spec.indices()
     if want.shape != idx_np.shape or not np.array_equal(want, idx_np):
         fitted = state.spec.describe() if state.spec is not None else (
-            f"an index set of shape {idx_np.shape}"
+            f"an index table of shape {idx_np.shape}"
         )
         raise ValueError(
             f"spec/state mismatch: this state was fitted with {fitted}, but "
-            f"{spec.describe()} generates a different index set; n/index_set/"
-            f"degree are frozen into the factorization — refit instead"
+            f"{spec.describe()} generates a different index table; the "
+            f"expansion structure is frozen into the factorization — refit "
+            f"instead"
         )
 
 
-def build_features(X: jax.Array, params: SEKernelParams, idx: jax.Array, n_max: int) -> jax.Array:
-    """Phi_(X) for an arbitrary multi-index set. (N, p) -> (N, M)."""
-    return phi_nd(X, idx, params, n_max)
+def build_features(X: jax.Array, spec: GPSpec,
+                   idx: Optional[jax.Array] = None) -> jax.Array:
+    """Phi_(X) under the spec's expansion (jnp reference path).
+    (N, p) -> (N, M).  ``idx`` defaults to the spec's own index table."""
+    if idx is None:
+        idx = jnp.asarray(spec.indices())
+    return get_expansion(spec.expansion).features(X, idx, spec)
+
+
+def _features(X: jax.Array, idx: jax.Array, spec: GPSpec) -> jax.Array:
+    return get_expansion(spec.expansion).features(X, idx, spec)
 
 
 def _tscale(d: jax.Array, v: jax.Array) -> jax.Array:
@@ -420,13 +551,13 @@ def _block_scan_moments(X, y, feats_fn, M: int, block_rows: int,
     return G, b
 
 
-def _accumulate_moments(X, y, params, idx, n_max: int, block_rows: int,
-                        row_mask=None):
-    """Streaming G = Phi^T Phi, b = Phi^T y over row blocks (O(M^2) memory).
+def _accumulate_moments(X, y, spec, idx, block_rows: int, row_mask=None):
+    """Streaming G = Phi^T Phi, b = Phi^T y over row blocks (O(M^2) memory),
+    under the spec's expansion.
 
     y may be (N,) or multi-output (N, T); b comes back (M,) or (M, T)."""
     return _block_scan_moments(
-        X, y, lambda Xi: build_features(Xi, params, idx, n_max),
+        X, y, lambda Xi: _features(Xi, idx, spec),
         idx.shape[0], block_rows, row_mask=row_mask,
     )
 
@@ -441,60 +572,69 @@ def _finish_fit(B, b, loglam, sqrtlam, sig2, idx, params, Phi, y):
     )
 
 
-@partial(jax.jit, static_argnames=("n_max", "block_rows", "store_train"))
-def _fit(X, y, params, idx, n_max: int, block_rows: int, store_train: bool):
-    sig2 = params.noise**2
-    loglam = log_eigenvalues_nd(idx, params)
-    G, b = _accumulate_moments(X, y, params, idx, n_max, block_rows)
+@jax.jit
+def _fit(X, y, spec: GPSpec, idx):
+    """jnp-backend fit: the spec's static metadata keys the jit cache, its
+    data leaves (eps/rho/noise/omega) are traced."""
+    exp = get_expansion(spec.expansion)
+    sig2 = spec.noise**2
+    loglam = exp.log_eigenvalues(idx, spec)
+    G, b = _accumulate_moments(X, y, spec, idx, spec.block_rows)
     B, sqrtlam = _assemble_scaled_system(G, loglam, sig2)
-    Phi = build_features(X, params, idx, n_max) if store_train else None
-    return _finish_fit(B, b, loglam, sqrtlam, sig2, idx, params,
-                       Phi, y if store_train else None)
+    Phi = _features(X, idx, spec) if spec.store_train else None
+    return _finish_fit(B, b, loglam, sqrtlam, sig2, idx, spec.params,
+                       Phi, y if spec.store_train else None)
 
 
-def _pallas_streamed_bt(X, Y, consts, S, n_max: int, block_rows: int):
+def _pallas_streamed_bt(X, Y, consts, table, spec, tile):
     """Per-task moment vectors b = Phi^T Y for multi-output fits on the
-    Pallas backend: feature tiles come from the hermite_phi kernel one row
+    Pallas backend: feature tiles come from the expansion kernel one row
     block at a time, so only a (block_rows, M) tile is ever live."""
     from repro.kernels import ops as kops
 
     _, b = _block_scan_moments(
-        X, Y, lambda Xi: kops.hermite_phi(Xi, consts, S, n_max=n_max),
-        S.shape[1], block_rows, want_gram=False,
+        X, Y,
+        lambda Xi: kops.expansion_phi(Xi, consts, table, n_max=spec.n,
+                                      tile_fn=tile),
+        table.shape[1], spec.block_rows, want_gram=False,
     )
     return b
 
 
-@partial(jax.jit, static_argnames=("n_max", "store_train", "block_rows"))
-def _fit_pallas(X, y, params, idx, S, n_max: int, store_train: bool,
-                block_rows: int = 4096):
+@jax.jit
+def _fit_pallas(X, y, spec: GPSpec, idx, aux):
     """fit() on the streaming fused Pallas kernel: feature tiles are
-    generated on the fly inside the Gram accumulation (kernels/phi_gram), so
-    Phi never exists in HBM and peak live memory is O(M^2) in N — one HBM
-    pass over X instead of the materialized path's two passes plus an N x M
-    intermediate.  (store_train=True additionally materializes Phi for
-    mode='paper' prediction, reintroducing the N x M buffer by request.)
+    generated on the fly inside the Gram accumulation (kernels/phi_gram) by
+    the expansion's tile builder, so Phi never exists in HBM and peak live
+    memory is O(M^2) in N — one HBM pass over X instead of the materialized
+    path's two passes plus an N x M intermediate.  (store_train=True
+    additionally materializes Phi for mode='paper' prediction,
+    reintroducing the N x M buffer by request.)
 
     Multi-output y (N, T): the shared scaled Gram B comes from the fused
     kernel exactly as in the single-output case; the per-task moment vectors
-    are streamed block-wise through the hermite_phi kernel.  Known cost: this
-    is a SECOND pass over X that regenerates the feature tiles (still O(M T)
-    live memory, never an N x M buffer) — teaching phi_gram to accumulate
-    (M, T) moments in its one pass is the planned follow-up."""
+    are streamed block-wise through the expansion feature kernel.  Known
+    cost: this is a SECOND pass over X that regenerates the feature tiles
+    (still O(M T) live memory, never an N x M buffer) — teaching phi_gram
+    to accumulate (M, T) moments in its one pass is the planned follow-up."""
     from repro.kernels import ops as kops
-    from repro.kernels import ref as kref
 
-    sig2 = params.noise**2
-    loglam = log_eigenvalues_nd(idx, params)
+    exp = get_expansion(spec.expansion)
+    sig2 = spec.noise**2
+    loglam = exp.log_eigenvalues(idx, spec)
     sqrtlam = jnp.exp(0.5 * loglam)
-    consts = kref.phi_consts(params.eps, params.rho)
+    consts = exp.tile_consts(spec)
+    table = exp.tile_table(aux, spec)
+    tile = exp.tile_fn()
     y0 = y if y.ndim == 1 else y[:, 0]
-    B, b = kops.fused_fit_moments(X, y0, consts, S, sqrtlam, sig2, n_max=n_max)
+    B, b = kops.fused_fit_moments(X, y0, consts, table, sqrtlam, sig2,
+                                  n_max=spec.n, tile_fn=tile)
     if y.ndim == 2:
-        b = _pallas_streamed_bt(X, y, consts, S, n_max, block_rows)
-    Phi = kops.hermite_phi(X, consts, S, n_max=n_max) if store_train else None
-    return _finish_fit(B, b, loglam, sqrtlam, sig2, idx, params,
-                       Phi, y if store_train else None)
+        b = _pallas_streamed_bt(X, y, consts, table, spec, tile)
+    Phi = (kops.expansion_phi(X, consts, table, n_max=spec.n, tile_fn=tile)
+           if spec.store_train else None)
+    return _finish_fit(B, b, loglam, sqrtlam, sig2, idx, spec.params,
+                       Phi, y if spec.store_train else None)
 
 
 # ---------------------------------------------------------------------------
@@ -512,14 +652,17 @@ def _supports_everything(spec: "GPSpec") -> Optional[str]:
 
 @dataclasses.dataclass(frozen=True)
 class FitBackend:
-    """Execution backend for the FAGP hot paths.
+    """Execution backend for the FAGP hot paths.  Every hook receives the
+    session's ``GPSpec`` and resolves the feature map through the expansion
+    registry — backends execute, expansions define the math.
 
-    prepare:  (idx_np, n) -> static auxiliary carried to every call (e.g. the
-              one-hot selection matrix for the Pallas kernels); None if unused.
+    prepare:  (idx_np, spec) -> static auxiliary carried to every call
+              (e.g. the Hermite one-hot selection for the Pallas kernels);
+              None if unused.
     fit:      (X, y, idx, aux, spec) -> FAGPState (spec baked by the caller).
-    features: (X, params, idx, aux, n_max) -> (N, M) feature matrix.
-    mean_var: (state, Xs, aux, n_max) -> (mu, var), the serving path.
-    moments:  (X, y, params, idx, aux, n_max, block_rows, mask) -> (G, b)
+    features: (X, spec, idx, aux) -> (N, M) feature matrix.
+    mean_var: (state, Xs, aux) -> (mu, var), the serving path.
+    moments:  (X, y, spec, idx, aux, block_rows, mask) -> (G, b)
               raw sufficient statistics — the per-shard unit of work for
               core.distributed (partial sums, psum'd before the solve).
     supports: (spec) -> None if the backend can run the spec, else a short
@@ -529,11 +672,11 @@ class FitBackend:
     optional; ``bank.GPBank`` falls back to a vmap of the single-model
     entry points when a backend leaves them None:
 
-    bank_moments:  (Xb (B,N,p), yb (B,N), params, idx, aux, n_max,
+    bank_moments:  (Xb (B,N,p), yb (B,N), spec, idx, aux,
                    block_rows, maskb (B,N)) -> (G (B,M,M), b (B,M)) — raw
                    fit moments for B independent datasets in one batched
                    call; per-slot row masks express ragged per-tenant N.
-    bank_mean_var: (stack, binv (C,M,M), slots (Q,), Xq (Q,p), aux, n_max)
+    bank_mean_var: (stack, binv (C,M,M), slots (Q,), Xq (Q,p), aux)
                    -> (mu, var) for a mixed-tenant query batch against a
                    stacked FAGPState (leading bank axis on
                    chol/u/b/lam/sqrtlam); ``binv`` is the per-slot B^{-1}
@@ -542,7 +685,7 @@ class FitBackend:
     """
 
     name: str
-    prepare: Callable[[np.ndarray, int], Any]
+    prepare: Callable[[np.ndarray, "GPSpec"], Any]
     fit: Callable[..., "FAGPState"]
     features: Callable[..., jax.Array]
     mean_var: Callable[..., tuple]
@@ -573,7 +716,9 @@ def available_backends() -> list[str]:
 
 
 def _check_backend_support(spec: "GPSpec") -> FitBackend:
-    """Resolve spec.backend and enforce its declared capabilities."""
+    """Resolve spec.expansion and spec.backend, validate the spec against
+    the expansion, and enforce the backend's declared capabilities."""
+    get_expansion(spec.expansion).validate(spec)
     backend = get_backend(spec.backend)
     reason = backend.supports(spec)
     if reason is not None:
@@ -584,22 +729,22 @@ def _check_backend_support(spec: "GPSpec") -> FitBackend:
     return backend
 
 
-# prepare() results memoized per (idx array, backend, n): predict_mean_var /
-# fit_update sit on the serving hot path, and rebuilding the one-hot
-# selection matrix (plus the blocking device->host idx copy) per microbatch
-# is pure waste.  Keyed by id() and validated by weakref so a recycled id
-# can never alias a dead array.
+# prepare() results memoized per (idx array, backend, expansion, n):
+# predict_mean_var / fit_update sit on the serving hot path, and rebuilding
+# the one-hot selection matrix (plus the blocking device->host idx copy) per
+# microbatch is pure waste.  Keyed by id() and validated by weakref so a
+# recycled id can never alias a dead array.
 _AUX_CACHE: dict = {}
 
 
-def _backend_aux(backend: FitBackend, idx: jax.Array, n: int):
+def _backend_aux(backend: FitBackend, idx: jax.Array, spec: "GPSpec"):
     import weakref
 
-    key = (id(idx), backend.name, n)
+    key = (id(idx), backend.name, spec.expansion, spec.n)
     hit = _AUX_CACHE.get(key)
     if hit is not None and hit[0]() is idx:
         return hit[1]
-    aux = backend.prepare(np.asarray(idx), n)
+    aux = backend.prepare(np.asarray(idx), spec)
     try:
         ref = weakref.ref(idx)
     except TypeError:
@@ -613,27 +758,30 @@ def _backend_aux(backend: FitBackend, idx: jax.Array, n: int):
 # --- jnp backend (scan-streamed, pure XLA) ---------------------------------
 
 
-@partial(jax.jit, static_argnames=("n_max",))
-def _features_jit(X, params, idx, n_max: int):
-    return build_features(X, params, idx, n_max)
+@jax.jit
+def _features_jit(X, spec: GPSpec, idx):
+    return _features(X, idx, spec)
 
 
-def _jnp_features(X, params, idx, aux, n_max):
-    return _features_jit(X, params, idx, n_max)
+def _jnp_features(X, spec, idx, aux):
+    return _features_jit(X, spec, idx)
 
 
-def _jnp_moments(X, y, params, idx, aux, n_max, block_rows, mask=None):
-    return _accumulate_moments(X, y, params, idx, n_max, block_rows,
-                               row_mask=mask)
+def _jnp_moments(X, y, spec, idx, aux, block_rows, mask=None):
+    return _jnp_moments_jit(X, y, spec, idx, block_rows, mask)
+
+
+@partial(jax.jit, static_argnames=("block_rows",))
+def _jnp_moments_jit(X, y, spec, idx, block_rows, mask):
+    return _accumulate_moments(X, y, spec, idx, block_rows, row_mask=mask)
 
 
 def _jnp_fit(X, y, idx, aux, spec: "GPSpec"):
-    return _fit(X, y, spec.params, idx, spec.n, spec.block_rows,
-                spec.store_train)
+    return _fit(X, y, spec, idx)
 
 
-def _jnp_mean_var(state, Xs, aux, n_max):
-    return _mean_var_jnp(state, Xs, n_max)
+def _jnp_mean_var(state, Xs, aux):
+    return _mean_var_jnp(state, Xs)
 
 
 # --- bank (multi-tenant) hooks ---------------------------------------------
@@ -672,21 +820,21 @@ def _bank_gathered_posterior(binv_s, u_s, sqrtlam_s, slots, Phis):
     return mu, var
 
 
-@partial(jax.jit, static_argnames=("n_max", "block_rows"))
-def _jnp_bank_moments_jit(Xb, yb, params, idx, n_max, block_rows, maskb):
+@partial(jax.jit, static_argnames=("block_rows",))
+def _jnp_bank_moments_jit(Xb, yb, spec, idx, block_rows, maskb):
     f = lambda X, y, m: _accumulate_moments(
-        X, y, params, idx, n_max, block_rows, row_mask=m
+        X, y, spec, idx, block_rows, row_mask=m
     )
     return jax.vmap(f)(Xb, yb, maskb)
 
 
-def _jnp_bank_moments(Xb, yb, params, idx, aux, n_max, block_rows, maskb=None):
+def _jnp_bank_moments(Xb, yb, spec, idx, aux, block_rows, maskb=None):
     if maskb is None:
         maskb = jnp.ones(Xb.shape[:2], Xb.dtype)
     # banks hold SMALL tenants: never let the scan pad a slot's few rows up
     # to the default serving block (the pallas path clamps block_k likewise)
     block_rows = min(block_rows, max(1, Xb.shape[1]))
-    return _jnp_bank_moments_jit(Xb, yb, params, idx, n_max, block_rows, maskb)
+    return _jnp_bank_moments_jit(Xb, yb, spec, idx, block_rows, maskb)
 
 
 def _gathered_bank_mean_var(features):
@@ -694,8 +842,8 @@ def _gathered_bank_mean_var(features):
     serving path is backend-independent (one home, above) — only the
     feature construction differs.  Used for both built-in backends and as
     the fallback for third-party backends that declare no bank hooks."""
-    def f(stack, binv, slots, Xq, aux, n_max):
-        Phis = features(Xq, stack.params, stack.idx, aux, n_max)
+    def f(stack, binv, slots, Xq, aux):
+        Phis = features(Xq, stack.spec, stack.idx, aux)
         return _bank_gathered_posterior(
             binv, stack.u, stack.sqrtlam, slots, Phis
         )
@@ -704,74 +852,64 @@ def _gathered_bank_mean_var(features):
 
 # --- pallas backend (fused TPU kernels; interpret mode on CPU) -------------
 
-# The kernels unroll the scaled Hermite recurrence n_max times inside the
-# kernel body; past this depth the unrolled program is impractical (and the
-# eigenvalues have underflown f32 for ~25 columns already).
-_PALLAS_MAX_N = 64
-
 
 def _pallas_supports(spec: "GPSpec") -> Optional[str]:
-    if spec.n > _PALLAS_MAX_N:
-        return (
-            f"n={spec.n} exceeds the unrolled Hermite recurrence depth the "
-            f"kernels are built for (max {_PALLAS_MAX_N}); use backend='jnp'"
-        )
-    if spec.index_set not in ("full", "total_degree", "hyperbolic_cross"):
-        return f"unknown index set {spec.index_set!r}"
-    return None
+    # the expansion owns the tile builder, so it owns the capability answer
+    # (Hermite: unrolled recurrence depth; RFF: anything goes)
+    return get_expansion(spec.expansion).pallas_supports(spec)
 
 
-def _pallas_prepare(idx_np: np.ndarray, n: int):
-    from repro.kernels import ref as kref
-
-    return jnp.asarray(kref.one_hot_selection(idx_np, n))
+def _pallas_prepare(idx_np: np.ndarray, spec: "GPSpec"):
+    return get_expansion(spec.expansion).pallas_prepare(idx_np, spec)
 
 
-def _pallas_features(X, params, idx, aux, n_max):
+def _pallas_features(X, spec, idx, aux):
     from repro.kernels import ops as kops
-    from repro.kernels import ref as kref
 
-    consts = kref.phi_consts(params.eps, params.rho)
-    return kops.hermite_phi(X, consts, aux, n_max=n_max)
+    exp = get_expansion(spec.expansion)
+    return kops.expansion_phi(
+        X, exp.tile_consts(spec), exp.tile_table(aux, spec),
+        n_max=spec.n, tile_fn=exp.tile_fn(),
+    )
 
 
-def _pallas_moments(X, y, params, idx, aux, n_max, block_rows, mask=None):
+def _pallas_moments(X, y, spec, idx, aux, block_rows, mask=None):
     from repro.kernels import ops as kops
-    from repro.kernels import ref as kref
 
-    consts = kref.phi_consts(params.eps, params.rho)
+    exp = get_expansion(spec.expansion)
     ones = jnp.ones((idx.shape[0],), jnp.float32)
     return kops.fused_fit_moments(
-        X, y, consts, aux, ones, jnp.float32(1.0), mask,
-        n_max=n_max, scale=False,
+        X, y, exp.tile_consts(spec), exp.tile_table(aux, spec), ones,
+        jnp.float32(1.0), mask, n_max=spec.n, scale=False,
+        tile_fn=exp.tile_fn(),
     )
 
 
 def _pallas_fit(X, y, idx, aux, spec: "GPSpec"):
-    return _fit_pallas(X, y, spec.params, idx, aux, spec.n, spec.store_train,
-                       spec.block_rows)
+    return _fit_pallas(X, y, spec, idx, aux)
 
 
-def _pallas_mean_var(state, Xs, aux, n_max):
-    return _mean_var_pallas(state, Xs, aux, n_max)
+def _pallas_mean_var(state, Xs, aux):
+    return _mean_var_pallas(state, Xs, aux)
 
 
-def _pallas_bank_moments(Xb, yb, params, idx, aux, n_max, block_rows,
-                         maskb=None):
+def _pallas_bank_moments(Xb, yb, spec, idx, aux, block_rows, maskb=None):
     """One kernel launch for the whole bank: the bank axis is a leading
-    grid dimension of the streaming fused kernel, so Hermite-feature tiles
-    for different tenants are generated in VMEM tile-by-tile — B separate
-    N x M Phis never materialize (kernels/phi_gram.bank_phi_gram_kernel)."""
+    grid dimension of the streaming fused kernel, so feature tiles for
+    different tenants are generated in VMEM tile-by-tile — B separate
+    N x M Phis never materialize (kernels/phi_gram.bank_phi_gram_kernel),
+    whichever expansion the bank's shared spec names."""
     from repro.kernels import ops as kops
-    from repro.kernels import ref as kref
 
-    consts = kref.phi_consts(params.eps, params.rho)
-    return kops.bank_fused_fit_moments(Xb, yb, consts, aux, maskb,
-                                       n_max=n_max)
+    exp = get_expansion(spec.expansion)
+    return kops.bank_fused_fit_moments(
+        Xb, yb, exp.tile_consts(spec), exp.tile_table(aux, spec), maskb,
+        n_max=spec.n, tile_fn=exp.tile_fn(),
+    )
 
 
 register_backend(FitBackend(
-    name="jnp", prepare=lambda idx_np, n: None, fit=_jnp_fit,
+    name="jnp", prepare=lambda idx_np, spec: None, fit=_jnp_fit,
     features=_jnp_features, mean_var=_jnp_mean_var, moments=_jnp_moments,
     bank_moments=_jnp_bank_moments,
     bank_mean_var=_gathered_bank_mean_var(_jnp_features),
@@ -786,8 +924,8 @@ register_backend(FitBackend(
 
 
 # ---------------------------------------------------------------------------
-# Public entry points — spec-first, with one-release deprecation shims for
-# the split (params, cfg) signatures
+# Public entry points — spec-first.  The split (params, cfg) signatures were
+# deprecated for two releases and now raise TypeError.
 # ---------------------------------------------------------------------------
 
 
@@ -799,79 +937,36 @@ def _check_p(spec: GPSpec, p: int) -> None:
         )
 
 
-def _fit_with_spec(X: jax.Array, y: jax.Array, spec: GPSpec) -> FAGPState:
-    _check_p(spec, X.shape[1])
-    backend = _check_backend_support(spec)
-    idx_np = spec.indices(X.shape[1])
-    idx = jnp.asarray(idx_np)
-    aux = backend.prepare(idx_np, spec.n)
-    state = backend.fit(X, y, idx, aux, spec)
-    return dataclasses.replace(state, spec=spec)
-
-
-def fit(X: jax.Array, y: jax.Array, spec: GPSpec, cfg: Optional[FAGPConfig] = None) -> FAGPState:
+def fit(X: jax.Array, y: jax.Array, spec: GPSpec, cfg: Any = None) -> FAGPState:
     """Fit the FAGP posterior; the spec is baked into the returned state.
 
     y: (N,) targets, or (N, T) for T tasks sharing one factorization.
-
-    Deprecated form ``fit(X, y, params, cfg)`` still works for one release.
     """
-    if cfg is not None or isinstance(spec, SEKernelParams):
-        if isinstance(spec, GPSpec):
-            raise TypeError(
-                "fit(X, y, spec) takes no cfg — the spec already carries the "
-                "whole configuration"
-            )
-        if cfg is None:
-            raise TypeError("fit(X, y, params, cfg): missing cfg")
-        _warn_deprecated(
+    if cfg is not None or not isinstance(spec, GPSpec):
+        _removed(
             "fit(X, y, params, cfg)",
             "merge them with GPSpec.from_parts(params, cfg) and call "
             "fit(X, y, spec)",
         )
-        spec = GPSpec.from_parts(spec, cfg)
-    return _fit_with_spec(X, y, spec)
+    _check_p(spec, X.shape[1])
+    backend = _check_backend_support(spec)
+    idx_np = spec.indices(X.shape[1])
+    idx = jnp.asarray(idx_np)
+    aux = backend.prepare(idx_np, spec)
+    state = backend.fit(X, y, idx, aux, spec)
+    return dataclasses.replace(state, spec=spec)
 
 
-def _resolve_spec(state: FAGPState, cfg: Optional[FAGPConfig], call: str) -> GPSpec:
-    """Derive the session spec from the state; reconcile a deprecated cfg.
-
-    A cfg that structurally disagrees with the fitted spec raises instead of
-    silently evaluating the wrong features (the n=12-fit / n=10-predict bug
-    class this redesign removes).
-    """
-    if cfg is None:
-        if state.spec is None:
-            raise ValueError(
-                "this state has no baked GPSpec (produced by a deprecated or "
-                "internal path); attach one with state.with_spec(spec) or pass "
-                "the deprecated cfg argument"
-            )
-        return state.spec
-    _warn_deprecated(
-        f"{call} with a cfg argument",
-        f"the spec is baked into the state — drop the cfg and call {call}",
-    )
+def _require_spec(state: FAGPState, call: str) -> GPSpec:
+    """Derive the session spec from the state (the only source of truth now
+    that the deprecated cfg re-passing was removed)."""
     if state.spec is None:
-        # legacy state: the cfg is all we have, but it must regenerate the
-        # index set the state was factorized with — a wrong n here would
-        # silently evaluate garbage features otherwise
-        spec = GPSpec.from_parts(state.params, cfg)
-        _check_spec_regenerates_idx(state, spec)
-        return spec
-    for f in _STRUCTURAL_FIELDS:
-        if getattr(cfg, f) != getattr(state.spec, f):
-            raise ValueError(
-                f"spec/state mismatch: state was fitted with "
-                f"{state.spec.describe()} but the cfg passed to {call} has "
-                f"{f}={getattr(cfg, f)!r}; this would silently evaluate the "
-                f"wrong features — drop the cfg argument"
-            )
-    # execution knobs may legitimately differ (that was the only valid use
-    # of re-passing cfg); honour them without touching the structure
-    return dataclasses.replace(
-        state.spec, backend=cfg.backend, block_rows=cfg.block_rows
-    )
+        raise ValueError(
+            f"this state has no baked GPSpec (produced by an internal "
+            f"path); attach one with state.with_spec(spec) before calling "
+            f"{call}"
+        )
+    return state.spec
 
 
 # ---------------------------------------------------------------------------
@@ -936,8 +1031,7 @@ def _update_state(state: FAGPState, Phi_new: jax.Array, y_new: jax.Array):
 
 
 def fit_update(
-    state: FAGPState, X_new: jax.Array, y_new: jax.Array,
-    cfg: Optional[FAGPConfig] = None,
+    state: FAGPState, X_new: jax.Array, y_new: jax.Array, cfg: Any = None,
 ) -> FAGPState:
     """Absorb new observations into a fitted state without refitting.
 
@@ -947,9 +1041,13 @@ def fit_update(
     Exactly equivalent to refitting on the concatenated data (same math, up
     to f32 rounding); tests pin update-then-predict == refit-then-predict.
 
-    Everything (backend, index set, block size) derives from the baked spec;
-    the ``cfg`` argument is a one-release deprecation shim.
+    Everything (expansion, backend, block size) derives from the baked spec.
     """
+    if cfg is not None:
+        _removed(
+            "fit_update(state, X_new, y_new, cfg)",
+            "the spec is baked into the state — drop the cfg",
+        )
     if state.b is None:
         raise ValueError("fit_update needs a state produced by fit() >= this "
                          "version (missing the raw moment vector b)")
@@ -960,10 +1058,10 @@ def fit_update(
             f"fit_update task mismatch: state holds "
             f"{state.n_tasks} task(s) but y_new has shape {y_new.shape}"
         )
-    spec = _resolve_spec(state, cfg, "fit_update(state, X_new, y_new)")
+    spec = _require_spec(state, "fit_update(state, X_new, y_new)")
     backend = _check_backend_support(spec)
-    aux = _backend_aux(backend, state.idx, spec.n)
-    Phi_new = backend.features(X_new, state.params, state.idx, aux, spec.n)
+    aux = _backend_aux(backend, state.idx, spec)
+    Phi_new = backend.features(X_new, spec, state.idx, aux)
     chol, b, u = _update_state(state, Phi_new, y_new)
     Phi = y = None
     if state.Phi is not None:
@@ -977,13 +1075,13 @@ def fit_update(
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("n_max",))
-def _predict_fused(state: FAGPState, Xs: jax.Array, n_max: int):
+@jax.jit
+def _predict_fused(state: FAGPState, Xs: jax.Array):
     """Beyond-paper weight-space path: no N-sized intermediates.
 
     Phi* Lbar^{-1} Phi*^T = (Phi* D) B^{-1} (Phi* D)^T via triangular solve.
     """
-    Phis = build_features(Xs, state.params, state.idx, n_max)  # (N*, M)
+    Phis = _features(Xs, state.idx, state.spec)  # (N*, M)
     mu = Phis @ state.u
     PhisD = Phis * state.sqrtlam[None, :]
     V = jax.scipy.linalg.solve_triangular(state.chol, PhisD.T, lower=True)  # (M, N*)
@@ -991,8 +1089,8 @@ def _predict_fused(state: FAGPState, Xs: jax.Array, n_max: int):
     return mu, cov
 
 
-@partial(jax.jit, static_argnames=("n_max",))
-def _predict_paper(state: FAGPState, Xs: jax.Array, n_max: int):
+@jax.jit
+def _predict_paper(state: FAGPState, Xs: jax.Array):
     """Literal Eqs. 11-12 GEMM chain in the paper's operation order.
 
     Requires a state fitted with store_train=True.  Forms the N x N
@@ -1003,7 +1101,7 @@ def _predict_paper(state: FAGPState, Xs: jax.Array, n_max: int):
     Phi, y = state.Phi, state.y
     N = Phi.shape[0]
     sig2 = state.params.noise**2
-    Phis = build_features(Xs, state.params, state.idx, n_max)   # (N*, M)
+    Phis = _features(Xs, state.idx, state.spec)                 # (N*, M)
     Lam = state.lam                                             # (M,)
 
     D = state.sqrtlam
@@ -1018,18 +1116,22 @@ def _predict_paper(state: FAGPState, Xs: jax.Array, n_max: int):
     return mu, cov
 
 
-def predict(state: FAGPState, Xs: jax.Array, cfg: Optional[FAGPConfig] = None,
+def predict(state: FAGPState, Xs: jax.Array, cfg: Any = None,
             mode: str = "fused"):
     """Posterior mean and covariance (N*, N*) at Xs.
 
     Mean is (N*,) or (N*, T) for multi-output states; the covariance is
     shared across tasks (one kernel, one noise level).  Everything derives
-    from the spec baked into the state; the ``cfg`` argument is a
-    one-release deprecation shim.
+    from the spec baked into the state.
     """
-    spec = _resolve_spec(state, cfg, "predict(state, Xs)")
+    if cfg is not None:
+        _removed(
+            "predict(state, Xs, cfg)",
+            "the spec is baked into the state — drop the cfg",
+        )
+    spec = _require_spec(state, "predict(state, Xs)")
     if mode == "fused":
-        return _predict_fused(state, Xs, spec.n)
+        return _predict_fused(state, Xs)
     if mode == "paper":
         if state.Phi is None:
             raise ValueError(
@@ -1038,17 +1140,20 @@ def predict(state: FAGPState, Xs: jax.Array, cfg: Optional[FAGPConfig] = None,
                 f"{spec.replace(store_train=False).describe()} — refit with a "
                 f"spec that sets store_train=True"
             )
-        return _predict_paper(state, Xs, spec.n)
+        return _predict_paper(state, Xs)
     raise ValueError(f"unknown mode {mode!r}")
 
 
-@partial(jax.jit, static_argnames=("n_max",))
-def _mean_var_pallas(state: FAGPState, Xs, S, n_max: int):
+@jax.jit
+def _mean_var_pallas(state: FAGPState, Xs, aux):
     from repro.kernels import ops as kops
-    from repro.kernels import ref as kref
 
-    consts = kref.phi_consts(state.params.eps, state.params.rho)
-    Phis = kops.hermite_phi(Xs, consts, S, n_max=n_max)
+    spec = state.spec
+    exp = get_expansion(spec.expansion)
+    Phis = kops.expansion_phi(
+        Xs, exp.tile_consts(spec), exp.tile_table(aux, spec),
+        n_max=spec.n, tile_fn=exp.tile_fn(),
+    )
     mu = Phis @ state.u
     M = state.chol.shape[0]
     Binv = jax.scipy.linalg.cho_solve((state.chol, True), jnp.eye(M, dtype=Phis.dtype))
@@ -1056,27 +1161,30 @@ def _mean_var_pallas(state: FAGPState, Xs, S, n_max: int):
     return mu, var
 
 
-@partial(jax.jit, static_argnames=("n_max",))
-def _mean_var_jnp(state: FAGPState, Xs, n_max: int):
-    Phis = build_features(Xs, state.params, state.idx, n_max)
+@jax.jit
+def _mean_var_jnp(state: FAGPState, Xs):
+    Phis = _features(Xs, state.idx, state.spec)
     mu = Phis @ state.u
     PhisD = Phis * state.sqrtlam[None, :]
     V = jax.scipy.linalg.solve_triangular(state.chol, PhisD.T, lower=True)
     return mu, jnp.sum(V * V, axis=0)
 
 
-def predict_mean_var(state: FAGPState, Xs: jax.Array,
-                     cfg: Optional[FAGPConfig] = None):
+def predict_mean_var(state: FAGPState, Xs: jax.Array, cfg: Any = None):
     """Posterior mean and *marginal variance* (N*,) — the production serving
     path: never materializes the N* x N* covariance (kernels/diag_quad).
 
     Mean is (N*,) or (N*, T) for multi-output states; the variance is shared
-    across tasks.  Backend and n_max derive from the baked spec; ``cfg`` is
-    a one-release deprecation shim."""
-    spec = _resolve_spec(state, cfg, "predict_mean_var(state, Xs)")
+    across tasks.  Expansion, backend and n_max derive from the baked spec."""
+    if cfg is not None:
+        _removed(
+            "predict_mean_var(state, Xs, cfg)",
+            "the spec is baked into the state — drop the cfg",
+        )
+    spec = _require_spec(state, "predict_mean_var(state, Xs)")
     backend = _check_backend_support(spec)
-    aux = _backend_aux(backend, state.idx, spec.n)
-    return backend.mean_var(state, Xs, aux, spec.n)
+    aux = _backend_aux(backend, state.idx, spec)
+    return backend.mean_var(state, Xs, aux)
 
 
 # ---------------------------------------------------------------------------
@@ -1084,13 +1192,14 @@ def predict_mean_var(state: FAGPState, Xs: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("n_max", "block_rows"))
-def _nlml(X, y, params: SEKernelParams, idx, n_max: int, block_rows: int):
+@partial(jax.jit, static_argnames=("block_rows",))
+def _nlml(X, y, spec: GPSpec, idx, block_rows: int):
+    exp = get_expansion(spec.expansion)
     N = X.shape[0]
     T = 1 if y.ndim == 1 else y.shape[1]
-    sig2 = params.noise**2
-    loglam = log_eigenvalues_nd(idx, params)
-    G, b = _accumulate_moments(X, y, params, idx, n_max, block_rows)
+    sig2 = spec.noise**2
+    loglam = exp.log_eigenvalues(idx, spec)
+    G, b = _accumulate_moments(X, y, spec, idx, block_rows)
     B, sqrtlam = _assemble_scaled_system(G, loglam, sig2)
     chol = jnp.linalg.cholesky(B)
     bs = _tscale(sqrtlam, b) / sig2              # D b / sig2, per task column
@@ -1111,27 +1220,16 @@ def nlml(X, y, spec: GPSpec, idx=None, n_max: Optional[int] = None,
     Matrix determinant lemma + Woodbury on (Phi Lambda Phi^T + sigma^2 I),
     assembled through the same scaled system as ``fit``.  Differentiable in
     the spec's (eps, rho, noise) leaves for gradient-based hyperparameter
-    learning (``GP.optimize``, examples/hyperparam_learning.py).  For
-    multi-output y (N, T) the tasks share one factorization and the result
-    is the sum of the per-task NLMLs.
-
-    Deprecated form ``nlml(X, y, params, idx, n_max, block_rows)`` still
-    works for one release.
+    learning — for the RFF expansions the lengthscale gradient flows through
+    the eps-scaled spectral frequencies (``GP.optimize``,
+    examples/hyperparam_learning.py).  For multi-output y (N, T) the tasks
+    share one factorization and the result is the sum of the per-task NLMLs.
     """
-    if idx is not None or n_max is not None or isinstance(spec, SEKernelParams):
-        if isinstance(spec, GPSpec):
-            raise TypeError(
-                "nlml(X, y, spec) takes no idx/n_max — the spec already "
-                "carries the whole configuration"
-            )
-        if idx is None or n_max is None:
-            raise TypeError("nlml(X, y, params, idx, n_max): missing idx/n_max")
-        _warn_deprecated(
+    if idx is not None or n_max is not None or not isinstance(spec, GPSpec):
+        _removed(
             "nlml(X, y, params, idx, n_max)",
             "build a GPSpec and call nlml(X, y, spec)",
         )
-        return _nlml(X, y, spec, idx, n_max, block_rows or 4096)
     _check_p(spec, X.shape[1])
     idx_j = jnp.asarray(spec.indices(X.shape[1]))
-    return _nlml(X, y, spec.params, idx_j, spec.n,
-                 block_rows or spec.block_rows)
+    return _nlml(X, y, spec, idx_j, block_rows or spec.block_rows)

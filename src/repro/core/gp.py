@@ -22,6 +22,20 @@ method returns results or a new `GP`.  Multi-output targets ``y`` of shape
 weights — ``predict``/``mean_var`` then return ``(N*, T)`` means and a
 shared variance.  `serve_gp`, `core.distributed` and the benchmarks all
 speak this one interface.
+
+The kernel decomposition is pluggable (``spec.expansion`` names a
+registered :class:`~repro.core.expansions.KernelExpansion`): the same
+facade serves the paper's Hermite-Mercer eigen-expansion (default) and the
+random-Fourier families —
+
+    spec = GPSpec.create_rff([0.8, 0.8], kernel="matern52",
+                             num_features=256, seed=0)
+    gp = GP.fit(X, y, spec)              # same calls, different kernel
+
+``GP.optimize`` learns RFF lengthscales exactly like Mercer ones (the
+spectral draws are data leaves on the spec; eps scales them inside the
+feature map).  The split ``(params, cfg)`` call shapes were deprecated for
+two releases and now raise TypeError (README §Migration).
 """
 from __future__ import annotations
 

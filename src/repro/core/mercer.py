@@ -48,6 +48,7 @@ __all__ = [
     "log_eigenvalues_1d",
     "log_eigenvalues_nd",
     "eigenfunctions_1d",
+    "hermite_psi_rows",
     "full_grid",
     "total_degree",
     "hyperbolic_cross",
@@ -55,6 +56,7 @@ __all__ = [
     "eigenvalues_nd",
     "phi_nd",
     "k_se_ard",
+    "k_matern52_ard",
 ]
 
 IndexSetKind = Literal["full", "total_degree", "hyperbolic_cross"]
@@ -113,41 +115,47 @@ def eigenvalues_1d(n: int, eps: jax.Array, rho: jax.Array) -> jax.Array:
     return jnp.exp(log_eigenvalues_1d(n, eps, rho))
 
 
+def hermite_psi_rows(z: jax.Array, beta: jax.Array, n: int) -> list:
+    """THE single home of the gamma-scaled Hermite recurrence.
+
+    With z = rho*beta*x and psi_i = gamma_i H_{i-1}(z):
+
+        psi_1     = sqrt(beta)
+        psi_2     = sqrt(2) z psi_1
+        psi_{i+1} = z sqrt(2/i) psi_i - sqrt((i-1)/i) psi_{i-1}
+
+    following from H_i = 2 z H_{i-1} - 2(i-1) H_{i-2} and
+    gamma_{i+1}/gamma_i = 1/sqrt(2i).  Unrolled at trace time (n is static)
+    so the same code runs in plain jnp (``eigenfunctions_1d``) and inside a
+    Pallas kernel body (``kernels.hermite_phi.phi_tile``), where a
+    ``lax.scan`` is not available; returns the list [psi_1 .. psi_n] of
+    arrays shaped like ``z``, *without* the Gaussian envelope.
+    """
+    psi_prev = jnp.sqrt(beta) * jnp.ones_like(z)
+    rows = [psi_prev]
+    if n > 1:
+        psi_cur = z * np.float32(np.sqrt(2.0)) * psi_prev
+        rows.append(psi_cur)
+        for i in range(2, n):
+            nxt = z * np.float32(np.sqrt(2.0 / i)) * psi_cur \
+                - np.float32(np.sqrt((i - 1.0) / i)) * psi_prev
+            psi_prev, psi_cur = psi_cur, nxt
+            rows.append(nxt)
+    return rows
+
+
 def eigenfunctions_1d(x: jax.Array, n: int, eps: jax.Array, rho: jax.Array) -> jax.Array:
     """Paper Eq. 15: phi_i(x) = gamma_i exp(-delta^2 x^2) H_{i-1}(rho beta x).
 
     x: (...,) scalars for one input dimension. Returns (..., n).
 
-    Stable scaled recurrence.  With z = rho*beta*x and
-    psi_i = gamma_i H_{i-1}(z):
-
-        psi_1     = sqrt(beta)
-        psi_2     = sqrt(2) z psi_1 / sqrt(2*1)         = sqrt(2) beta^(1/2) z ... (i=1 case below)
-        psi_{i+1} = z sqrt(2/i) psi_i - sqrt((i-1)/i) psi_{i-1}
-
-    following from H_i = 2 z H_{i-1} - 2(i-1) H_{i-2} and
-    gamma_{i+1}/gamma_i = 1/sqrt(2i).
+    Stable scaled recurrence via :func:`hermite_psi_rows` (shared with the
+    Pallas tile builder — one implementation, two execution contexts).
     """
     beta, delta2 = mercer_constants(eps, rho)
     z = rho * beta * x
     envelope = jnp.exp(-delta2 * x * x)
-
-    psi1 = jnp.sqrt(beta) * jnp.ones_like(z)
-    if n == 1:
-        return (envelope * psi1)[..., None]
-
-    def step(carry, i):
-        prev, cur = carry  # psi_{i-1}, psi_i   (i >= 1, 1-based)
-        i_f = i.astype(z.dtype)
-        nxt = z * jnp.sqrt(2.0 / i_f) * cur - jnp.sqrt((i_f - 1.0) / i_f) * prev
-        return (cur, nxt), nxt
-
-    psi2 = z * jnp.sqrt(2.0) * psi1
-    _, rest = jax.lax.scan(step, (psi1, psi2), jnp.arange(2, n))
-    # rest: (n-2, ...) stacked psi_3..psi_n
-    psis = jnp.concatenate(
-        [psi1[None], psi2[None], rest] if n > 2 else [psi1[None], psi2[None]], axis=0
-    )
+    psis = jnp.stack(hermite_psi_rows(z, beta, n), axis=0)
     return jnp.moveaxis(psis, 0, -1) * envelope[..., None]
 
 
@@ -244,3 +252,20 @@ def k_se_ard(X: jax.Array, X2: jax.Array, eps: jax.Array) -> jax.Array:
     """Exact ARD SE kernel (paper Eq. 17): exp(-sum_j eps_j^2 (x_j-x'_j)^2)."""
     d = X[:, None, :] - X2[None, :, :]  # (N, N2, p)
     return jnp.exp(-jnp.sum((eps**2) * d * d, axis=-1))
+
+
+def k_matern52_ard(X: jax.Array, X2: jax.Array, eps: jax.Array) -> jax.Array:
+    """Exact ARD Matern-5/2 kernel, parametrized to match the SE convention:
+    the SE kernel exp(-eps^2 d^2) has lengthscale l = 1/(sqrt(2) eps), so the
+    Matern scaled distance is r^2 = sum_j (x_j - x'_j)^2 / l_j^2
+    = 2 sum_j eps_j^2 (x_j - x'_j)^2 and
+
+        k(r) = (1 + sqrt(5) r + 5 r^2 / 3) exp(-sqrt(5) r).
+
+    This is the parity oracle for the RFF-Matern expansion (whose spectral
+    frequencies are multivariate-t with 2*nu = 5 degrees of freedom)."""
+    d = X[:, None, :] - X2[None, :, :]  # (N, N2, p)
+    r2 = 2.0 * jnp.sum((eps**2) * d * d, axis=-1)
+    r = jnp.sqrt(jnp.maximum(r2, 1e-30))
+    s5r = jnp.sqrt(5.0) * r
+    return (1.0 + s5r + (5.0 / 3.0) * r2) * jnp.exp(-s5r)

@@ -1,12 +1,18 @@
 """Pallas TPU kernels for the FAGP hot spots (validated in interpret mode).
 
-hermite_phi — fused Mercer feature construction (paper Eq. 19)
+The feature kernels are generic over a KernelExpansion's tile builder
+(``tile_fn``) — see core/expansions.py for the registry.
+
+hermite_phi — fused feature construction (generic kernel + the Hermite tile
+              for paper Eq. 19)
+rff_phi     — random-Fourier-feature tile builder (RFF-SE / RFF-Matern)
 gram        — fused scaled Gram  B = I + D Phi^T Phi D / sig2
 phi_gram    — streaming fused fit: feature tiles generated inside the Gram
               accumulation (Phi never in HBM); B and b in one pass
 diag_quad   — predictive-variance diagonal without the N* x N* covariance
 """
-from . import diag_quad, gram, hermite_phi, ops, phi_gram, ref
+from . import diag_quad, gram, hermite_phi, ops, phi_gram, ref, rff_phi
+from .ops import expansion_phi as expansion_phi_op        # noqa: F401
 from .ops import hermite_phi as hermite_phi_op            # noqa: F401
 from .ops import diag_quad as diag_quad_op                # noqa: F401
 from .ops import scaled_gram as scaled_gram_op            # noqa: F401

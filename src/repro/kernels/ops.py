@@ -17,12 +17,12 @@ import numpy as np
 from . import ref
 from .diag_quad import diag_quad_kernel
 from .gram import scaled_gram_kernel
-from .hermite_phi import hermite_phi_kernel
+from .hermite_phi import hermite_phi_kernel, phi_tile
 from .phi_gram import bank_phi_gram_kernel, phi_gram_kernel
 
 __all__ = [
-    "hermite_phi", "scaled_gram", "diag_quad", "fused_fit_moments",
-    "bank_fused_fit_moments", "resolve_interpret",
+    "expansion_phi", "hermite_phi", "scaled_gram", "diag_quad",
+    "fused_fit_moments", "bank_fused_fit_moments", "resolve_interpret",
 ]
 
 
@@ -46,8 +46,41 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_max", "block_n", "block_m", "interpret")
+    jax.jit,
+    static_argnames=("n_max", "block_n", "block_m", "interpret", "tile_fn"),
 )
+def expansion_phi(
+    X: jax.Array,            # (N, p)
+    consts: jax.Array,       # small global table (Hermite: (p, 3))
+    S: jax.Array,            # (K, M) per-column table (Hermite: one-hot)
+    *,
+    n_max: int,
+    block_n: int = 256,
+    block_m: int = 256,
+    interpret: bool | None = None,
+    tile_fn=phi_tile,
+) -> jax.Array:
+    """Phi_(X): (N, M) expansion feature matrix via the fused Pallas kernel,
+    generic over the expansion's ``tile_fn`` (a module-level function so the
+    jit cache stays keyed on stable identities).
+
+    Padded feature columns may hold garbage for non-Hermite tiles (an RFF
+    column with a zero table row is cos(0) = 1, not 0) — they are sliced
+    away here before anything downstream can read them."""
+    N, _ = X.shape
+    M = S.shape[1]
+    interp = resolve_interpret(interpret)
+    block_n = min(block_n, max(8, 1 << (N - 1).bit_length()))
+    block_m = min(block_m, max(128, 1 << (M - 1).bit_length()))
+    Xt = _pad_to(X.T.astype(jnp.float32), 1, block_n)
+    Sp = _pad_to(S.astype(jnp.float32), 1, block_m)
+    out = hermite_phi_kernel(
+        Xt, consts, Sp, n_max=n_max, block_n=block_n, block_m=block_m,
+        interpret=interp, tile_fn=tile_fn,
+    )
+    return out[:N, :M]
+
+
 def hermite_phi(
     X: jax.Array,            # (N, p)
     consts: jax.Array,       # (p, 3) from ref.phi_consts
@@ -58,30 +91,24 @@ def hermite_phi(
     block_m: int = 256,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Phi_(X): (N, M) Mercer feature matrix via the fused Pallas kernel."""
-    N, _ = X.shape
-    M = S.shape[1]
-    interp = resolve_interpret(interpret)
-    block_n = min(block_n, max(8, 1 << (N - 1).bit_length()))
-    block_m = min(block_m, max(128, 1 << (M - 1).bit_length()))
-    Xt = _pad_to(X.T.astype(jnp.float32), 1, block_n)
-    Sp = _pad_to(S.astype(jnp.float32), 1, block_m)
-    out = hermite_phi_kernel(
-        Xt, consts, Sp, n_max=n_max, block_n=block_n, block_m=block_m,
-        interpret=interp,
+    """Phi_(X) for the Hermite-Mercer expansion (the historical name; now a
+    thin wrapper over the generic :func:`expansion_phi`)."""
+    return expansion_phi(
+        X, consts, S, n_max=n_max, block_n=block_n, block_m=block_m,
+        interpret=interpret, tile_fn=phi_tile,
     )
-    return out[:N, :M]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_max", "block_m", "block_k", "scale", "interpret"),
+    static_argnames=("n_max", "block_m", "block_k", "scale", "interpret",
+                     "tile_fn"),
 )
 def fused_fit_moments(
     X: jax.Array,            # (N, p)
     y: jax.Array,            # (N,)
-    consts: jax.Array,       # (p, 3) from ref.phi_consts
-    S: jax.Array,            # (p*n_max, M) one-hot from ref.one_hot_selection
+    consts: jax.Array,       # small global table (Hermite: (p, 3))
+    S: jax.Array,            # (K, M) per-column table (Hermite: one-hot)
     sqrtlam: jax.Array,      # (M,)  ignored when scale=False
     sig2: jax.Array,         # scalar; ignored when scale=False
     mask: jax.Array | None = None,  # (N,) row validity; None = all valid
@@ -91,9 +118,11 @@ def fused_fit_moments(
     block_k: int = 256,
     scale: bool = True,
     interpret: bool | None = None,
+    tile_fn=phi_tile,
 ) -> tuple[jax.Array, jax.Array]:
     """Streaming fused fit statistics: Phi is generated tile-by-tile inside
-    the Gram contraction and never written to HBM (kernels/phi_gram).
+    the Gram contraction and never written to HBM (kernels/phi_gram),
+    generic over the expansion's ``tile_fn``.
 
     scale=True  -> (B, b) with B = I + D Phi^T Phi D / sig2  (the fit solve)
     scale=False -> (G, b) with G = Phi^T Phi  (raw moments, e.g. for the
@@ -118,28 +147,30 @@ def fused_fit_moments(
     B, b = phi_gram_kernel(
         Xt, consts, Sp, d, jnp.asarray(sig2, jnp.float32).reshape(1, 1),
         yp, mask, n_max=n_max, block_m=block_m, block_k=block_k,
-        scale=scale, interpret=interp,
+        scale=scale, interpret=interp, tile_fn=tile_fn,
     )
-    # padded columns (d = 0, S = 0) contribute identity rows when scale=True
-    # and zero rows otherwise; both slice away
+    # padded feature columns are garbage in general (zero for the Hermite
+    # one-hot, cos(0)=1 for RFF) but live entirely in rows/cols >= M of the
+    # outputs; the slice below removes every trace of them
     return B[:M, :M], b[0, :M]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_max", "block_m", "block_k", "interpret"),
+    static_argnames=("n_max", "block_m", "block_k", "interpret", "tile_fn"),
 )
 def bank_fused_fit_moments(
     Xb: jax.Array,           # (B, N, p) per-slot inputs (N = padded row cap)
     yb: jax.Array,           # (B, N)    per-slot targets
-    consts: jax.Array,       # (p, 3) from ref.phi_consts (shared spec)
-    S: jax.Array,            # (p*n_max, M) one-hot from ref.one_hot_selection
+    consts: jax.Array,       # small global table (shared spec)
+    S: jax.Array,            # (K, M) per-column table (shared spec)
     mask: jax.Array | None = None,  # (B, N) per-slot row validity (ragged N)
     *,
     n_max: int,
     block_m: int = 256,
     block_k: int = 256,
     interpret: bool | None = None,
+    tile_fn=phi_tile,
 ) -> tuple[jax.Array, jax.Array]:
     """Raw fit moments for a whole bank of B independent GPs in ONE kernel
     launch: G (B, M, M) with G_s = Phi_s^T Phi_s and b (B, M) with
@@ -166,9 +197,9 @@ def bank_fused_fit_moments(
     mask = _pad_to(mask, 2, block_k)
     G, b = bank_phi_gram_kernel(
         Xt, consts, Sp, yp, mask, n_max=n_max, block_m=block_m,
-        block_k=block_k, interpret=interp,
+        block_k=block_k, interpret=interp, tile_fn=tile_fn,
     )
-    # padded columns (S = 0) contribute zero rows/cols; both slice away
+    # padded feature columns only touch rows/cols >= M; sliced away here
     return G[:, :M, :M], b[:, 0, :M]
 
 

@@ -6,14 +6,16 @@ wall the paper's decomposed kernel is supposed to avoid (the M x M system
 is small; the N x M feature matrix is not).  This kernel fuses feature
 construction INTO the Gram accumulation: each (TK, TI) / (TK, TJ) tile of
 Phi is regenerated in VMEM from the corresponding (p, TK) tile of X via the
-shared Hermite recurrence (hermite_phi.phi_tile), contracted on the MXU,
-and discarded.  HBM traffic: read X and y once, write B (M x M) and
+expansion's tile builder (``tile_fn`` — hermite_phi.phi_tile for the
+Hermite-Mercer expansion, rff_phi.rff_tile for the random-Fourier
+families), contracted on the MXU, and discarded.  HBM traffic: read X and y once, write B (M x M) and
 b (M) once.  Peak live memory is O(M^2) in N — the same asymptotic as the
 jnp scan path, but in one fused pass.
 
 The trade is recompute for bandwidth: each X tile's features are rebuilt
-2 * M/TI times (once per output block row/column).  The recurrence is
-O(p * n_max) VPU work per element vs the O(TI) MXU work of the Gram
+2 * M/TI times (once per output block row/column).  The tile builder is
+O(p * n_max) VPU work per element (Hermite) or one (TK, p) x (p, TM)
+contraction plus a cosine (RFF) vs the O(TI) MXU work of the Gram
 contraction it feeds, so for M >= ~256 the MXU stays the bottleneck.
 
 Outputs (one fused pallas_call):
@@ -30,8 +32,8 @@ Bank variant (``bank_phi_gram_kernel``): one extra *leading* grid axis
 walks the slots of a GP bank — grid (B, M/TI, M/TJ, N/TK) — so B
 independent small datasets produce B Gram/moment pairs in ONE kernel
 launch.  Each slot's (p, TK) X tile regenerates its own Phi tiles in VMEM
-exactly as the single-model kernel does; at no point do B separate N x M
-feature matrices exist anywhere.  Per-slot row masks make ragged
+exactly as the single-model kernel does (any tile_fn); at no point do B
+separate N x M feature matrices exist anywhere.  Per-slot row masks make ragged
 per-tenant N a masking detail rather than a shape change.
 """
 from __future__ import annotations
@@ -50,16 +52,17 @@ __all__ = ["phi_gram_kernel", "bank_phi_gram_kernel"]
 def _phi_gram_body(
     xt_ref, consts_ref, si_ref, sj_ref, di_ref, dj_ref, sig2_ref, y_ref,
     mask_ref, o_ref, b_ref, *, p: int, n_max: int, nk: int, scale: bool,
+    tile_fn,
 ):
     i, j = pl.program_id(0), pl.program_id(1)
     k = pl.program_id(2)
 
     mask = mask_ref[0, :][None, :]                     # (1, TK)
     # (TK, TI) and (TK, TJ) tiles of Phi, built in VMEM and discarded
-    phi_i = phi_tile(xt_ref[...], consts_ref[...], si_ref[...],
-                     p=p, n_max=n_max) * mask.T
-    phi_j = phi_tile(xt_ref[...], consts_ref[...], sj_ref[...],
-                     p=p, n_max=n_max) * mask.T
+    phi_i = tile_fn(xt_ref[...], consts_ref[...], si_ref[...],
+                    p=p, n_max=n_max) * mask.T
+    phi_j = tile_fn(xt_ref[...], consts_ref[...], sj_ref[...],
+                    p=p, n_max=n_max) * mask.T
 
     @pl.when(k == 0)
     def _init():
@@ -96,8 +99,8 @@ def _phi_gram_body(
 
 def phi_gram_kernel(
     Xt: jax.Array,        # (p, N) transposed inputs, f32
-    consts: jax.Array,    # (p, 3) from ref.phi_consts
-    S: jax.Array,         # (p*n_max, M) one-hot selection, f32
+    consts: jax.Array,    # small global table (Hermite: (p, 3))
+    S: jax.Array,         # (K, M) per-column table (Hermite: one-hot), f32
     d: jax.Array,         # (1, M)  sqrt(lambda) scaling
     sig2: jax.Array,      # (1, 1)  noise variance
     y: jax.Array,         # (1, N)  targets, zero-padded past the true N
@@ -108,23 +111,26 @@ def phi_gram_kernel(
     block_k: int = 256,
     scale: bool = True,
     interpret: bool = False,
+    tile_fn=phi_tile,
 ):
     """Raw pallas_call; returns (B (M, M), b (1, M)).  Requires
-    N % block_k == 0 and M % block_m == 0 (ops.fused_fit_moments pads)."""
+    N % block_k == 0 and M % block_m == 0 (ops.fused_fit_moments pads).
+    Generic over the expansion's ``tile_fn`` (see kernels/hermite_phi)."""
     p, N = Xt.shape
     M = S.shape[1]
     nk = N // block_k
     grid = (M // block_m, M // block_m, nk)
     return pl.pallas_call(
         functools.partial(
-            _phi_gram_body, p=p, n_max=n_max, nk=nk, scale=scale
+            _phi_gram_body, p=p, n_max=n_max, nk=nk, scale=scale,
+            tile_fn=tile_fn,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((p, block_k), lambda i, j, k: (0, k)),
-            pl.BlockSpec((p, 3), lambda i, j, k: (0, 0)),
-            pl.BlockSpec((p * n_max, block_m), lambda i, j, k: (0, i)),
-            pl.BlockSpec((p * n_max, block_m), lambda i, j, k: (0, j)),
+            pl.BlockSpec(consts.shape, lambda i, j, k: (0, 0)),
+            pl.BlockSpec((S.shape[0], block_m), lambda i, j, k: (0, i)),
+            pl.BlockSpec((S.shape[0], block_m), lambda i, j, k: (0, j)),
             pl.BlockSpec((1, block_m), lambda i, j, k: (0, i)),
             pl.BlockSpec((1, block_m), lambda i, j, k: (0, j)),
             pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
@@ -145,16 +151,16 @@ def phi_gram_kernel(
 
 def _bank_phi_gram_body(
     xt_ref, consts_ref, si_ref, sj_ref, y_ref, mask_ref, o_ref, b_ref,
-    *, p: int, n_max: int,
+    *, p: int, n_max: int, tile_fn,
 ):
     j, k = pl.program_id(2), pl.program_id(3)
 
     mask = mask_ref[0, 0, :][None, :]                  # (1, TK)
     xt = xt_ref[0]                                     # (p, TK) this slot's rows
-    phi_i = phi_tile(xt, consts_ref[...], si_ref[...],
-                     p=p, n_max=n_max) * mask.T
-    phi_j = phi_tile(xt, consts_ref[...], sj_ref[...],
-                     p=p, n_max=n_max) * mask.T
+    phi_i = tile_fn(xt, consts_ref[...], si_ref[...],
+                    p=p, n_max=n_max) * mask.T
+    phi_j = tile_fn(xt, consts_ref[...], sj_ref[...],
+                    p=p, n_max=n_max) * mask.T
 
     @pl.when(k == 0)
     def _init():
@@ -183,8 +189,8 @@ def _bank_phi_gram_body(
 
 def bank_phi_gram_kernel(
     Xt: jax.Array,        # (B, p, N) per-slot transposed inputs, f32
-    consts: jax.Array,    # (p, 3) from ref.phi_consts (shared spec)
-    S: jax.Array,         # (p*n_max, M) one-hot selection (shared spec)
+    consts: jax.Array,    # small global table (shared spec)
+    S: jax.Array,         # (K, M) per-column table (shared spec)
     y: jax.Array,         # (B, 1, N) per-slot targets, zero-padded
     mask: jax.Array,      # (B, 1, N) per-slot row validity (ragged N)
     *,
@@ -192,6 +198,7 @@ def bank_phi_gram_kernel(
     block_m: int = 256,
     block_k: int = 256,
     interpret: bool = False,
+    tile_fn=phi_tile,
 ):
     """Raw pallas_call for a whole bank: returns the *unscaled* moments
     (G (B, M, M), b (B, 1, M)) — G_s = Phi_s^T Phi_s, b_s = Phi_s^T y_s —
@@ -203,13 +210,14 @@ def bank_phi_gram_kernel(
     M = S.shape[1]
     grid = (nbank, M // block_m, M // block_m, N // block_k)
     return pl.pallas_call(
-        functools.partial(_bank_phi_gram_body, p=p, n_max=n_max),
+        functools.partial(_bank_phi_gram_body, p=p, n_max=n_max,
+                          tile_fn=tile_fn),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, p, block_k), lambda s, i, j, k: (s, 0, k)),
-            pl.BlockSpec((p, 3), lambda s, i, j, k: (0, 0)),
-            pl.BlockSpec((p * n_max, block_m), lambda s, i, j, k: (0, i)),
-            pl.BlockSpec((p * n_max, block_m), lambda s, i, j, k: (0, j)),
+            pl.BlockSpec(consts.shape, lambda s, i, j, k: (0, 0)),
+            pl.BlockSpec((S.shape[0], block_m), lambda s, i, j, k: (0, i)),
+            pl.BlockSpec((S.shape[0], block_m), lambda s, i, j, k: (0, j)),
             pl.BlockSpec((1, 1, block_k), lambda s, i, j, k: (s, 0, k)),
             pl.BlockSpec((1, 1, block_k), lambda s, i, j, k: (s, 0, k)),
         ],

@@ -1,0 +1,329 @@
+"""Tests for the pluggable KernelExpansion layer (core/expansions.py).
+
+Pins the contracts of the expansion tentpole:
+  1. correctness: Phi @ diag(lam) @ Phi^T approximates the expansion's
+     exact kernel within a STATED bound (truncation bound for the Hermite
+     eigen-expansion, Monte-Carlo bound 4/sqrt(R) for the RFF families),
+     with features from EVERY registered expansion on BOTH backends
+     (pallas in interpret mode on CPU);
+  2. the Hermite recurrence has ONE home (mercer.hermite_psi_rows): the jnp
+     path (mercer.phi_nd), the Pallas tile path (ops.hermite_phi) and the
+     deliberately-independent oracle (ref.ref_phi) agree three ways;
+  3. capability x kernel-family matrix: GP.fit/predict/update/nlml and
+     GPBank are parity-pinned across backends for all three expansions;
+  4. RFF lengthscales are differentiable through nlml (the spectral draws
+     are data; the sqrt(2)*eps scaling is applied inside the feature map);
+  5. spec plumbing: omega rides the spec, is frozen into the factorization
+     (with_spec rejects a different draw), and malformed RFF specs are
+     refused at dispatch.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.bank import GPBank
+from repro.core import expansions, fagp, mercer
+from repro.core.gp import GP, GPSpec
+from repro.data import make_gp_dataset
+from repro.kernels import ops, ref
+
+EXPANSIONS = ["hermite", "rff_se", "rff_matern52"]
+R_MC = 512  # RFF draw count for the reconstruction bound tests
+
+
+def _spec(expansion, p=2, *, num_features=64, seed=0, **kw):
+    if expansion == "hermite":
+        return GPSpec.create(8, eps=[0.8] * p, rho=2.0, noise=0.05, **kw)
+    return GPSpec.create_rff(
+        [0.8] * p, noise=0.05, kernel=expansion[4:],
+        num_features=num_features, seed=seed, **kw,
+    )
+
+
+class TestRegistry:
+    def test_builtin_expansions_registered(self):
+        assert set(EXPANSIONS) <= set(expansions.available_expansions())
+
+    def test_unknown_expansion_raises(self):
+        with pytest.raises(ValueError, match="unknown kernel expansion"):
+            expansions.get_expansion("karhunen-loeve")
+
+    def test_spec_m_comes_from_expansion(self):
+        """M is the expansion's answer, not the index-set formula: an RFF
+        spec with R draws has M = 2R regardless of n/index_set."""
+        sp = _spec("rff_se", num_features=19)
+        assert sp.n_features() == 38
+        assert sp.indices().shape == (38, 1)
+        assert _spec("hermite").n_features() == 8**2
+
+
+class TestReconstruction:
+    """Phi diag(lam) Phi^T -> k within a stated truncation / MC bound."""
+
+    def _points(self, p, n_pts=40, seed=0):
+        rng = np.random.default_rng(seed)
+        return jnp.asarray(rng.uniform(-1, 1, (n_pts, p)).astype(np.float32))
+
+    def _bound(self, expansion, spec):
+        if expansion == "hermite":
+            # geometric truncation decay: n=20 per dim is well past the
+            # point where the 1-D tail is < 1e-4 at eps=0.8, rho=2
+            return 5e-4
+        return 4.0 / np.sqrt(np.shape(spec.omega)[0])  # Monte-Carlo O(R^-1/2)
+
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    @pytest.mark.parametrize("expansion", EXPANSIONS)
+    def test_kernel_reconstruction(self, expansion, backend):
+        p = 2
+        if expansion == "hermite":
+            spec = GPSpec.create(20, eps=[0.8] * p, rho=2.0, noise=0.05,
+                                 backend=backend)
+        else:
+            spec = _spec(expansion, p, num_features=R_MC, seed=7,
+                         backend=backend)
+        exp = expansions.get_expansion(expansion)
+        X = self._points(p)
+        idx = jnp.asarray(spec.indices(p))
+        be = fagp.get_backend(backend)
+        aux = be.prepare(np.asarray(idx), spec)
+        Phi = be.features(X, spec, idx, aux)
+        lam = jnp.exp(exp.log_eigenvalues(idx, spec))
+        K_approx = (Phi * lam[None, :]) @ Phi.T
+        K_exact = exp.exact_kernel(X, X, spec)
+        err = float(jnp.max(jnp.abs(K_approx - K_exact)))
+        assert err <= self._bound(expansion, spec), (
+            f"{expansion}/{backend}: reconstruction error {err} above bound"
+        )
+
+    @pytest.mark.parametrize("expansion", EXPANSIONS)
+    def test_unit_prior_variance(self, expansion):
+        """Every shipped expansion decomposes a unit-variance kernel:
+        sum_m lam_m phi_m(x)^2 == k(x, x) == 1 (RFF: exactly, by the cos^2
+        + sin^2 pairing; Hermite: up to truncation)."""
+        spec = _spec(expansion, num_features=R_MC)
+        exp = expansions.get_expansion(expansion)
+        X = self._points(2, 16)
+        idx = jnp.asarray(spec.indices(2))
+        Phi = exp.features(X, idx, spec)
+        lam = jnp.exp(exp.log_eigenvalues(idx, spec))
+        diag = jnp.sum(Phi * Phi * lam[None, :], axis=1)
+        np.testing.assert_allclose(np.asarray(diag), 1.0, atol=5e-3)
+
+    def test_matern_exact_kernel_shape(self):
+        """The new exact Matern-5/2 oracle: unit diagonal, monotone decay,
+        heavier tail than SE at matched eps."""
+        x = jnp.linspace(0.0, 3.0, 31)[:, None]
+        eps = jnp.asarray([0.8], jnp.float32)
+        km = np.asarray(mercer.k_matern52_ard(x[:1], x, eps))[0]
+        ks = np.asarray(mercer.k_se_ard(x[:1], x, eps))[0]
+        assert abs(km[0] - 1.0) < 1e-6
+        assert np.all(np.diff(km) < 1e-7)         # non-increasing in distance
+        assert np.all(km[-8:] >= ks[-8:])         # heavier FAR tail than SE
+
+
+class TestHermiteSingleHome:
+    """Satellite: the scaled Hermite recurrence lives in ONE place
+    (mercer.hermite_psi_rows) — jnp path, Pallas tile path, and the
+    independent oracle agree three ways."""
+
+    def test_three_way_parity(self):
+        N, p, n_max = 96, 2, 12
+        rng = np.random.default_rng(3)
+        X = jnp.asarray(rng.uniform(-2, 2, (N, p)).astype(np.float32))
+        eps = jnp.asarray([0.7, 1.1], jnp.float32)
+        rho = jnp.asarray([2.0, 2.5], jnp.float32)
+        params = mercer.SEKernelParams.create(eps, rho)
+        idx = mercer.full_grid(n_max, p)
+        consts = ref.phi_consts(eps, rho)
+        S = jnp.asarray(ref.one_hot_selection(idx, n_max))
+
+        jnp_path = mercer.phi_nd(X, jnp.asarray(idx), params, n_max)
+        tile_path = ops.hermite_phi(X, consts, S, n_max=n_max)
+        oracle = ref.ref_phi(X.T, consts, S, n_max)
+        np.testing.assert_allclose(np.asarray(jnp_path), np.asarray(oracle),
+                                   rtol=2e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(tile_path), np.asarray(oracle),
+                                   rtol=2e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(tile_path), np.asarray(jnp_path),
+                                   rtol=2e-4, atol=1e-5)
+
+    def test_psi_rows_matches_eigenfunctions(self):
+        """hermite_psi_rows IS eigenfunctions_1d minus the envelope."""
+        x = jnp.linspace(-2, 2, 17)
+        eps, rho, n = jnp.float32(0.8), jnp.float32(2.0), 9
+        beta, delta2 = mercer.mercer_constants(eps, rho)
+        rows = jnp.stack(
+            mercer.hermite_psi_rows(rho * beta * x, beta, n), axis=-1
+        )
+        full = mercer.eigenfunctions_1d(x, n, eps, rho)
+        np.testing.assert_allclose(
+            np.asarray(rows * jnp.exp(-delta2 * x * x)[:, None]),
+            np.asarray(full), rtol=1e-6, atol=1e-7,
+        )
+
+
+class TestCapabilityMatrix:
+    """The capability x kernel-family matrix: every session entry point is
+    parity-pinned across backends for all three expansions."""
+
+    @pytest.mark.parametrize("expansion", EXPANSIONS)
+    def test_gp_session_backend_parity(self, expansion):
+        N, p = 300, 2
+        X, y, Xs, ys = make_gp_dataset(N, p, seed=1)
+        spec = _spec(expansion, p, num_features=64, seed=4)
+        gp_j = GP.fit(X, y, spec)
+        gp_p = GP.fit(X, y, spec.replace(backend="pallas"))
+        mu_j, var_j = gp_j.mean_var(Xs)
+        mu_p, var_p = gp_p.mean_var(Xs)
+        np.testing.assert_allclose(np.asarray(mu_p), np.asarray(mu_j),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(var_p), np.asarray(var_j),
+                                   rtol=5e-3, atol=1e-6)
+        nl_j = float(gp_j.nlml(X, y))
+        nl_p = float(gp_p.nlml(X, y))
+        assert abs(nl_j - nl_p) < 1e-2 * max(1.0, abs(nl_j))
+
+    @pytest.mark.parametrize("expansion", EXPANSIONS)
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_update_equals_refit(self, expansion, backend):
+        N, p, k = 200, 2, 16
+        X, y, Xs, _ = make_gp_dataset(N, p, seed=2)
+        Xn, yn, *_ = make_gp_dataset(k, p, seed=11)
+        spec = _spec(expansion, p, num_features=48, seed=5, backend=backend)
+        up = GP.fit(X, y, spec).update(Xn, yn)
+        re = GP.fit(jnp.concatenate([X, Xn]), jnp.concatenate([y, yn]), spec)
+        # the RFF scaled system is stiffer than the Hermite one (flat 1/R
+        # weights put every column at full magnitude), so the f32 rank-1
+        # sweep carries a little more rounding than in the Hermite tests
+        np.testing.assert_allclose(np.asarray(up.state.u),
+                                   np.asarray(re.state.u),
+                                   rtol=1e-2, atol=2e-3)
+        mu_u, var_u = up.mean_var(Xs)
+        mu_r, var_r = re.mean_var(Xs)
+        np.testing.assert_allclose(np.asarray(mu_u), np.asarray(mu_r),
+                                   rtol=2e-3, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(var_u), np.asarray(var_r),
+                                   rtol=5e-3, atol=1e-6)
+
+    @pytest.mark.parametrize("expansion", EXPANSIONS)
+    def test_multi_output_matches_per_task(self, expansion):
+        N, p = 180, 2
+        X, y, Xs, _ = make_gp_dataset(N, p, seed=3)
+        spec = _spec(expansion, p, num_features=48, seed=6)
+        Y = jnp.stack([y, 2.0 * y], axis=1)
+        mu, var = GP.fit(X, Y, spec).mean_var(Xs)
+        for t, yt in enumerate([y, 2.0 * y]):
+            mu_t, var_t = GP.fit(X, yt, spec).mean_var(Xs)
+            np.testing.assert_allclose(np.asarray(mu[:, t]),
+                                       np.asarray(mu_t),
+                                       rtol=1e-3, atol=1e-4)
+            np.testing.assert_allclose(np.asarray(var), np.asarray(var_t),
+                                       rtol=1e-4, atol=1e-6)
+
+    @pytest.mark.parametrize("expansion", EXPANSIONS)
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_bank_matches_loop_of_singles(self, expansion, backend):
+        """A bank whose shared static spec names any expansion serves a
+        mixed-tenant batch identically to per-tenant single-model calls."""
+        B, N, p = 5, 16, 2
+        rng = np.random.default_rng(9)
+        spec = _spec(expansion, p, num_features=24, seed=8, backend=backend)
+        Xb = np.zeros((B, N, p), np.float32)
+        yb = np.zeros((B, N), np.float32)
+        for s in range(B):
+            Xt, yt, *_ = make_gp_dataset(N, p, seed=20 + s)
+            Xb[s], yb[s] = np.asarray(Xt), np.asarray(yt)
+        bank = GPBank.fit(jnp.asarray(Xb), jnp.asarray(yb), spec)
+        Xq = jnp.asarray(rng.uniform(-1, 1, (3 * B, p)).astype(np.float32))
+        tenants = [int(t) for t in rng.integers(0, B, 3 * B)]
+        mu, var = bank.mean_var(tenants, Xq)
+        mu, var = np.asarray(mu), np.asarray(var)
+        for t in sorted(set(tenants)):
+            rows = np.flatnonzero(np.asarray(tenants) == t)
+            m1, v1 = GP.from_state(bank.state(t)).mean_var(
+                Xq[jnp.asarray(rows)]
+            )
+            np.testing.assert_allclose(mu[rows], np.asarray(m1), atol=1e-5)
+            np.testing.assert_allclose(var[rows], np.asarray(v1), atol=1e-5)
+
+    @pytest.mark.parametrize("expansion", ["rff_se", "rff_matern52"])
+    def test_bank_rejects_foreign_draws(self, expansion):
+        """A tenant fitted under a different omega cannot join the bank —
+        the spectral draws are part of the shared feature map."""
+        p = 2
+        spec = _spec(expansion, p, num_features=16, seed=1)
+        other = _spec(expansion, p, num_features=16, seed=2)
+        X, y, *_ = make_gp_dataset(24, p, seed=0)
+        bank = GPBank.fit(jnp.asarray(np.stack([np.asarray(X)])),
+                          jnp.asarray(np.stack([np.asarray(y)])),
+                          spec, capacity=2)
+        foreign = GP.fit(X, y, other)
+        with pytest.raises(ValueError, match="omega"):
+            bank.insert("t2", foreign)
+
+
+class TestRFFDifferentiability:
+    def test_nlml_grad_flows_through_lengthscales(self):
+        """The acceptance criterion 'differentiable through RFF
+        lengthscales': d nlml / d eps is finite and nonzero (the draws are
+        constants; eps scales the frequencies inside the feature map)."""
+        X, y, *_ = make_gp_dataset(120, 2, seed=4)
+        spec0 = _spec("rff_se", num_features=64, seed=3)
+
+        def loss(log_eps):
+            spec = dataclasses.replace(spec0, eps=jnp.exp(log_eps))
+            return fagp.nlml(X, y, spec)
+
+        g = np.asarray(jax.grad(loss)(jnp.zeros(2)))
+        assert np.all(np.isfinite(g)) and np.all(np.abs(g) > 1e-6)
+
+    def test_optimize_improves_rff_nlml(self):
+        X, y, Xs, _ = make_gp_dataset(200, 2, seed=5)
+        spec0 = GPSpec.create_rff([2.5, 2.5], noise=0.5, num_features=64,
+                                  seed=0)
+        seen = []
+        gp = GP.optimize(X, y, spec0, steps=40, lr=8e-2,
+                         callback=lambda s, v, sp: seen.append(v))
+        assert len(seen) >= 2 and seen[-1] < seen[0]
+        assert np.all(np.isfinite(np.asarray(gp.mean_var(Xs)[0])))
+
+
+class TestSpecPlumbing:
+    def test_rff_spec_without_omega_refused(self):
+        bad = GPSpec(
+            eps=jnp.ones(2), rho=jnp.full((2,), 2.0),
+            noise=jnp.asarray(0.05), n=1, expansion="rff_se",
+        )
+        X, y, *_ = make_gp_dataset(16, 2, seed=0)
+        with pytest.raises(ValueError, match="spectral base draws"):
+            fagp.fit(X, y, bad)
+
+    def test_omega_frozen_into_factorization(self):
+        """with_spec rejects a spec with different spectral draws — they
+        are hyperparameters of the fitted system."""
+        X, y, *_ = make_gp_dataset(64, 2, seed=1)
+        spec = _spec("rff_se", num_features=16, seed=1)
+        gp = GP.fit(X, y, spec)
+        other = _spec("rff_se", num_features=16, seed=2)
+        with pytest.raises(ValueError, match="omega"):
+            gp.with_spec(other)
+
+    def test_same_seed_same_posterior(self):
+        """Spec creation is deterministic in (num_features, seed): two specs
+        built alike produce identical fits."""
+        X, y, Xs, _ = make_gp_dataset(80, 2, seed=2)
+        a = GP.fit(X, y, _spec("rff_matern52", num_features=32, seed=5))
+        b = GP.fit(X, y, _spec("rff_matern52", num_features=32, seed=5))
+        np.testing.assert_array_equal(np.asarray(a.state.u),
+                                      np.asarray(b.state.u))
+
+    def test_rff_backend_swap_is_valid(self):
+        X, y, Xs, _ = make_gp_dataset(100, 2, seed=3)
+        gp = GP.fit(X, y, _spec("rff_se", num_features=32, seed=0))
+        mu_j, _ = gp.mean_var(Xs)
+        mu_p, _ = gp.with_spec(backend="pallas").mean_var(Xs)
+        np.testing.assert_allclose(np.asarray(mu_p), np.asarray(mu_j),
+                                   rtol=1e-3, atol=1e-4)

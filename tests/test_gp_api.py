@@ -2,8 +2,8 @@
 
 Pins the contracts of the `GP` facade / `GPSpec` redesign:
   1. spec/state mismatches raise (never silently evaluate wrong features);
-  2. deprecated (params, cfg) shims keep working, emit exactly one
-     DeprecationWarning per call, and agree with the new API;
+  2. the removed (params, cfg) shims raise TypeError naming the
+     replacement (they were deprecated for two releases, then removed);
   3. multi-output (N, T) fits share one factorization and match T
      independent single-output fits on both backends;
   4. the public surface of `repro.core.gp` is snapshot so future PRs cannot
@@ -58,20 +58,18 @@ class TestPublicSurface:
 
 
 class TestSpecStateMismatch:
-    def test_deprecated_cfg_with_wrong_n_raises(self):
-        """The bug class the redesign removes: fit with n=6, predict with a
-        cfg saying n=8 must raise, not silently use wrong features."""
+    def test_cfg_passing_is_removed(self):
+        """The (params, cfg) shims were deprecated for two releases; passing
+        any cfg now raises TypeError instead of warning."""
         X, y, Xs, spec = _problem(n=6)
         st = fagp.fit(X, y, spec)
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            with pytest.raises(ValueError, match="spec/state mismatch"):
-                fagp.predict_mean_var(st, Xs, fagp.FAGPConfig(n=8))
-            with pytest.raises(ValueError, match="spec/state mismatch"):
-                fagp.predict(st, Xs, fagp.FAGPConfig(n=8))
-            with pytest.raises(ValueError, match="spec/state mismatch"):
-                fagp.fit_update(st, Xs, jnp.zeros(Xs.shape[0]),
-                                fagp.FAGPConfig(n=8))
+        with pytest.raises(TypeError, match="removed"):
+            fagp.predict_mean_var(st, Xs, fagp.FAGPConfig(n=8))
+        with pytest.raises(TypeError, match="removed"):
+            fagp.predict(st, Xs, fagp.FAGPConfig(n=8))
+        with pytest.raises(TypeError, match="removed"):
+            fagp.fit_update(st, Xs, jnp.zeros(Xs.shape[0]),
+                            fagp.FAGPConfig(n=8))
 
     def test_with_spec_rejects_structural_change(self):
         X, y, _, spec = _problem()
@@ -110,33 +108,29 @@ class TestSpecStateMismatch:
         with pytest.raises(ValueError, match="p=2"):
             fagp.nlml(X3, y, spec)
 
-    def test_specless_state_with_wrong_cfg_raises(self):
-        """A legacy spec-less state driven through the deprecated cfg path
-        still validates: a cfg whose n cannot regenerate the fitted index
-        set raises instead of evaluating garbage features."""
+    def test_specless_state_with_wrong_spec_raises(self):
+        """An internal spec-less state still validates on attach: a spec
+        whose n cannot regenerate the fitted index set raises instead of
+        evaluating garbage features."""
         X, y, Xs, spec = _problem(n=6)
-        st = fagp._fit(X, y, spec.params, jnp.asarray(spec.indices(2)),
-                       spec.n, spec.block_rows, False)
+        st = fagp._fit(X, y, spec, jnp.asarray(spec.indices(2)))
         assert st.spec is None
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            with pytest.raises(ValueError, match="spec/state mismatch"):
-                fagp.predict_mean_var(st, Xs, fagp.FAGPConfig(n=8))
+        with pytest.raises(ValueError, match="spec/state mismatch"):
+            st.with_spec(spec.replace(n=8))
 
     def test_spec_plus_cfg_is_a_type_error(self):
         """Passing BOTH a GPSpec and a cfg must not silently merge them."""
         X, y, _, spec = _problem()
-        with pytest.raises(TypeError, match="takes no cfg"):
+        with pytest.raises(TypeError, match="removed"):
             fagp.fit(X, y, spec, fagp.FAGPConfig(n=4))
-        with pytest.raises(TypeError, match="takes no idx"):
+        with pytest.raises(TypeError, match="removed"):
             fagp.nlml(X, y, spec, jnp.asarray(spec.indices(2)), 4)
 
     def test_specless_state_needs_explicit_attach(self):
-        """Internal/legacy states without a baked spec are rejected by the
+        """Internal states without a baked spec are rejected by the
         spec-first entry points and accepted after with_spec."""
         X, y, Xs, spec = _problem()
-        st = fagp._fit(X, y, spec.params, jnp.asarray(spec.indices(2)),
-                       spec.n, spec.block_rows, False)
+        st = fagp._fit(X, y, spec, jnp.asarray(spec.indices(2)))
         assert st.spec is None
         with pytest.raises(ValueError, match="no baked GPSpec"):
             fagp.predict_mean_var(st, Xs)
@@ -145,40 +139,78 @@ class TestSpecStateMismatch:
         np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_ref),
                                    rtol=1e-5, atol=1e-6)
 
+    def test_specless_state_rejects_spec_with_draws(self):
+        """Cross-family aliasing guard: an RFF spec whose arange(2R) index
+        table happens to equal a 1-D hermite full grid must NOT attach to a
+        spec-less hermite state — the spectral draws cannot be verified, so
+        the attach is refused outright."""
+        X, y, *_ = make_gp_dataset(40, 1, seed=0)
+        spec = GPSpec.create(8, eps=[0.8], noise=0.05)
+        st = fagp._fit(X, y, spec, jnp.asarray(spec.indices(1)))
+        assert st.spec is None
+        alias = GPSpec.create_rff([0.8], noise=0.05, num_features=4, seed=0)
+        assert alias.indices().shape == np.asarray(st.idx).shape
+        with pytest.raises(ValueError, match="omega"):
+            st.with_spec(alias)
 
-class TestDeprecatedShims:
+    def test_create_rejects_rff_args_on_hermite(self):
+        """A forgotten expansion= must not silently drop num_features."""
+        with pytest.raises(ValueError, match="num_features"):
+            GPSpec.create(8, eps=[0.8], num_features=64)
+        with pytest.raises(ValueError, match="no omega"):
+            GPSpec.create(8, eps=[0.8], omega=jnp.ones((4, 1)))
+
+    def test_expansion_is_structural(self):
+        """Two specs with the same-shaped index table but different
+        expansion families must not interchange on a fitted state (an
+        rff_se factorization is not an rff_matern52 factorization)."""
+        X, y, _, _ = _problem()
+        spec = GPSpec.create_rff([0.8, 0.8], noise=0.05, num_features=32,
+                                 seed=3)
+        gp = GP.fit(X, y, spec)
+        with pytest.raises(ValueError, match="spec/state mismatch"):
+            gp.with_spec(expansion="rff_matern52")
+
+
+class TestRemovedShims:
+    """The PR-2 (params, cfg) shims are two releases old and REMOVED: every
+    legacy call shape raises TypeError naming the replacement (the tests
+    that used to assert exactly-one-DeprecationWarning now assert the
+    raise)."""
+
     def _legacy(self):
         X, y, Xs, spec = _problem()
         return X, y, Xs, spec, spec.params, spec.cfg
 
     @pytest.mark.parametrize("call", ["fit", "predict", "predict_mean_var",
                                       "fit_update", "nlml"])
-    def test_shim_warns_exactly_once_and_matches(self, call):
+    def test_shim_raises_typeerror(self, call):
         X, y, Xs, spec, params, cfg = self._legacy()
         st_new = fagp.fit(X, y, spec)
-        with warnings.catch_warnings(record=True) as rec:
-            warnings.simplefilter("always")
+        with pytest.raises(TypeError, match="removed"):
             if call == "fit":
-                out = fagp.fit(X, y, params, cfg).u
-                ref = st_new.u
+                fagp.fit(X, y, params, cfg)
             elif call == "predict":
-                out = fagp.predict(st_new, Xs, cfg)[0]
-                ref = fagp.predict(st_new, Xs)[0]
+                fagp.predict(st_new, Xs, cfg)
             elif call == "predict_mean_var":
-                out = fagp.predict_mean_var(st_new, Xs, cfg)[0]
-                ref = fagp.predict_mean_var(st_new, Xs)[0]
+                fagp.predict_mean_var(st_new, Xs, cfg)
             elif call == "fit_update":
-                out = fagp.fit_update(st_new, Xs, jnp.zeros(Xs.shape[0]), cfg).u
-                ref = fagp.fit_update(st_new, Xs, jnp.zeros(Xs.shape[0])).u
+                fagp.fit_update(st_new, Xs, jnp.zeros(Xs.shape[0]), cfg)
             else:
                 idx = jnp.asarray(spec.indices(2))
-                out = fagp.nlml(X, y, params, idx, spec.n)
-                ref = fagp.nlml(X, y, spec)
-        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-        assert len(dep) == 1, f"{call}: expected exactly one warning, got {rec}"
-        assert "deprecated" in str(dep[0].message)
-        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                                   rtol=1e-5, atol=1e-6)
+                fagp.nlml(X, y, params, idx, spec.n)
+
+    def test_distributed_shims_raise(self):
+        from repro.core import distributed
+
+        X, y, Xs, spec, params, cfg = self._legacy()
+        with pytest.raises(TypeError, match="removed"):
+            distributed.fit_distributed(X, y, params, cfg, None)
+        st = fagp.fit(X, y, spec)
+        with pytest.raises(TypeError, match="removed"):
+            distributed.predict_distributed(
+                Xs, (st.u, st.chol, st.sqrtlam), params, cfg, None
+            )
 
     def test_new_api_is_warning_free(self):
         X, y, Xs, spec = _problem()
@@ -252,8 +284,10 @@ class TestBackendCapabilities:
     def test_pallas_refuses_deep_recurrence(self):
         """supports() refuses at dispatch with a clear error instead of
         crashing inside kernel preparation."""
+        from repro.core import expansions
+
         X, y, _, _ = _problem(p=1, n=4)
-        deep = GPSpec.create(fagp._PALLAS_MAX_N + 1, eps=[0.8],
+        deep = GPSpec.create(expansions._PALLAS_MAX_N + 1, eps=[0.8],
                              backend="pallas")
         with pytest.raises(ValueError, match="does not support"):
             fagp.fit(X, y, deep)

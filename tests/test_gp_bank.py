@@ -61,10 +61,8 @@ class TestBankMoments:
         out = {}
         for name in ("jnp", "pallas"):
             be = fagp.get_backend(name)
-            aux = be.prepare(idx_np, n)
-            out[name] = be.bank_moments(
-                Xb, yb, spec.params, idx, aux, n, 64, mask
-            )
+            aux = be.prepare(idx_np, spec)
+            out[name] = be.bank_moments(Xb, yb, spec, idx, aux, 64, mask)
         np.testing.assert_allclose(
             np.asarray(out["pallas"][0]), np.asarray(out["jnp"][0]),
             rtol=1e-3, atol=1e-3,
@@ -286,7 +284,7 @@ class TestMembershipChurn:
         with pytest.raises(ValueError, match="spec/state mismatch"):
             bank4.insert("t", other)
         hyper = fagp.fit(X, y, spec.replace(noise=jnp.float32(0.5)))
-        with pytest.raises(ValueError, match="different noise"):
+        with pytest.raises(ValueError, match="noise differs"):
             bank4.insert("t", hyper)
         with pytest.raises(ValueError, match="already in the bank"):
             bank.insert(0, (X, y))

@@ -81,23 +81,29 @@ class TestFusedFitKernel:
         np.testing.assert_allclose(np.asarray(B), np.asarray(Be), rtol=1e-3, atol=1e-3)
         np.testing.assert_allclose(np.asarray(b), np.asarray(be), rtol=1e-3, atol=1e-3)
 
-    def test_backend_moments_parity_with_mask(self):
+    @pytest.mark.parametrize("expansion",
+                             ["hermite", "rff_se", "rff_matern52"])
+    def test_backend_moments_parity_with_mask(self, expansion):
         """Registry contract used by core.distributed: jnp and pallas
-        moments agree on a masked shard."""
+        moments agree on a masked shard, for every registered expansion."""
         N, p, n = 220, 2, 6
         X, y, *_ = make_gp_dataset(N, p, seed=1)
-        params = mercer.SEKernelParams.create(
-            jnp.full((p,), 0.8), jnp.full((p,), 2.0), 0.05
-        )
-        idx = jnp.asarray(mercer.full_grid(n, p))
+        if expansion == "hermite":
+            spec = fagp.GPSpec.create(n, eps=[0.8] * p, rho=2.0, noise=0.05)
+        else:
+            spec = fagp.GPSpec.create_rff(
+                [0.8] * p, noise=0.05, kernel=expansion[4:], num_features=48,
+                seed=2,
+            )
+        idx = jnp.asarray(spec.indices(p))
         mask = jnp.asarray(
             (np.random.default_rng(5).uniform(size=N) > 0.3).astype(np.float32)
         )
         out = {}
         for name in ("jnp", "pallas"):
             be = fagp.get_backend(name)
-            aux = be.prepare(np.asarray(idx), n)
-            out[name] = be.moments(X, y, params, idx, aux, n, 64, mask)
+            aux = be.prepare(np.asarray(idx), spec)
+            out[name] = be.moments(X, y, spec, idx, aux, 64, mask)
         np.testing.assert_allclose(
             np.asarray(out["pallas"][0]), np.asarray(out["jnp"][0]),
             rtol=1e-3, atol=1e-3,
@@ -144,15 +150,29 @@ class TestNoMaterializedPhi:
         idx_np = mercer.full_grid(self.n, self.p)
         return X, y, params, idx_np
 
-    def test_streaming_fit_has_no_nxm(self):
+    def _spec(self, expansion, **kw):
+        if expansion == "hermite":
+            return fagp.GPSpec.create(
+                self.n, eps=[0.8] * self.p, rho=2.0, noise=0.05, **kw
+            )
+        # R chosen so M = 2R > any kernel padding block won't hide an N x M
+        return fagp.GPSpec.create_rff(
+            [0.8] * self.p, noise=0.05, kernel=expansion[4:],
+            num_features=32, seed=0, **kw,
+        )
+
+    @pytest.mark.parametrize("expansion",
+                             ["hermite", "rff_se", "rff_matern52"])
+    def test_streaming_fit_has_no_nxm(self, expansion):
         """The acceptance gate: no jaxpr intermediate of shape (>=N, >=M)
-        anywhere in fit(backend='pallas', store_train=False)."""
-        X, y, params, idx_np = self._problem()
-        M = idx_np.shape[0]
-        S = jnp.asarray(ref.one_hot_selection(idx_np, self.n))
-        fn = lambda X, y: fagp._fit_pallas(
-            X, y, params, jnp.asarray(idx_np), S, self.n, False
-        ).u
+        anywhere in fit(backend='pallas', store_train=False) — for EVERY
+        registered expansion (the RFF families fit streamed too)."""
+        X, y, _, _ = self._problem()
+        spec = self._spec(expansion, backend="pallas")
+        idx = jnp.asarray(spec.indices(self.p))
+        M = idx.shape[0]
+        aux = fagp.get_backend("pallas").prepare(np.asarray(idx), spec)
+        fn = lambda X, y: fagp._fit_pallas(X, y, spec, idx, aux).u
         assert not _has_nxm_intermediate(fn, (X, y), self.N, M)
 
     def test_checker_catches_materialized_path(self):
@@ -169,13 +189,15 @@ class TestNoMaterializedPhi:
 
         assert _has_nxm_intermediate(materialized, (X, y), self.N, M)
 
-    def test_jnp_scan_fit_has_no_nxm(self):
+    @pytest.mark.parametrize("expansion",
+                             ["hermite", "rff_se", "rff_matern52"])
+    def test_jnp_scan_fit_has_no_nxm(self, expansion):
         """The jnp scan path holds the same O(M^2) bound (block_rows < N)."""
-        X, y, params, idx_np = self._problem()
-        M = idx_np.shape[0]
-        fn = lambda X, y: fagp._fit(
-            X, y, params, jnp.asarray(idx_np), self.n, 128, False
-        ).u
+        X, y, _, _ = self._problem()
+        spec = self._spec(expansion, block_rows=128)
+        idx = jnp.asarray(spec.indices(self.p))
+        M = idx.shape[0]
+        fn = lambda X, y: fagp._fit(X, y, spec, idx).u
         assert not _has_nxm_intermediate(fn, (X, y), self.N, M)
 
 
