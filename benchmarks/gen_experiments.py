@@ -51,6 +51,37 @@ def expansion_rows() -> str:
     return "\n".join(out)
 
 
+def optimize_rows() -> str:
+    """Render BENCH_optimize.json (the fleet-hyperopt trajectory) as a
+    table, or a placeholder."""
+    path = ROOT / "BENCH_optimize.json"
+    if not path.exists():
+        return ("*(no `BENCH_optimize.json` yet — run "
+                "`PYTHONPATH=src python -m benchmarks.gp_hyperopt`)*")
+    try:
+        d = json.loads(path.read_text())
+    except json.JSONDecodeError:
+        return "*(BENCH_optimize.json unreadable)*"
+    rows = d.get("results", [])
+    if not rows:
+        return "*(BENCH_optimize.json present but empty)*"
+    out = ["| name | seconds | derived |", "|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['name']} | {r['seconds']:.3f} | {r['derived']} |")
+    par = d.get("parity_abs", {})
+    if par:
+        worst = max(
+            (v for rec in par.values() for v in rec.values()), default=0.0
+        )
+        out.append("")
+        out.append(
+            f"Worst bank-vs-loop parity across "
+            f"{sorted(par)}: **{worst:g}** (gate: ≤1e-5, asserted "
+            f"in-benchmark and by `tools/check_bench.py`)."
+        )
+    return "\n".join(out)
+
+
 def table(cells, mesh: str) -> str:
     rows = [
         "| arch | shape | kind | compute s | memory s | collective s | dominant "
@@ -311,8 +342,34 @@ pallas interpret), with identical results — the loop pays per-call
 dispatch B times, the bank once, and the
 bank serves variances from a per-slot B⁻¹ cache that is invalidated by
 construction (every mutation returns a new immutable bank).
-`BENCH_gp_bank.json` records the trajectory machine-readably; CI validates
-its shape every run.
+`BENCH_gp_bank.json` records the trajectory machine-readably; CI gates
+every `BENCH_*.json` (schema + parity + timing ratios) with
+`tools/check_bench.py` against the committed `BENCH_baselines.json`.
+
+## §Hyperparameter optimization at fleet scale
+
+The paper's declared future work ("a parallel implementation of the
+optimization problem for hyperparameter learning"), taken to the fleet:
+`GPBank.optimize` / `GP.optimize(..., restarts=R)` run ONE lane engine
+(`src/repro/optim/gp_hyperopt.py`) over a (B tenants × R restarts)
+parameter stack — one compiled AdamW step per iteration for the whole
+fleet, per-restart convergence masks (frozen lanes stop moving bit-exactly,
+zero recompiles), best-restart selection by final NLML, and a batched refit
+of the winners into the stacked bank state (per-slot hyperparameters — the
+bank becomes heterogeneous and serves each tenant under its own learned
+values).  The NLML objective streams its moments through the backend
+registry, so optimization never materializes the N×M feature matrix on
+either backend (jaxpr sweep in `tests/test_gp_hyperopt.py`).  Per-tenant
+lane math is bit-identical to a single-model run by construction, so the
+benchmark ASSERTS ≤1e-5 parity in selected hyperparameters and NLML
+against a Python loop of `GP.optimize` runs:
+
+    PYTHONPATH=src python -m benchmarks.gp_hyperopt   # writes BENCH_optimize.json
+
+Current trajectory (acceptance config B=64/R=4 on the jnp backend; pallas
+runs reduced on CPU interpret):
+
+{optimize_rows()}
 
 ## §Multi-output sessions
 

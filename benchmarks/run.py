@@ -19,6 +19,7 @@ def main() -> None:
         fagp_vs_exact,
         fig1_time_vs_n_p,
         gp_bank,
+        gp_hyperopt,
         index_set_ablation,
         kernel_micro,
         multi_output,
@@ -34,6 +35,7 @@ def main() -> None:
         ("streaming_fit", streaming_fit),            # fused 1-pass fit; fit_update
         ("multi_output", multi_output),              # shared-Cholesky T-task fit
         ("gp_bank", gp_bank),                        # fleet bank vs loop of singles
+        ("gp_hyperopt", gp_hyperopt),                # fleet hyperopt vs loop
         ("roofline_table", roofline_table),          # dry-run summary
     ]
     failed = 0

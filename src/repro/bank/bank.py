@@ -37,8 +37,18 @@ Entry points (all single compiled calls over the whole fleet):
   tenants at once (vmapped ``_update_arrays``), scattered back into the
   stack.
 
+* :meth:`GPBank.optimize` — fleet-scale batched hyperparameter learning:
+  the (B tenants x R restarts) lane engine (``repro.optim.gp_hyperopt``)
+  optimizes every tenant's NLML at once and refits the winners back into
+  the stack.  The result is a *heterogeneous* bank: per-slot
+  (eps, rho, noise) overlay (``GPBank.hypers``), per-slot eigenvalue rows
+  (already stacked), and a serving path that featurizes each query row
+  under its own slot's hyperparameters.  Homogeneous banks
+  (``hypers is None``) keep every fast path exactly as before.
+
 ``bank.router.BankRouter`` turns per-tenant query/observation queues into
-the padded fixed-shape batches these entry points want.
+the padded fixed-shape batches these entry points want (and tracks
+per-tenant staleness for periodic re-optimization).
 """
 from __future__ import annotations
 
@@ -53,6 +63,7 @@ from repro.core import fagp
 from repro.core.expansions import get_expansion
 from repro.core.fagp import FAGPState, GPSpec
 from repro.core.gp import GP
+from repro.core.mercer import SEKernelParams
 
 __all__ = ["GPBank"]
 
@@ -83,7 +94,7 @@ def _bank_solve(G, b, loglam, sig2):
 
 
 @jax.jit
-def _bank_update_scatter(chol_s, u_s, b_s, sqrtlam_s, noise, slots,
+def _bank_update_scatter(chol_s, u_s, b_s, sqrtlam_s, noise_g, slots,
                          Phi_g, y_g, mask_g):
     """Gather slot states, apply the rank-k update per group row, scatter
     back.  Padded rows (mask 0) zero their feature row, which makes the
@@ -91,12 +102,14 @@ def _bank_update_scatter(chol_s, u_s, b_s, sqrtlam_s, noise, slots,
     not a shape change.  A *fully*-masked group (the router's group-axis
     shape padding) writes its gathered values back verbatim: the identity
     sweep is exact only up to sqrt rounding, and an untouched tenant must
-    not drift by ulps per serving round."""
+    not drift by ulps per serving round.  ``noise_g`` (G,) is per group —
+    heterogeneous banks carry per-slot noise; homogeneous banks broadcast
+    the shared value."""
     Phi_g = Phi_g * mask_g[..., None]
     y_g = y_g * mask_g
     ch, bb, uu = jax.vmap(
-        lambda c, bm, d, P, y: fagp._update_arrays(c, bm, d, noise, P, y)
-    )(chol_s[slots], b_s[slots], sqrtlam_s[slots], Phi_g, y_g)
+        lambda c, bm, d, s, P, y: fagp._update_arrays(c, bm, d, s, P, y)
+    )(chol_s[slots], b_s[slots], sqrtlam_s[slots], noise_g, Phi_g, y_g)
     real = jnp.max(mask_g, axis=1) > 0                  # (G,) any live row?
     ch = jnp.where(real[:, None, None], ch, chol_s[slots])
     uu = jnp.where(real[:, None], uu, u_s[slots])
@@ -106,11 +119,69 @@ def _bank_update_scatter(chol_s, u_s, b_s, sqrtlam_s, noise, slots,
 
 
 @jax.jit
-def _write_slot(chol_s, u_s, b_s, slot, chol, u, b):
+def _write_slot(chol_s, u_s, b_s, lam_s, sqrtlam_s, slot, chol, u, b, lam,
+                sqrtlam):
     """Write one tenant's leaves at a *traced* slot index: insert/evict of
-    any slot hit the same executable."""
+    any slot hit the same executable.  Writes the eigenvalue rows too —
+    identical to the shared values in a homogeneous bank, per-tenant in a
+    heterogeneous one (after :meth:`GPBank.optimize`)."""
     return (chol_s.at[slot].set(chol), u_s.at[slot].set(u),
-            b_s.at[slot].set(b))
+            b_s.at[slot].set(b), lam_s.at[slot].set(lam),
+            sqrtlam_s.at[slot].set(sqrtlam))
+
+
+@jax.jit
+def _hetero_gathered_mean_var(stack, binv, slots, Xq, eps_s, rho_s):
+    """Mixed-tenant serving under PER-SLOT hyperparameters: query row q is
+    featurized under slot ``slots[q]``'s own (eps, rho) — one vmapped jnp
+    feature map per row (per-row feature constants rule out the shared
+    backend kernel launch; correctness-first fallback, one executable per
+    (Q, p) shape), then the same gathered posterior as the homogeneous
+    path."""
+    spec = stack.spec
+
+    def row(x, e, r):
+        sp = dataclasses.replace(spec, eps=e, rho=r)
+        return fagp._features(x[None], stack.idx, sp)[0]
+
+    Phis = jax.vmap(row)(Xq, eps_s[slots], rho_s[slots])
+    return fagp._bank_gathered_posterior(
+        binv, stack.u, stack.sqrtlam, slots, Phis
+    )
+
+
+@jax.jit
+def _hetero_group_features(stack, Xg, eps_g, rho_g):
+    """(G, k, M) update-group features, each group under its own slot's
+    hyperparameters."""
+    spec = stack.spec
+
+    def grp(X, e, r):
+        sp = dataclasses.replace(spec, eps=e, rho=r)
+        return fagp._features(X, stack.idx, sp)
+
+    return jax.vmap(grp)(Xg, eps_g, rho_g)
+
+
+@jax.jit
+def _bank_hetero_refit(Xb, yb, maskb, eps_b, rho_b, noise_b, spec, idx):
+    """Batched refit of B tenants, each under ITS OWN hyperparameters (the
+    epilogue of :meth:`GPBank.optimize`): per-tenant streamed moments
+    through the backend registry hook (vmapped — the pallas fused kernel
+    batches via its grid, the jnp scan via vmap; no N x M Phi either way),
+    then the batched scaled solve.  Returns stacked
+    (lam, sqrtlam, chol, u, b)."""
+
+    def one(X, y, m, e, r, s):
+        sp = dataclasses.replace(spec, eps=e, rho=r, noise=s)
+        loglam = get_expansion(sp.expansion).log_eigenvalues(idx, sp)
+        G, b = fagp._moments_via_registry(sp, X, y, m)
+        Bm, sqrtlam = fagp._assemble_scaled_system(G, loglam, s * s)
+        chol = jnp.linalg.cholesky(Bm)
+        u = fagp._solve_mean_weights(chol, sqrtlam, b, s * s)
+        return jnp.exp(loglam), sqrtlam, chol, u, b
+
+    return jax.vmap(one)(Xb, yb, maskb, eps_b, rho_b, noise_b)
 
 
 def _fallback_bank_moments(backend):
@@ -156,19 +227,7 @@ def _prior_leaves(loglam: jax.Array, count: int) -> dict:
     }
 
 
-def _check_bankable(state: FAGPState, spec: GPSpec, who: str) -> None:
-    """A state can join a bank iff it was factorized under the bank's shared
-    spec (structure AND hyperparameters, including any RFF spectral draws)
-    and is single-output with the raw moment vector present."""
-    fagp._check_spec_regenerates_idx(state, spec)
-    try:
-        fagp._check_hypers_match(state, spec, who)
-    except ValueError as e:
-        raise ValueError(
-            f"{e}; a bank shares one feature map and one eigenvalue "
-            f"scaling across all tenants — refit the tenant under the "
-            f"bank spec"
-        ) from None
+def _check_single_task_with_b(state: FAGPState, who: str) -> None:
     if state.u.ndim != 1:
         raise ValueError(
             f"{who}: multi-output states (T={state.n_tasks}) cannot join a "
@@ -179,6 +238,53 @@ def _check_bankable(state: FAGPState, spec: GPSpec, who: str) -> None:
             f"{who}: state lacks the raw moment vector b (produced by a "
             f"pre-PR-1 fit path); refit before inserting"
         )
+
+
+def _check_bankable(state: FAGPState, spec: GPSpec, who: str) -> None:
+    """A state can join a HOMOGENEOUS bank iff it was factorized under the
+    bank's shared spec (structure AND hyperparameters, including any RFF
+    spectral draws) and is single-output with the raw moment vector
+    present."""
+    fagp._check_spec_regenerates_idx(state, spec)
+    try:
+        fagp._check_hypers_match(state, spec, who)
+    except ValueError as e:
+        raise ValueError(
+            f"{e}; a bank shares one feature map and one eigenvalue "
+            f"scaling across all tenants — refit the tenant under the "
+            f"bank spec"
+        ) from None
+    _check_single_task_with_b(state, who)
+
+
+def _check_bankable_hetero(state: FAGPState, spec: GPSpec, who: str) -> None:
+    """A heterogeneous bank (per-slot hyperparameters, produced by
+    :meth:`GPBank.optimize`) admits any tenant sharing the bank's expansion
+    STRUCTURE — eps/rho/noise may differ per slot, but the expansion
+    family, truncation and any RFF spectral draws stay bank-wide (they
+    define the shared index table and, for RFF, the shared base
+    frequencies)."""
+    if state.spec is None:
+        raise ValueError(
+            f"{who}: state has no baked GPSpec; attach one with "
+            f"state.with_spec(spec) before inserting"
+        )
+    for f in fagp._STRUCTURAL_FIELDS:
+        if getattr(state.spec, f) != getattr(spec, f):
+            raise ValueError(
+                f"{who}: spec/state mismatch: state was fitted with "
+                f"{state.spec.describe()} but the bank holds "
+                f"{spec.describe()}; even a heterogeneous bank shares one "
+                f"expansion structure — refit the tenant"
+            )
+    if not fagp._leaf_equal(state.spec.omega, spec.omega):
+        raise ValueError(
+            f"{who}: omega differs from the bank's spectral draws; the "
+            f"RFF base frequencies are bank structure even in a "
+            f"heterogeneous bank — refit the tenant under the bank's draws"
+        )
+    fagp._check_spec_regenerates_idx(state, state.spec)
+    _check_single_task_with_b(state, who)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,11 +300,18 @@ class GPBank:
              shared idx/params/spec.
     active:  (capacity,) host-side bool mask of occupied slots.
     slots:   tenant id -> slot index (host-side; insertion order preserved).
+    hypers:  None for a homogeneous bank (every tenant shares the spec's
+             eps/rho/noise — all fast paths unchanged), or per-slot stacked
+             hyperparameters (eps (C, p), rho (C, p), noise (C,)) once
+             :meth:`optimize` has learned per-tenant values.  Heterogeneous
+             serving featurizes each query row under its own slot's
+             hyperparameters (``_hetero_gathered_mean_var``).
     """
 
     stack: FAGPState
     active: np.ndarray
     slots: Mapping[Hashable, int]
+    hypers: Optional[SEKernelParams] = None
 
     # -- constructors -------------------------------------------------------
 
@@ -372,12 +485,34 @@ class GPBank:
 
     def state(self, tenant: Hashable) -> FAGPState:
         """The tenant's session, unstacked — a normal single-model
-        FAGPState usable with every ``fagp``/``GP`` entry point."""
+        FAGPState usable with every ``fagp``/``GP`` entry point.  In a
+        heterogeneous bank the returned state's spec carries the tenant's
+        OWN learned hyperparameters."""
         s = self.slot_of(tenant)
-        return dataclasses.replace(
+        st = dataclasses.replace(
             self.stack,
             lam=self.stack.lam[s], sqrtlam=self.stack.sqrtlam[s],
             chol=self.stack.chol[s], u=self.stack.u[s], b=self.stack.b[s],
+        )
+        if self.hypers is not None:
+            sp = self.spec.replace(
+                eps=self.hypers.eps[s], rho=self.hypers.rho[s],
+                noise=self.hypers.noise[s],
+            )
+            st = dataclasses.replace(st, spec=sp, params=sp.params)
+        return st
+
+    def _stacked_hypers(self) -> SEKernelParams:
+        """Per-slot hyperparameters, materialized: the overlay when
+        heterogeneous, the shared spec values broadcast when not."""
+        if self.hypers is not None:
+            return self.hypers
+        sp = self.spec
+        C = self.capacity
+        return SEKernelParams(
+            eps=jnp.broadcast_to(sp.eps, (C,) + sp.eps.shape),
+            rho=jnp.broadcast_to(sp.rho, (C,) + sp.rho.shape),
+            noise=jnp.broadcast_to(jnp.asarray(sp.noise, jnp.float32), (C,)),
         )
 
     def states(self) -> dict:
@@ -439,6 +574,11 @@ class GPBank:
                 f"for {Xq.shape[0]} rows"
             )
         backend = fagp._check_backend_support(self.spec)
+        if self.hypers is not None:
+            return _hetero_gathered_mean_var(
+                self.stack, self._binv, slots, Xq,
+                self.hypers.eps, self.hypers.rho,
+            )
         aux = fagp._backend_aux(backend, self.stack.idx, self.spec)
         fn = backend.bank_mean_var or _fallback_bank_mean_var(backend)
         return fn(self.stack, self._binv, slots, Xq, aux)
@@ -494,13 +634,23 @@ class GPBank:
                     f"every group"
                 )
         backend = fagp._check_backend_support(self.spec)
-        aux = fagp._backend_aux(backend, self.stack.idx, self.spec)
-        Phi_g = backend.features(
-            Xk.reshape(G * k, p), self.spec, self.stack.idx, aux,
-        ).reshape(G, k, -1)
+        if self.hypers is not None:
+            Phi_g = _hetero_group_features(
+                self.stack, Xk, self.hypers.eps[slots],
+                self.hypers.rho[slots],
+            )
+            noise_g = self.hypers.noise[slots]
+        else:
+            aux = fagp._backend_aux(backend, self.stack.idx, self.spec)
+            Phi_g = backend.features(
+                Xk.reshape(G * k, p), self.spec, self.stack.idx, aux,
+            ).reshape(G, k, -1)
+            noise_g = jnp.broadcast_to(
+                jnp.asarray(self.stack.params.noise, jnp.float32), (G,)
+            )
         chol, u, b = _bank_update_scatter(
             self.stack.chol, self.stack.u, self.stack.b, self.stack.sqrtlam,
-            self.stack.params.noise, slots, Phi_g, yk, mask,
+            noise_g, slots, Phi_g, yk, mask,
         )
         stack = dataclasses.replace(self.stack, chol=chol, u=u, b=b)
         new = dataclasses.replace(self, stack=stack)
@@ -526,37 +676,174 @@ class GPBank:
             st = fagp.fit(jnp.asarray(X), jnp.asarray(y), self.spec)
         else:
             st = source.state if isinstance(source, GP) else source
-        _check_bankable(st, self.spec, f"insert({tenant!r})")
+        if self.hypers is None:
+            _check_bankable(st, self.spec, f"insert({tenant!r})")
+        else:
+            _check_bankable_hetero(st, self.spec, f"insert({tenant!r})")
         slot = int(free[0])
-        chol, u, b = _write_slot(
-            self.stack.chol, self.stack.u, self.stack.b,
-            jnp.int32(slot), st.chol, st.u, st.b,
+        chol, u, b, lam, sqrtlam = _write_slot(
+            self.stack.chol, self.stack.u, self.stack.b, self.stack.lam,
+            self.stack.sqrtlam, jnp.int32(slot), st.chol, st.u, st.b,
+            st.lam, st.sqrtlam,
         )
-        stack = dataclasses.replace(self.stack, chol=chol, u=u, b=b)
+        stack = dataclasses.replace(self.stack, chol=chol, u=u, b=b,
+                                    lam=lam, sqrtlam=sqrtlam)
+        hypers = self.hypers
+        if hypers is not None:
+            hp = st.spec  # guaranteed by _check_bankable_hetero
+            hypers = SEKernelParams(
+                eps=hypers.eps.at[slot].set(hp.eps),
+                rho=hypers.rho.at[slot].set(hp.rho),
+                noise=hypers.noise.at[slot].set(hp.noise),
+            )
         active = self.active.copy()
         active[slot] = True
         slots = dict(self.slots)
         slots[tenant] = slot
         new = dataclasses.replace(self, stack=stack, active=active,
-                                  slots=slots)
+                                  slots=slots, hypers=hypers)
         self._carry_binv_into(new, jnp.int32(slot))
         return new
 
     def evict(self, tenant: Hashable) -> "GPBank":
-        """Remove a tenant; its slot is reset to the prior state and becomes
-        reusable by the next :meth:`insert` — same executable either way."""
+        """Remove a tenant; its slot is reset to the prior state (under the
+        bank spec's own hyperparameters) and becomes reusable by the next
+        :meth:`insert` — same executable either way."""
         slot = self.slot_of(tenant)
-        M = self.n_features
-        chol, u, b = _write_slot(
-            self.stack.chol, self.stack.u, self.stack.b,
-            jnp.int32(slot), jnp.eye(M, dtype=jnp.float32),
-            jnp.zeros((M,), jnp.float32), jnp.zeros((M,), jnp.float32),
+        loglam = get_expansion(self.spec.expansion).log_eigenvalues(
+            self.stack.idx, self.spec
         )
-        stack = dataclasses.replace(self.stack, chol=chol, u=u, b=b)
+        prior = _prior_leaves(loglam, 1)
+        chol, u, b, lam, sqrtlam = _write_slot(
+            self.stack.chol, self.stack.u, self.stack.b, self.stack.lam,
+            self.stack.sqrtlam, jnp.int32(slot), prior["chol"][0],
+            prior["u"][0], prior["b"][0], prior["lam"][0],
+            prior["sqrtlam"][0],
+        )
+        stack = dataclasses.replace(self.stack, chol=chol, u=u, b=b,
+                                    lam=lam, sqrtlam=sqrtlam)
+        hypers = self.hypers
+        if hypers is not None:
+            sp = self.spec
+            hypers = SEKernelParams(
+                eps=hypers.eps.at[slot].set(sp.eps),
+                rho=hypers.rho.at[slot].set(sp.rho),
+                noise=hypers.noise.at[slot].set(
+                    jnp.asarray(sp.noise, jnp.float32)
+                ),
+            )
         active = self.active.copy()
         active[slot] = False
         slots = {t: s for t, s in self.slots.items() if t != tenant}
         new = dataclasses.replace(self, stack=stack, active=active,
-                                  slots=slots)
+                                  slots=slots, hypers=hypers)
         self._carry_binv_into(new, jnp.int32(slot))
+        return new
+
+    # -- fleet-scale hyperparameter optimization ----------------------------
+
+    def optimize(
+        self,
+        Xb: jax.Array,
+        yb: jax.Array,
+        *,
+        tenant_ids: Optional[Sequence[Hashable]] = None,
+        mask: Optional[jax.Array] = None,
+        restarts: int = 4,
+        steps: int = 100,
+        lr: float = 5e-2,
+        tol: Optional[float] = None,
+        jitter: float = 0.3,
+        seed: int = 0,
+        callback=None,
+    ) -> "GPBank":
+        """Learn per-tenant hyperparameters for the whole fleet in one
+        batched run, then refit the winners back into the stacked state.
+
+        Runs the (B tenants x R restarts) lane engine
+        (``repro.optim.gp_hyperopt.optimize_fleet``): every restart of every
+        tenant is stepped by ONE compiled AdamW step per iteration — a
+        Python loop of per-tenant ``GP.optimize`` runs pays per-step
+        dispatch B times and lands on EXACTLY the same hyperparameters (the
+        per-tenant lane math is bit-identical by construction; the <= 1e-5
+        parity gate is asserted in benchmarks/gp_hyperopt.py).
+
+        Xb (B, N, p) / yb (B, N) carry each tenant's training data in the
+        row order of ``tenant_ids`` (default: every active tenant in
+        insertion order); ``mask`` (B, N) expresses ragged per-tenant N.
+        ``restarts`` log-space jittered inits per tenant, best selected by
+        final NLML; ``tol`` freezes converged lanes (no recompiles).
+
+        Returns a new HETEROGENEOUS bank: the optimized slots hold
+        factorizations under their own learned (eps, rho, noise) — per-slot
+        eigenvalue rows were already stacked — and serving gathers each
+        query row's features under its slot's hyperparameters.  A bank that
+        is already heterogeneous re-optimizes starting from each tenant's
+        current values.
+        """
+        from repro.optim.gp_hyperopt import optimize_fleet
+
+        Xb = jnp.asarray(Xb)
+        yb = jnp.asarray(yb)
+        if Xb.ndim != 3 or yb.ndim != 2 or yb.shape != Xb.shape[:2]:
+            raise ValueError(
+                f"GPBank.optimize wants Xb (B, N, p) and yb (B, N); got "
+                f"{Xb.shape} and {yb.shape}"
+            )
+        B, N, p = Xb.shape
+        fagp._check_p(self.spec, p)
+        if tenant_ids is None:
+            tenant_ids = self.tenants
+        ids = list(tenant_ids)
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate tenant in optimize batch ({ids!r})")
+        if len(ids) != B:
+            raise ValueError(
+                f"one tenant id per data row: got {len(ids)} ids for {B} "
+                f"rows"
+            )
+        slots = self._slots_for(ids)
+        if mask is not None:
+            mask = jnp.asarray(mask).astype(Xb.dtype)
+            if mask.shape != (B, N):
+                raise ValueError(
+                    f"mask must be (B, N) = {(B, N)}, got {mask.shape}"
+                )
+        init = None
+        if self.hypers is not None:
+            init = {
+                "eps": self.hypers.eps[slots],
+                "rho": self.hypers.rho[slots],
+                "noise": self.hypers.noise[slots],
+            }
+        res = optimize_fleet(
+            Xb, yb, self.spec, mask=mask, restarts=restarts, steps=steps,
+            lr=lr, tol=tol, jitter=jitter, seed=seed, init=init,
+            callback=callback,
+        )
+        maskb = (jnp.ones((B, N), Xb.dtype) if mask is None else mask)
+        spec_r = self.spec.replace(
+            block_rows=min(self.spec.block_rows, max(1, N))
+        )
+        lam, sqrtlam, chol, u, b = _bank_hetero_refit(
+            Xb, yb, maskb, res.eps, res.rho, res.noise, spec_r,
+            self.stack.idx,
+        )
+        st = self.stack
+        stack = dataclasses.replace(
+            st,
+            lam=st.lam.at[slots].set(lam),
+            sqrtlam=st.sqrtlam.at[slots].set(sqrtlam),
+            chol=st.chol.at[slots].set(chol),
+            u=st.u.at[slots].set(u),
+            b=st.b.at[slots].set(b),
+        )
+        hyp = self._stacked_hypers()
+        hyp = SEKernelParams(
+            eps=hyp.eps.at[slots].set(res.eps),
+            rho=hyp.rho.at[slots].set(res.rho),
+            noise=hyp.noise.at[slots].set(res.noise),
+        )
+        new = dataclasses.replace(self, stack=stack, hypers=hyp)
+        self._carry_binv_into(new, slots)
         return new

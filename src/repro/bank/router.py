@@ -27,6 +27,12 @@ Two paths:
 The router owns the bank reference: :meth:`ingest` replaces it with the
 updated (immutable) bank, and subsequent :meth:`flush` calls serve the new
 posterior.
+
+It also tracks per-tenant *staleness* (rows absorbed since the tenant's
+hyperparameters were last optimized): :meth:`stale_tenants` names the
+tenants due for re-optimization and :meth:`reoptimize` runs one batched
+``GPBank.optimize`` over them and swaps the heterogeneous result in — the
+periodic re-optimization hook ``serve_fleet`` drives.
 """
 from __future__ import annotations
 
@@ -53,6 +59,9 @@ class BankRouter:
         self._pending: list[tuple[int, Hashable, np.ndarray]] = []
         self._observations: dict[Hashable, list[tuple[np.ndarray, float]]] = {}
         self._next_ticket = 0
+        # rows absorbed per tenant since its hyperparameters were last
+        # (re)optimized — the staleness signal for periodic re-optimization
+        self._since_reopt: dict[Hashable, int] = {}
 
     # -- query path ---------------------------------------------------------
 
@@ -193,4 +202,45 @@ class BankRouter:
                     )
                 raise
             absorbed += sum(len(rows) for rows in taken.values())
+            for t, rows in taken.items():
+                self._since_reopt[t] = self._since_reopt.get(t, 0) + len(rows)
         return absorbed
+
+    # -- staleness + periodic re-optimization -------------------------------
+
+    def stale_tenants(self, min_rows: int) -> list:
+        """Tenants that absorbed at least ``min_rows`` observations since
+        their hyperparameters were last optimized (insertion order) — the
+        candidates for the next :meth:`reoptimize` round.
+
+        Counters for tenants no longer in the bank are dropped here, so an
+        id evicted and later re-inserted starts fresh instead of
+        inheriting its previous life's count.  (An evict + same-id
+        re-insert that happens entirely between two router calls is
+        indistinguishable from the tenant never leaving — swap banks
+        through a fresh router if that distinction matters.)"""
+        self._since_reopt = {
+            t: c for t, c in self._since_reopt.items() if t in self.bank.slots
+        }
+        return [
+            t for t in self.bank.slots
+            if self._since_reopt.get(t, 0) >= min_rows
+        ]
+
+    def reoptimize(self, tenant_ids, Xb, yb, mask=None, **kw) -> None:
+        """Re-learn hyperparameters for ``tenant_ids`` (typically
+        :meth:`stale_tenants`) from their accumulated data and swap the
+        optimized bank in behind the router: one batched
+        ``GPBank.optimize`` run (``**kw`` forwards restarts/steps/lr/tol/
+        seed), staleness counters reset on success.  The serving loop
+        (``repro.launch.serve_gp.serve_fleet``) calls this every few
+        rounds so drifting tenants do not serve stale lengthscales
+        forever."""
+        ids = list(tenant_ids)
+        if not ids:
+            return
+        self.bank = self.bank.optimize(
+            Xb, yb, tenant_ids=ids, mask=mask, **kw
+        )
+        for t in ids:
+            self._since_reopt[t] = 0

@@ -1189,41 +1189,116 @@ def predict_mean_var(state: FAGPState, Xs: jax.Array, cfg: Any = None):
 
 # ---------------------------------------------------------------------------
 # Negative log marginal likelihood (paper's declared future work)
+#
+# The NLML path runs through the backend registry's ``moments`` hooks — the
+# same per-shard unit of work core.distributed sums — so evaluating (and
+# optimizing) the marginal likelihood never materializes the N x M feature
+# matrix on EITHER backend: the pallas hook streams tiles through the fused
+# kernel, the jnp hook scans row blocks.  The hooks themselves are not
+# differentiable (the pallas kernel has no AD rule), so the moments are
+# wrapped in a custom VJP whose backward pass is the streamed jnp block
+# scan differentiated through the expansion's feature map — also O(M^2)
+# live memory (pinned by the jaxpr sweep in tests/test_gp_hyperopt.py).
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("block_rows",))
-def _nlml(X, y, spec: GPSpec, idx, block_rows: int):
+def _moments_via_registry(spec: GPSpec, X, y, mask):
+    """Raw (G, b) = (Phi^T Phi, Phi^T y) over the masked rows, dispatched
+    through ``spec.backend``'s moments hook (value path; see
+    ``_moments_diff`` for the differentiable wrapper)."""
+    backend = get_backend(spec.backend)
+    idx_np = spec.indices(X.shape[1])
+    aux = backend.prepare(idx_np, spec)
+    # never let the scan pad a small problem's rows up to the serving block
+    block_rows = min(spec.block_rows, max(1, X.shape[0]))
+    return backend.moments(X, y, spec, jnp.asarray(idx_np), aux,
+                           block_rows, mask)
+
+
+@jax.custom_vjp
+def _moments_diff(spec: GPSpec, X, y, mask):
+    return _moments_via_registry(spec, X, y, mask)
+
+
+def _moments_diff_fwd(spec, X, y, mask):
+    return _moments_via_registry(spec, X, y, mask), (spec, X, y, mask)
+
+
+def _moments_diff_bwd(res, ct):
+    """Streamed VJP into EVERY primal input — the spec's data leaves
+    (eps/rho/noise/omega) AND the data (X, y, mask): the cotangent
+    contraction <Gbar, Phi^T Phi> + <bbar, Phi^T y> is re-derived
+    block-by-block through the jnp feature map, so the backward pass holds
+    one (block_rows, M) tile at a time — never an N x M buffer.  Data
+    cotangents matter to callers differentiating the NLML through the
+    observations (input selection, sensitivity analysis) — dropping them
+    would silently corrupt those gradients."""
+    spec, X, y, mask = res
+    Gbar, bbar = ct
+    idx = jnp.asarray(spec.indices(X.shape[1]))
+    block_rows = min(spec.block_rows, max(1, X.shape[0]))
+
+    def contracted(spec_d, X_d, y_d, mask_d):
+        G, b = _block_scan_moments(
+            X_d, y_d, lambda Xi: _features(Xi, idx, spec_d),
+            idx.shape[0], block_rows, row_mask=mask_d,
+        )
+        return jnp.sum(Gbar * G) + jnp.sum(bbar * b)
+
+    return jax.grad(contracted, argnums=(0, 1, 2, 3))(spec, X, y, mask)
+
+
+_moments_diff.defvjp(_moments_diff_fwd, _moments_diff_bwd)
+
+
+def _nlml_core(X, y, spec: GPSpec, mask):
+    """Traceable masked NLML: moments via the backend registry
+    (differentiable through ``_moments_diff``), epilogue through the shared
+    scaled system.  ``mask`` (N,) of 0/1 row weights makes padding rows
+    mathematically invisible (N in the logdet/normalization terms is the
+    mask sum) — the unit the (B tenants x R restarts) hyperparameter
+    optimizer vmaps over (repro.optim.gp_hyperopt)."""
     exp = get_expansion(spec.expansion)
-    N = X.shape[0]
+    idx = jnp.asarray(spec.indices(X.shape[1]))
     T = 1 if y.ndim == 1 else y.shape[1]
     sig2 = spec.noise**2
     loglam = exp.log_eigenvalues(idx, spec)
-    G, b = _accumulate_moments(X, y, spec, idx, block_rows)
+    G, b = _moments_diff(spec, X, y, mask)
+    n_eff = jnp.sum(mask)
     B, sqrtlam = _assemble_scaled_system(G, loglam, sig2)
     chol = jnp.linalg.cholesky(B)
     bs = _tscale(sqrtlam, b) / sig2              # D b / sig2, per task column
     w = jax.scipy.linalg.cho_solve((chol, True), bs)
     # y^T Kinv y = y^T y/sig2 - b^T Lbar^{-1} b / sig2^2
     #            = y^T y/sig2 - (Db/sig2)^T B^{-1} (Db/sig2), summed over tasks
-    quad = jnp.sum(y * y) / sig2 - jnp.sum(bs * w)
+    quad = jnp.sum(_row_weight(mask, y) * y) / sig2 - jnp.sum(bs * w)
     # logdet(K) = logdet(B) + N log sig2   (determinant lemma, scaled form);
     # the T tasks share K, so the logdet terms appear once per task
-    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol))) + N * jnp.log(sig2)
-    return 0.5 * (quad + T * (logdet + N * jnp.log(2.0 * jnp.pi)))
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol))) + n_eff * jnp.log(sig2)
+    return 0.5 * (quad + T * (logdet + n_eff * jnp.log(2.0 * jnp.pi)))
+
+
+@jax.jit
+def _nlml_jit(X, y, spec: GPSpec, mask):
+    return _nlml_core(X, y, spec, mask)
 
 
 def nlml(X, y, spec: GPSpec, idx=None, n_max: Optional[int] = None,
-         block_rows: Optional[int] = None):
+         block_rows: Optional[int] = None, *, mask=None):
     """NLML of the decomposed-kernel GP, O(N M^2 + M^3).
 
     Matrix determinant lemma + Woodbury on (Phi Lambda Phi^T + sigma^2 I),
-    assembled through the same scaled system as ``fit``.  Differentiable in
-    the spec's (eps, rho, noise) leaves for gradient-based hyperparameter
-    learning — for the RFF expansions the lengthscale gradient flows through
-    the eps-scaled spectral frequencies (``GP.optimize``,
-    examples/hyperparam_learning.py).  For multi-output y (N, T) the tasks
-    share one factorization and the result is the sum of the per-task NLMLs.
+    assembled through the same scaled system as ``fit``, with the moment
+    accumulation dispatched through the spec's backend (registry moments
+    hook — streamed on both backends).  Differentiable in the spec's (eps,
+    rho, noise) leaves for gradient-based hyperparameter learning — for the
+    RFF expansions the lengthscale gradient flows through the eps-scaled
+    spectral frequencies (``GP.optimize``, examples/hyperparam_learning.py).
+    For multi-output y (N, T) the tasks share one factorization and the
+    result is the sum of the per-task NLMLs.
+
+    mask: optional (N,) row validity — masked-out rows contribute nothing
+    (the batched fleet optimizer expresses ragged per-tenant N this way).
     """
     if idx is not None or n_max is not None or not isinstance(spec, GPSpec):
         _removed(
@@ -1231,5 +1306,15 @@ def nlml(X, y, spec: GPSpec, idx=None, n_max: Optional[int] = None,
             "build a GPSpec and call nlml(X, y, spec)",
         )
     _check_p(spec, X.shape[1])
-    idx_j = jnp.asarray(spec.indices(X.shape[1]))
-    return _nlml(X, y, spec, idx_j, block_rows or spec.block_rows)
+    _check_backend_support(spec)
+    if block_rows is not None:
+        spec = spec.replace(block_rows=block_rows)
+    if mask is None:
+        mask = jnp.ones((X.shape[0],), jnp.float32)
+    else:
+        mask = jnp.asarray(mask).astype(jnp.float32)
+        if mask.shape != (X.shape[0],):
+            raise ValueError(
+                f"nlml mask must be (N,) = ({X.shape[0]},), got {mask.shape}"
+            )
+    return _nlml_jit(X, y, spec, mask)

@@ -44,6 +44,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import fagp
 from .fagp import FAGPState, GPSpec
@@ -89,47 +90,50 @@ class GP:
         *,
         steps: int = 100,
         lr: float = 5e-2,
+        restarts: int = 1,
+        tol: Optional[float] = None,
+        jitter: float = 0.3,
+        seed: int = 0,
         callback: Optional[Callable[[int, float, GPSpec], None]] = None,
     ) -> "GP":
         """Gradient-based NLML hyperparameter learning (the paper's declared
         future work), then fit at the learned hyperparameters.
 
         Minimizes ``nlml(X, y, spec)/N`` over (eps, rho, noise) in log space
-        with AdamW; the expansion structure (n, index set, backend) stays
-        fixed.  ``callback(step, nlml_per_row, current_spec)`` is invoked
-        every 10% of the run for progress reporting.
+        with AdamW on the fleet lane engine (``repro.optim.gp_hyperopt`` —
+        the same engine ``GPBank.optimize`` runs for whole tenant fleets):
+        ``restarts`` lanes start from log-space jittered inits (restart 0
+        is always the unperturbed spec) and are stepped together in ONE
+        compiled executable, the best lane by final NLML wins, and ``tol``
+        freezes converged lanes early.  The moment accumulation inside the
+        objective streams through the backend registry, so optimization
+        never materializes the N x M feature matrix on either backend.
+
+        ``callback(step, nlml_per_row, current_spec)`` is invoked every 10%
+        of the run with the currently-best lane's loss and hyperparameters.
         """
-        from repro import optim
+        from repro.optim import gp_hyperopt
 
-        hp = {
-            "log_eps": jnp.log(spec.eps),
-            "log_rho": jnp.log(spec.rho),
-            "log_noise": jnp.log(spec.noise),
-        }
-
-        def with_hp(spec, hp):
-            return dataclasses.replace(
-                spec,
-                eps=jnp.exp(hp["log_eps"]),
-                rho=jnp.exp(hp["log_rho"]),
-                noise=jnp.exp(hp["log_noise"]),
+        def cb(step, vals, hp):
+            if callback is None:
+                return
+            r = int(np.argmin(vals[0]))
+            lane = {f: leaf[0, r] for f, leaf in hp.items()}
+            callback(
+                step, float(vals[0, r]),
+                dataclasses.replace(
+                    spec,
+                    eps=jnp.exp(lane["log_eps"]),
+                    rho=jnp.exp(lane["log_rho"]),
+                    noise=jnp.exp(lane["log_noise"]),
+                ),
             )
 
-        # X, y passed as arguments (not closed over) so jit traces them as
-        # inputs instead of baking the dataset into the executable
-        def loss(hp, X, y):
-            return fagp.nlml(X, y, with_hp(spec, hp)) / X.shape[0]
-
-        ocfg = optim.AdamWConfig(lr=lr, weight_decay=0.0, clip_norm=10.0)
-        ostate = optim.init(hp, ocfg)
-        loss_grad = jax.jit(jax.value_and_grad(loss))
-        every = max(1, steps // 10)
-        for step in range(steps):
-            val, g = loss_grad(hp, X, y)
-            hp, ostate, _ = optim.apply_updates(hp, g, ostate, ocfg)
-            if callback is not None and (step % every == 0 or step == steps - 1):
-                callback(step, float(val), with_hp(spec, hp))
-        return cls.fit(X, y, with_hp(spec, hp))
+        result = gp_hyperopt.optimize_restarts(
+            X, y, spec, restarts=restarts, steps=steps, lr=lr, tol=tol,
+            jitter=jitter, seed=seed, callback=cb,
+        )
+        return cls.fit(X, y, result.spec_for(spec, 0))
 
     # -- introspection ------------------------------------------------------
 

@@ -140,6 +140,10 @@ def serve_fleet(
     ingest_chunk: int = 16,
     noise: float = 0.05,
     seed: int = 0,
+    reopt_every: int = 0,
+    reopt_min_rows: int = 16,
+    reopt_steps: int = 25,
+    reopt_restarts: int = 2,
 ) -> dict:
     """Serve a fleet of ``tenants`` small independent GPs concurrently.
 
@@ -149,6 +153,13 @@ def serve_fleet(
     observation streams are absorbed with batched ``GPBank.update``
     rounds.  Reported per round: ingest time, query p50 per microbatch,
     fleet-wide queries/s, and RMSE against each tenant's own target.
+
+    ``reopt_every > 0`` additionally re-optimizes STALE tenants every that
+    many rounds: tenants that absorbed >= ``reopt_min_rows`` observations
+    since their last optimization are re-fit with one batched
+    ``GPBank.optimize`` run over their accumulated data
+    (``router.reoptimize``) — the bank becomes heterogeneous and each
+    tenant serves under its own learned hyperparameters.
     """
     rng = np.random.default_rng(seed)
     spec = GPSpec.create(
@@ -193,6 +204,36 @@ def serve_fleet(
         jax.block_until_ready(router.bank.stack.u)
         t_ingest = time.perf_counter() - t0
 
+        # -- periodic re-optimization of stale tenants ---------------------
+        t_reopt, n_reopt = 0.0, 0
+        if reopt_every and (r + 1) % reopt_every == 0:
+            stale = router.stale_tenants(reopt_min_rows)
+            if stale:
+                # row axis padded to the FIXED pool size (masked): a
+                # max-consumed row count would grow every reopt round and
+                # retrace the lane executables each time.  (The tenant
+                # axis still varies with the stale set — bounded by the
+                # distinct stale-set sizes, not by round count.)
+                n_max = total
+                Xo = np.zeros((len(stale), n_max, p), np.float32)
+                yo = np.zeros((len(stale), n_max), np.float32)
+                mo = np.zeros((len(stale), n_max), np.float32)
+                for i, t in enumerate(stale):
+                    X_all, y_all = pools[t]
+                    rows = min(consumed[t], X_all.shape[0])
+                    Xo[i, :rows] = X_all[:rows]
+                    yo[i, :rows] = y_all[:rows]
+                    mo[i, :rows] = 1.0
+                t0 = time.perf_counter()
+                router.reoptimize(
+                    stale, jnp.asarray(Xo), jnp.asarray(yo),
+                    mask=jnp.asarray(mo), restarts=reopt_restarts,
+                    steps=reopt_steps, seed=seed,
+                )
+                jax.block_until_ready(router.bank.stack.u)
+                t_reopt = time.perf_counter() - t0
+                n_reopt = len(stale)
+
         # -- queries: mixed-tenant traffic through the router --------------
         q_tenants = rng.integers(0, tenants, queries_per_round)
         Xq = rng.uniform(-1.0, 1.0, size=(queries_per_round, p)).astype(
@@ -221,6 +262,8 @@ def serve_fleet(
             "query_mean_s": t_query / nb,
             "queries_per_s": queries_per_round / t_query,
             "rmse": rmse,
+            "reopt_s": t_reopt,
+            "reopt_tenants": n_reopt,
         })
     return {
         "fit_s": t_fit,
@@ -243,6 +286,8 @@ def main():
     ap.add_argument("--update-size", type=int, default=64)
     ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--microbatch", type=int, default=128)
+    ap.add_argument("--reopt-every", type=int, default=0, metavar="K",
+                    help="re-optimize stale tenants every K serving rounds")
     args = ap.parse_args()
     if args.fleet:
         r = serve_fleet(
@@ -250,18 +295,22 @@ def main():
             n_train=args.n_train, p=args.p, n=args.n, rounds=args.rounds,
             queries_per_round=args.queries,
             observations_per_round=args.update_size,
-            microbatch=args.microbatch,
+            microbatch=args.microbatch, reopt_every=args.reopt_every,
         )
         print(
             f"fleet of {r['tenants']} fitted in {r['fit_s']*1e3:.1f} ms "
             f"(M={r['M']} each)"
         )
         for h in r["rounds"]:
+            reopt = (
+                f"; reopt {h['reopt_tenants']} tenants "
+                f"{h['reopt_s']*1e3:.1f} ms" if h["reopt_tenants"] else ""
+            )
             print(
                 f"round {h['round']}: ingest {h['rows_absorbed']} rows "
                 f"{h['ingest_s']*1e3:.1f} ms; query mean "
                 f"{h['query_mean_s']*1e3:.2f} ms/microbatch; "
-                f"{h['queries_per_s']:.0f} q/s; rmse {h['rmse']:.4f}"
+                f"{h['queries_per_s']:.0f} q/s; rmse {h['rmse']:.4f}{reopt}"
             )
         return
     r = serve_gp(

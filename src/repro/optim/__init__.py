@@ -1,4 +1,11 @@
-"""Optimizers, schedules, and distributed-gradient utilities."""
+"""Optimizers, schedules, and distributed-gradient utilities.
+
+``gp_hyperopt`` is the fleet-scale batched GP hyperparameter optimizer
+(the (B tenants x R restarts) lane engine behind ``GP.optimize`` and
+``GPBank.optimize``).
+"""
 from . import adamw, schedules
 from .adamw import AdamWConfig, apply_updates, global_norm, init
 from .schedules import constant, warmup_cosine, warmup_linear
+from . import gp_hyperopt
+from .gp_hyperopt import HyperoptResult, optimize_fleet, optimize_restarts

@@ -1,0 +1,200 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate over the BENCH trajectory.
+
+Validates every ``BENCH_*.json`` the benchmarks write (schema + row
+structure), asserts the recorded PARITY metrics against the tolerance
+committed in ``BENCH_baselines.json`` (hard failures — parity is a
+correctness claim), and compares recorded timings against the committed
+baseline values (soft warnings by default — shared CI runners have noisy
+clocks; ``--strict-timing`` hardens them for dedicated hardware).
+
+Replaces the per-benchmark inline heredoc validators that used to live in
+``.github/workflows/ci.yml``: one gate, one committed baseline file, one
+place to add the next benchmark's schema.
+
+  python tools/check_bench.py                    # every BENCH_*.json present
+  python tools/check_bench.py BENCH_gp_bank.json # specific files
+  python tools/check_bench.py --require BENCH_gp_bank.json ...
+                                                 # missing file = failure
+Exit code 1 on any hard failure (missing required file, malformed schema,
+parity above tolerance); timing regressions print WARN lines.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+BASELINES = ROOT / "BENCH_baselines.json"
+
+_ROW_FIELDS = {
+    "BENCH_gp_bank.json": {"name", "seconds", "derived"},
+    "BENCH_optimize.json": {"name", "seconds", "derived"},
+    "BENCH_expansions.json": {"bench", "expansion", "name", "seconds",
+                              "derived"},
+}
+_GENERIC_ROW_FIELDS = {"name", "seconds"}
+
+
+def _flat_parity(d, prefix=""):
+    """parity_abs entries are floats (gp_bank) or nested dicts of floats
+    (optimize: per-metric); flatten to {dotted-key: float}."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flat_parity(v, key + "."))
+        else:
+            out[key] = float(v)
+    return out
+
+
+def _check_structure(name: str, payload, errors: list) -> None:
+    if payload.get("schema") != 1:
+        errors.append(f"{name}: schema != 1 (got {payload.get('schema')!r})")
+        return
+    rows = payload.get("results")
+    if not isinstance(rows, list) or not rows:
+        errors.append(f"{name}: no results rows")
+        return
+    want = _ROW_FIELDS.get(name, _GENERIC_ROW_FIELDS)
+    for r in rows:
+        if not isinstance(r, dict) or not want <= set(r):
+            errors.append(f"{name}: malformed row {r!r} (need {sorted(want)})")
+            return
+        if not isinstance(r["seconds"], (int, float)):
+            errors.append(f"{name}: non-numeric seconds in {r!r}")
+            return
+
+
+def check_file(path: Path, rules: dict, cfg: dict, errors: list,
+               warnings: list) -> None:
+    name = path.name
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        errors.append(f"{name}: unreadable ({e})")
+        return
+    _check_structure(name, payload, errors)
+    if any(e.startswith(name) for e in errors):
+        return
+
+    # -- parity: a correctness claim, gated hard ----------------------------
+    # EVERY recorded parity value is gated (a benchmark re-run with another
+    # --expansion axis rewrites the key set, so the gate follows the file);
+    # ``parity_keys`` additionally names records that must exist, and
+    # ``parity_nonempty`` requires at least one.
+    parity_max = float(cfg.get("parity_max_abs", 1e-5))
+    flat = _flat_parity(payload.get("parity_abs", {}))
+    for k, v in flat.items():
+        if not (v <= parity_max):       # catches NaN too
+            errors.append(
+                f"{name}: parity {k} = {v:g} exceeds {parity_max:g}"
+            )
+    if rules.get("parity_nonempty") and not flat:
+        errors.append(f"{name}: no parity records at all")
+    for key in rules.get("parity_keys", []):
+        if not any(k.split(".")[0] == key for k in flat):
+            errors.append(f"{name}: missing parity record {key!r}")
+
+    # -- required families (the expansions trajectory) ----------------------
+    fams_want = set(rules.get("families", []))
+    if fams_want:
+        fams = {r.get("expansion") for r in payload["results"]}
+        missing = fams_want - fams
+        if missing:
+            errors.append(f"{name}: missing families {sorted(missing)}")
+
+    # -- timings: ratio vs committed baseline, soft by default --------------
+    # a baseline entry is a bare seconds value, or {"seconds": s,
+    # "derived": tag} to pin the workload config — a row whose derived tag
+    # differs (e.g. the nightly's non-smoke shapes vs the smoke baseline)
+    # is skipped rather than spuriously warned about
+    ratio_warn = float(cfg.get("timing_ratio_warn", 4.0))
+    by_name = {}
+    for r in payload["results"]:
+        key = (f"{r['bench']}/{r['expansion']}/{r['name']}"
+               if "bench" in r else r["name"])
+        by_name[key] = (float(r["seconds"]), r.get("derived", ""))
+    for tname, base in rules.get("timings", {}).items():
+        want_tag = None
+        if isinstance(base, dict):
+            want_tag = base.get("derived")
+            base = float(base["seconds"])
+        hit = by_name.get(tname)
+        if hit is None:
+            warnings.append(
+                f"{name}: baseline timing {tname!r} not in this run "
+                f"(smoke subset?)"
+            )
+            continue
+        now, tag = hit
+        if want_tag is not None and not tag.startswith(want_tag):
+            continue  # different workload config than the baseline pinned
+        if base > 0 and now / base > ratio_warn:
+            warnings.append(
+                f"{name}: {tname} took {now * 1e3:.2f} ms vs baseline "
+                f"{base * 1e3:.2f} ms ({now / base:.1f}x > {ratio_warn:g}x)"
+            )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*",
+                    help="BENCH files to check (default: every BENCH_*.json)")
+    ap.add_argument("--baselines", default=str(BASELINES))
+    ap.add_argument("--require", nargs="*", default=[],
+                    help="file names whose absence is a hard failure")
+    ap.add_argument("--strict-timing", action="store_true",
+                    help="treat timing-ratio warnings as failures")
+    args = ap.parse_args()
+
+    base_path = Path(args.baselines)
+    if not base_path.exists():
+        print(f"BENCH CHECK FAILED: no baselines file at {base_path}")
+        return 1
+    cfg = json.loads(base_path.read_text())
+    per_file = cfg.get("files", {})
+
+    if args.files:
+        paths = [ROOT / f if not Path(f).is_absolute() else Path(f)
+                 for f in args.files]
+    else:
+        paths = sorted(
+            p for p in ROOT.glob("BENCH_*.json") if p.name != base_path.name
+        )
+
+    errors: list = []
+    warnings: list = []
+    for req in args.require:
+        if not (ROOT / req).exists() and req not in {p.name for p in paths
+                                                     if p.exists()}:
+            errors.append(f"required file missing: {req}")
+    seen = set()
+    for p in paths:
+        if p.name in seen or p.name == base_path.name:
+            continue
+        seen.add(p.name)
+        if not p.exists():
+            errors.append(f"missing file: {p.name}")
+            continue
+        check_file(p, per_file.get(p.name, {}), cfg, errors, warnings)
+
+    for w in warnings:
+        print(f"WARN: {w}")
+    if args.strict_timing and warnings:
+        errors.extend(warnings)
+    if errors:
+        print("BENCH CHECK FAILED:")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"bench check OK: {len(seen)} file(s) validated"
+          + (f", {len(warnings)} timing warning(s)" if warnings else ""))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
