@@ -15,8 +15,9 @@ from pathlib import Path
 
 import jax
 
-__all__ = ["time_fn", "emit", "record_expansion_result", "EXPANSIONS_JSON",
-           "expansion_names", "bench_spec", "cli_expansion"]
+__all__ = ["time_fn", "time_loop", "emit", "record_expansion_result",
+           "EXPANSIONS_JSON", "expansion_names", "bench_spec",
+           "cli_expansion"]
 
 
 def expansion_names() -> list:
@@ -100,6 +101,22 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 3, **kw):
         times.append(time.perf_counter() - t0)
     times.sort()
     return times[len(times) // 2]
+
+
+def time_loop(fn, *, warmup: int = 1, repeats: int = 3):
+    """Best (min) wall time of an end-to-end HOST loop — serving loops
+    block and convert internally, so unlike :func:`time_fn` there is no
+    device future to wait on, and min-of-repeats is the stable statistic
+    for a throughput ratio on a shared machine."""
+    for _ in range(warmup):
+        fn()
+    best = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return best
 
 
 def emit(name: str, seconds: float, derived: str = ""):

@@ -24,6 +24,7 @@ def main() -> None:
         kernel_micro,
         multi_output,
         roofline_table,
+        serve_latency,
         streaming_fit,
     )
 
@@ -36,6 +37,7 @@ def main() -> None:
         ("multi_output", multi_output),              # shared-Cholesky T-task fit
         ("gp_bank", gp_bank),                        # fleet bank vs loop of singles
         ("gp_hyperopt", gp_hyperopt),                # fleet hyperopt vs loop
+        ("serve_latency", serve_latency),            # pipelined engine vs sync
         ("roofline_table", roofline_table),          # dry-run summary
     ]
     failed = 0

@@ -1,0 +1,216 @@
+"""Pipelined FleetEngine vs the synchronous router loop, with latency SLOs.
+
+The serving claim behind ``repro.bank.FleetEngine``: the synchronous loop
+(submit everything, ``BankRouter.flush``) pays the full ``GPBank.mean_var``
+wrapper per microbatch and a host/device barrier per block, while the
+engine admits, coalesces (arrival-rate-driven power-of-two buckets, up to
+``max_coalesce`` microbatches fused per dispatch) and harvests without any
+per-block barrier — so the same mixed-tenant workload sustains a >= 1.5x
+higher query rate at the acceptance shape B=64 / microbatch=64 on this
+container.  Both engines serve the IDENTICAL fitted bank; the pipelined
+results are asserted here (<= 1e-5 abs) against direct ``GPBank.mean_var``
+calls and the parity is recorded for ``tools/check_bench.py`` to gate.
+
+Also measured and recorded in ``BENCH_serve.json``:
+
+* per-tenant and overall p50/p99 latency from the engine's own
+  ``LatencyStats`` (numpy.percentile semantics, pinned by
+  tests/test_serve_engine.py),
+* sustained QPS for both loops and their ratio
+  (``speedup_pipelined_vs_sync`` — check_bench gates it >= 1.5 hard),
+* deadline behavior: a burst submitted under an impossible SLO must
+  expire with the timeout sentinel (counted in ``timeouts``), and NO
+  ticket submitted without a deadline may be dropped
+  (``dropped_non_expired`` — gated == 0 hard).
+
+  PYTHONPATH=src python -m benchmarks.serve_latency [--smoke | --full]
+
+Smoke and full runs keep the SAME acceptance shape (B=64, microbatch=64);
+full runs more queries, more repeats, and the pallas backend too.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bank import BankRouter, FleetEngine, GPBank
+from repro.data import make_gp_dataset
+
+from .common import bench_spec, emit, time_loop
+
+ROOT = Path(__file__).resolve().parents[1]
+JSON_PATH = ROOT / "BENCH_serve.json"
+
+# the acceptance shape: B=64 tenants, n=8, p=2 (M=64), microbatch=64
+B, N_ROWS, P, N_MERCER = 64, 8, 2, 8
+MICROBATCH = 64
+MAX_IN_FLIGHT = 4
+MAX_COALESCE = 4
+
+
+def _fleet(backend: str, *, seed: int = 0):
+    spec = bench_spec("hermite", P, n=N_MERCER, num_features=(N_MERCER**P)//2,
+                      backend=backend, seed=seed)
+    Xb = np.zeros((B, N_ROWS, P), np.float32)
+    yb = np.zeros((B, N_ROWS), np.float32)
+    for s in range(B):
+        X, y, *_ = make_gp_dataset(N_ROWS, P, seed=seed + s)
+        Xb[s], yb[s] = np.asarray(X), np.asarray(y)
+    return GPBank.fit(jnp.asarray(Xb), jnp.asarray(yb), spec)
+
+
+def _workload(nq: int, *, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    Xq = rng.uniform(-1, 1, size=(nq, P)).astype(np.float32)
+    tenants = [int(t) for t in rng.integers(0, B, nq)]
+    return tenants, Xq
+
+
+def _run_sync(bank, tenants, Xq):
+    router = BankRouter(bank, microbatch=MICROBATCH)
+    tickets = [router.submit(t, x) for t, x in zip(tenants, Xq)]
+    return router.flush(), tickets
+
+
+def _run_pipelined(bank, tenants, Xq):
+    router = BankRouter(bank, microbatch=MICROBATCH)
+    eng = FleetEngine(router, max_in_flight=MAX_IN_FLIGHT,
+                      max_coalesce=MAX_COALESCE)
+    tickets = [eng.submit(t, x) for t, x in zip(tenants, Xq)]
+    return eng.drain(), tickets, eng
+
+
+def _deadline_scenario(bank, *, nq: int = 256):
+    """A burst submitted under an impossible SLO: every ticket must come
+    back as the documented timeout sentinel — and a second, deadline-free
+    burst right after must be served completely (expiry never blocks the
+    queue)."""
+    tenants, Xq = _workload(nq, seed=7)
+    router = BankRouter(bank, microbatch=MICROBATCH)
+    eng = FleetEngine(router, max_in_flight=MAX_IN_FLIGHT,
+                      max_coalesce=MAX_COALESCE, auto_pump=False,
+                      default_slo_s=1e-9)
+    doomed = [eng.submit(t, x) for t, x in zip(tenants, Xq)]
+    time.sleep(0.002)  # let every deadline lapse before dispatch
+    out = eng.drain()
+    timeouts = sum(out[t].timed_out for t in doomed)
+    live = [eng.submit(t, x, deadline_s=60.0)
+            for t, x in zip(tenants, Xq)]
+    out = eng.drain()
+    served_after = sum(out[t].ok for t in live)
+    return timeouts, nq, served_after
+
+
+def run(full: bool = False, smoke: bool = False):
+    nq = 2048 if smoke else (8192 if full else 4096)
+    repeats = 3 if smoke else 5
+    backends = ["jnp", "pallas"] if full else ["jnp"]
+
+    results = []
+
+    def record(name, seconds, derived=""):
+        results.append({"name": name, "seconds": seconds, "derived": derived})
+
+    parity = {}
+    qps = {}
+    latency = {}
+    timeouts_total = 0
+    dropped_non_expired = 0
+
+    for backend in backends:
+        bank = _fleet(backend)
+        tenants, Xq = _workload(nq)
+        tag = f"B={B};mb={MICROBATCH};nq={nq}"
+
+        # parity + drop accounting on a verification pass (un-timed)
+        out_p, tks_p, eng0 = _run_pipelined(bank, tenants, Xq)
+        mu_d, var_d = bank.mean_var(tenants, jnp.asarray(Xq))
+        mu_p = np.array([out_p[t].mu for t in tks_p], np.float32)
+        var_p = np.array([out_p[t].var for t in tks_p], np.float32)
+        pkey = (f"pipelined_vs_direct/{backend}" if backend != "jnp"
+                else "pipelined_vs_direct")
+        parity[pkey] = {
+            "mean_abs": float(np.max(np.abs(np.asarray(mu_d) - mu_p))),
+            "var_abs": float(np.max(np.abs(np.asarray(var_d) - var_p))),
+        }
+        assert parity[pkey]["mean_abs"] <= 1e-5 \
+            and parity[pkey]["var_abs"] <= 1e-5, parity[pkey]
+        # no deadline was set, so every ticket must be served
+        dropped_non_expired += sum(
+            1 for t in tks_p if t not in out_p or not out_p[t].ok
+        )
+
+        t_sync = time_loop(lambda: _run_sync(bank, tenants, Xq),
+                           repeats=repeats)
+        t_pipe = time_loop(lambda: _run_pipelined(bank, tenants, Xq),
+                           repeats=repeats)
+        qps[f"sync/{backend}"] = nq / t_sync
+        qps[f"pipelined/{backend}"] = nq / t_pipe
+        emit(f"serve/{backend}-sync-loop", t_sync, tag)
+        emit(f"serve/{backend}-pipelined", t_pipe,
+             f"{tag};speedup={t_sync / t_pipe:.2f}x")
+        record(f"{backend}-sync-loop", t_sync, tag)
+        record(f"{backend}-pipelined", t_pipe, tag)
+
+        if backend == "jnp":
+            # latency observability from a fresh, metered engine pass
+            _, _, eng = _run_pipelined(bank, tenants, Xq)
+            m = eng.metrics()
+            per_t = {
+                str(t): {"p50_s": v["p50_s"], "p99_s": v["p99_s"],
+                         "count": v["count"]}
+                for t, v in m["tenants"].items()
+            }
+            latency = {
+                "p50_s": m["overall"]["p50_s"],
+                "p99_s": m["overall"]["p99_s"],
+                "sustained_qps": m["overall"]["sustained_qps"],
+                "bucket_uses": {str(k): v
+                                for k, v in m["bucket_uses"].items()},
+                "tenants": per_t,
+            }
+            record("pipelined-p50", m["overall"]["p50_s"], tag)
+            record("pipelined-p99", m["overall"]["p99_s"], tag)
+
+            n_timed_out, n_doomed, served_after = _deadline_scenario(bank)
+            assert n_timed_out == n_doomed, (n_timed_out, n_doomed)
+            assert served_after == n_doomed, served_after
+            timeouts_total += n_timed_out
+            emit(f"serve/{backend}-deadline-expiry", 0.0,
+                 f"expired={n_timed_out}/{n_doomed};served_after="
+                 f"{served_after}")
+
+    speedup = qps["pipelined/jnp"] / qps["sync/jnp"]
+    emit("serve/json-written", 0.0,
+         f"speedup={speedup:.2f}x;dropped={dropped_non_expired}")
+
+    payload = {
+        "schema": 1,
+        "smoke": bool(smoke),
+        "config": {"B": B, "n_rows": N_ROWS, "p": P, "n": N_MERCER,
+                   "microbatch": MICROBATCH, "queries": nq,
+                   "max_in_flight": MAX_IN_FLIGHT,
+                   "max_coalesce": MAX_COALESCE, "repeats": repeats},
+        "results": results,
+        "parity_abs": parity,
+        "qps": qps,
+        "speedup_pipelined_vs_sync": speedup,
+        "latency": latency,
+        "timeouts": timeouts_total,
+        "dropped_non_expired": dropped_non_expired,
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def main():
+    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,13 +1,23 @@
-"""Batched multi-tenant GP serving: a bank of sessions + a serving router.
+"""Batched multi-tenant GP serving: a bank of sessions + serving frontends.
 
 ``GPBank`` keeps B independent fitted GP sessions device-resident as one
 stacked ``FAGPState`` and drives fit / mixed-tenant mean_var / rank-k
 update for the whole fleet with single batched executables;
 ``BankRouter`` coalesces per-tenant query and observation queues into the
-padded fixed-shape batches the bank wants.  See ``bank.bank`` for the
-design notes.
+padded fixed-shape batches the bank wants; ``FleetEngine`` pipelines the
+router — dispatch-ahead blocks, per-tenant deadlines with the documented
+timeout sentinel, queue-budget backpressure, arrival-rate bucket
+autotuning, and p50/p99/QPS observability.  See ``bank.bank`` and
+``bank.engine`` for the design notes.
 """
 from .bank import GPBank
+from .engine import (
+    TIMEOUT_MU, TIMEOUT_VAR, FleetEngine, LatencyStats, QueueFull,
+    TicketResult,
+)
 from .router import BankRouter
 
-__all__ = ["GPBank", "BankRouter"]
+__all__ = [
+    "GPBank", "BankRouter", "FleetEngine", "LatencyStats", "QueueFull",
+    "TicketResult", "TIMEOUT_MU", "TIMEOUT_VAR",
+]

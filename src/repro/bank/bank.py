@@ -93,9 +93,8 @@ def _bank_solve(G, b, loglam, sig2):
     return lam, sqrtlam, chol, u
 
 
-@jax.jit
-def _bank_update_scatter(chol_s, u_s, b_s, sqrtlam_s, noise_g, slots,
-                         Phi_g, y_g, mask_g):
+def _bank_update_scatter_impl(chol_s, u_s, b_s, sqrtlam_s, noise_g, slots,
+                              Phi_g, y_g, mask_g):
     """Gather slot states, apply the rank-k update per group row, scatter
     back.  Padded rows (mask 0) zero their feature row, which makes the
     rank-1 sweep an identity for them — ragged ingest is a masking detail,
@@ -104,7 +103,13 @@ def _bank_update_scatter(chol_s, u_s, b_s, sqrtlam_s, noise_g, slots,
     sweep is exact only up to sqrt rounding, and an untouched tenant must
     not drift by ulps per serving round.  ``noise_g`` (G,) is per group —
     heterogeneous banks carry per-slot noise; homogeneous banks broadcast
-    the shared value."""
+    the shared value.
+
+    Jitted twice below: the plain variant, and a buffer-donating variant
+    for pipelined serving loops that own their bank exclusively
+    (dispatch-ahead ingest reuses the old stack's device memory instead
+    of doubling it; donation is a no-op on backends without support,
+    e.g. CPU)."""
     Phi_g = Phi_g * mask_g[..., None]
     y_g = y_g * mask_g
     ch, bb, uu = jax.vmap(
@@ -116,6 +121,12 @@ def _bank_update_scatter(chol_s, u_s, b_s, sqrtlam_s, noise_g, slots,
     bb = jnp.where(real[:, None], bb, b_s[slots])
     return (chol_s.at[slots].set(ch), u_s.at[slots].set(uu),
             b_s.at[slots].set(bb))
+
+
+_bank_update_scatter = jax.jit(_bank_update_scatter_impl)
+_bank_update_scatter_donated = jax.jit(
+    _bank_update_scatter_impl, donate_argnums=(0, 1, 2)
+)
 
 
 @jax.jit
@@ -562,6 +573,20 @@ class GPBank:
 
     # -- the batched pipeline ----------------------------------------------
 
+    @staticmethod
+    def result_ready(*arrays) -> bool:
+        """Have these dispatched results landed?  ``mean_var`` returns
+        device arrays that are *futures* under JAX's asynchronous
+        dispatch; a pipelined serving loop (``repro.bank.FleetEngine``)
+        polls this to harvest completed blocks without ever blocking on
+        an unfinished one.  Arrays without readiness introspection (older
+        jax, concrete numpy inputs) report ready — the harvest then
+        degrades to a blocking conversion, never to a wrong answer."""
+        return all(
+            ready() for a in arrays
+            if (ready := getattr(a, "is_ready", None)) is not None
+        )
+
     def mean_var(self, tenant_ids, Xq: jax.Array):
         """Posterior mean and marginal variance for a MIXED-tenant query
         batch: row q of ``Xq`` (Q, p) is answered by ``tenant_ids[q]``'s
@@ -613,14 +638,21 @@ class GPBank:
 
     def _update_at_slots(self, slots: jax.Array, Xk: jax.Array,
                          yk: jax.Array,
-                         mask: Optional[jax.Array] = None) -> "GPBank":
+                         mask: Optional[jax.Array] = None,
+                         donate: bool = False) -> "GPBank":
         """Slot-addressed core of :meth:`update`.  Also the router's
         fixed-shape entry: a fully-masked group is an exact identity update
         (zeroed feature rows make every rank-1 sweep a no-op), so the
         router pads the group axis to a shape bucket with masked groups
         aimed at distinct unused slots — bounding the number of compiled
         update executables by log2(capacity) instead of one per distinct
-        tenant-mix size.  Slots must be distinct (scatter would race)."""
+        tenant-mix size.  Slots must be distinct (scatter would race).
+
+        ``donate=True`` routes through the buffer-donating executable:
+        the pre-update chol/u/b stack buffers are handed to XLA for reuse
+        — THIS bank (and any older bank sharing those buffers) must not
+        be touched afterwards.  Reserved for serving loops that own their
+        bank exclusively (``BankRouter(donate_updates=True)``)."""
         G, k, p = Xk.shape
         fagp._check_p(self.spec, p)
         if mask is None:
@@ -648,7 +680,9 @@ class GPBank:
             noise_g = jnp.broadcast_to(
                 jnp.asarray(self.stack.params.noise, jnp.float32), (G,)
             )
-        chol, u, b = _bank_update_scatter(
+        scatter = (_bank_update_scatter_donated if donate
+                   else _bank_update_scatter)
+        chol, u, b = scatter(
             self.stack.chol, self.stack.u, self.stack.b, self.stack.sqrtlam,
             noise_g, slots, Phi_g, yk, mask,
         )

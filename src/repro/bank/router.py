@@ -50,12 +50,18 @@ class BankRouter:
     """See module docstring.  Not thread-safe; one router per serving loop."""
 
     def __init__(self, bank: GPBank, *, microbatch: int = 64,
-                 ingest_chunk: int = 16):
+                 ingest_chunk: int = 16, donate_updates: bool = False):
         if microbatch < 1 or ingest_chunk < 1:
             raise ValueError("microbatch and ingest_chunk must be >= 1")
         self.bank = bank
         self.microbatch = int(microbatch)
         self.ingest_chunk = int(ingest_chunk)
+        # donate the pre-update stack buffers into each ingest round's
+        # scattered write (device memory reuse for dispatch-ahead serving).
+        # Only safe when this router's bank is the ONLY live reference to
+        # those buffers — FleetEngine owns its bank exclusively and opts
+        # in; anything holding older bank versions must leave this off.
+        self.donate_updates = bool(donate_updates)
         self._pending: list[tuple[int, Hashable, np.ndarray]] = []
         self._observations: dict[Hashable, list[tuple[np.ndarray, float]]] = {}
         self._next_ticket = 0
@@ -84,6 +90,32 @@ class BankRouter:
     def pending(self) -> int:
         return len(self._pending)
 
+    def take(self, k: int) -> list:
+        """Pop up to ``k`` pending query entries in arrival order — the
+        dispatch feed for an external pipelined engine
+        (:class:`~repro.bank.FleetEngine`).  Entries are opaque
+        ``(ticket, tenant, x)`` triples meant to round-trip through
+        :meth:`requeue` / ``_pack_block``."""
+        k = max(0, int(k))
+        taken, self._pending = self._pending[:k], self._pending[k:]
+        return taken
+
+    def requeue(self, entries) -> None:
+        """Push taken entries back to the FRONT of the queue (a dispatch
+        failed before its results existed) — arrival order is preserved,
+        every ticket stays redeemable."""
+        self._pending = list(entries) + self._pending
+
+    def _pack_block(self, block, size: int):
+        """Pad a taken block to ``size`` rows by repeating the last real
+        row (fixed shapes; padded results are discarded).  Returns
+        (tenant list, (size, p) float32 array) — the ONE packing used by
+        :meth:`flush` and the engine's dispatch path."""
+        pad = size - len(block)
+        tenants = [t for _, t, _ in block] + [block[-1][1]] * pad
+        Xq = np.stack([x for _, _, x in block] + [block[-1][2]] * pad)
+        return tenants, Xq
+
     def flush(self) -> dict:
         """Serve every pending query; returns ``ticket -> (mu, var)``
         (floats).  Pending rows are packed in arrival order into fixed
@@ -104,9 +136,7 @@ class BankRouter:
         mb = self.microbatch
         for lo in range(0, len(todo), mb):
             block = todo[lo : lo + mb]
-            pad = mb - len(block)
-            tenants = [t for _, t, _ in block] + [block[-1][1]] * pad
-            Xq = np.stack([x for _, _, x in block] + [block[-1][2]] * pad)
+            tenants, Xq = self._pack_block(block, mb)
             try:
                 mu, var = self.bank.mean_var(tenants, jnp.asarray(Xq))
             except Exception:
@@ -192,6 +222,7 @@ class BankRouter:
                     jnp.asarray(np.array(slots, np.int32)),
                     jnp.asarray(np.stack(Xg)), jnp.asarray(np.stack(yg)),
                     jnp.asarray(np.stack(mg)),
+                    donate=self.donate_updates,
                 )
             except Exception:
                 for t, rows in taken.items():

@@ -9,10 +9,14 @@ Two production shapes of the paper's workload:
   :class:`~repro.bank.GPBank` (one stacked state, one executable for the
   whole fleet) and traffic flows through a :class:`~repro.bank.BankRouter`
   that coalesces per-tenant query/observation queues into padded
-  mixed-tenant microbatches.  This is the bank-aware rewrite of the
-  serving loop: ingest routes through ``GPBank.update`` (batched rank-k),
-  queries through ``GPBank.mean_var`` (gathered mixed-tenant posterior),
-  and membership churn (insert/evict) never recompiles.
+  mixed-tenant microbatches.  By default the router is driven by the
+  pipelined :class:`~repro.bank.FleetEngine` (``engine="pipelined"``):
+  dispatch-ahead blocks with no per-tick ``block_until_ready``, per-tenant
+  deadlines answered with the documented timeout sentinel, queue-budget
+  backpressure, arrival-rate-autotuned microbatch buckets, and per-tenant
+  p50/p99 + sustained-QPS metrics in the returned history.
+  ``engine="sync"`` keeps the strict coalesce -> dispatch -> block ->
+  respond loop (the baseline ``benchmarks/serve_latency.py`` beats).
 
 Both loops speak self-describing sessions: the spec (index set, backend,
 block size) is baked in at fit time, so neither the query path nor the
@@ -32,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.bank import BankRouter, GPBank
+from repro.bank import BankRouter, FleetEngine, GPBank
 from repro.core import fagp
 from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
@@ -144,15 +148,29 @@ def serve_fleet(
     reopt_min_rows: int = 16,
     reopt_steps: int = 25,
     reopt_restarts: int = 2,
+    engine: str = "pipelined",
+    max_in_flight: int = 4,
+    queue_budget: int = 4096,
+    slo_s: float | None = None,
 ) -> dict:
     """Serve a fleet of ``tenants`` small independent GPs concurrently.
 
     Each tenant observes its own shifted copy of the synthetic target.
     Every round, mixed-tenant query traffic (uniformly random tenant per
-    query) flows through the router in padded microbatches, and per-tenant
-    observation streams are absorbed with batched ``GPBank.update``
-    rounds.  Reported per round: ingest time, query p50 per microbatch,
-    fleet-wide queries/s, and RMSE against each tenant's own target.
+    query) flows through the serving frontend in padded microbatches, and
+    per-tenant observation streams are absorbed with batched
+    ``GPBank.update`` rounds.  Reported per round: ingest time, query
+    wall time, fleet-wide queries/s, timeout count, and RMSE against each
+    tenant's own target; the returned dict additionally carries the
+    engine's cumulative latency metrics (per-tenant p50/p99, sustained
+    QPS, bucket usage) when ``engine="pipelined"``.
+
+    ``engine`` selects the serving frontend: ``"pipelined"`` (default)
+    drives a :class:`~repro.bank.FleetEngine` — queries dispatch ahead
+    while the host packs the next block, expired tickets (``slo_s``) get
+    the timeout sentinel instead of a seat in a padded block, and the
+    block size autotunes to the arrival rate; ``"sync"`` is the strict
+    submit-all / flush / block loop.
 
     ``reopt_every > 0`` additionally re-optimizes STALE tenants every that
     many rounds: tenants that absorbed >= ``reopt_min_rows`` observations
@@ -187,8 +205,18 @@ def serve_fleet(
     jax.block_until_ready(bank.stack.u)
     t_fit = time.perf_counter() - t0
 
+    if engine not in ("pipelined", "sync"):
+        raise ValueError(
+            f"engine must be 'pipelined' or 'sync', got {engine!r}"
+        )
     router = BankRouter(bank, microbatch=microbatch,
                         ingest_chunk=ingest_chunk)
+    eng = None
+    if engine == "pipelined":
+        eng = FleetEngine(
+            router, max_in_flight=max_in_flight,
+            queue_budget=queue_budget, default_slo_s=slo_s,
+        )
     consumed = [n_train] * tenants
     history = []
     for r in range(rounds):
@@ -234,22 +262,41 @@ def serve_fleet(
                 t_reopt = time.perf_counter() - t0
                 n_reopt = len(stale)
 
-        # -- queries: mixed-tenant traffic through the router --------------
+        # -- queries: mixed-tenant traffic through the frontend ------------
         q_tenants = rng.integers(0, tenants, queries_per_round)
         Xq = rng.uniform(-1.0, 1.0, size=(queries_per_round, p)).astype(
             np.float32
         )
-        tickets = [
-            router.submit(int(t), Xq[i]) for i, t in enumerate(q_tenants)
-        ]
-        t0 = time.perf_counter()
-        results = router.flush()
-        t_query = time.perf_counter() - t0
-
-        # RMSE of each query against its own tenant's (noise-free) Eq. 21
-        # target sum_j cos(x_j) + offset_t
-        mu = np.array([results[tk][0] for tk in tickets])
-        truth = np.sum(np.cos(Xq), axis=1) + offsets[q_tenants]
+        timeouts = 0
+        if eng is not None:
+            # pipelined: submission itself dispatches blocks ahead
+            # (auto_pump), drain() overlaps packing with device execution
+            t0 = time.perf_counter()
+            tickets = [
+                eng.submit(int(t), Xq[i]) for i, t in enumerate(q_tenants)
+            ]
+            results = eng.drain()
+            t_query = time.perf_counter() - t0
+            served = {
+                tk: i for i, tk in enumerate(tickets)
+                if not results[tk].timed_out
+            }
+            timeouts = len(tickets) - len(served)
+            mu = np.array([results[tk].mu for tk in served])
+            truth = (np.sum(np.cos(Xq), axis=1)
+                     + offsets[q_tenants])[list(served.values())]
+        else:
+            tickets = [
+                router.submit(int(t), Xq[i])
+                for i, t in enumerate(q_tenants)
+            ]
+            t0 = time.perf_counter()
+            results = router.flush()
+            t_query = time.perf_counter() - t0
+            mu = np.array([results[tk][0] for tk in tickets])
+            # RMSE of each query against its own tenant's (noise-free)
+            # Eq. 21 target sum_j cos(x_j) + offset_t
+            truth = np.sum(np.cos(Xq), axis=1) + offsets[q_tenants]
         rmse = float(np.sqrt(np.mean((mu - truth) ** 2)))
         nb = max(1, (queries_per_round + microbatch - 1) // microbatch)
         history.append({
@@ -257,20 +304,26 @@ def serve_fleet(
             "rows_absorbed": absorbed,
             "ingest_s": t_ingest,
             "query_s": t_query,
-            # one aggregate flush is timed, so this is a per-microbatch
-            # MEAN (serve_gp's predict_p50_s is a true per-block median)
+            # one aggregate flush/drain is timed, so this is a
+            # per-microbatch MEAN (serve_gp's predict_p50_s is a true
+            # per-block median)
             "query_mean_s": t_query / nb,
             "queries_per_s": queries_per_round / t_query,
             "rmse": rmse,
+            "timeouts": timeouts,
             "reopt_s": t_reopt,
             "reopt_tenants": n_reopt,
         })
-    return {
+    out = {
         "fit_s": t_fit,
         "tenants": tenants,
         "rounds": history,
         "M": bank.n_features,
+        "engine": engine,
     }
+    if eng is not None:
+        out["latency"] = eng.metrics()
+    return out
 
 
 def main():
@@ -288,6 +341,15 @@ def main():
     ap.add_argument("--microbatch", type=int, default=128)
     ap.add_argument("--reopt-every", type=int, default=0, metavar="K",
                     help="re-optimize stale tenants every K serving rounds")
+    ap.add_argument("--engine", default="pipelined",
+                    choices=["pipelined", "sync"],
+                    help="fleet serving frontend (pipelined FleetEngine "
+                         "vs the strict synchronous loop)")
+    ap.add_argument("--max-in-flight", type=int, default=4,
+                    help="dispatch-ahead depth of the pipelined engine")
+    ap.add_argument("--slo", type=float, default=None, metavar="SECONDS",
+                    help="per-ticket deadline; expired tickets get the "
+                         "timeout sentinel instead of a device slot")
     args = ap.parse_args()
     if args.fleet:
         r = serve_fleet(
@@ -296,10 +358,12 @@ def main():
             queries_per_round=args.queries,
             observations_per_round=args.update_size,
             microbatch=args.microbatch, reopt_every=args.reopt_every,
+            engine=args.engine, max_in_flight=args.max_in_flight,
+            slo_s=args.slo,
         )
         print(
             f"fleet of {r['tenants']} fitted in {r['fit_s']*1e3:.1f} ms "
-            f"(M={r['M']} each)"
+            f"(M={r['M']} each; {r['engine']} engine)"
         )
         for h in r["rounds"]:
             reopt = (
@@ -310,7 +374,17 @@ def main():
                 f"round {h['round']}: ingest {h['rows_absorbed']} rows "
                 f"{h['ingest_s']*1e3:.1f} ms; query mean "
                 f"{h['query_mean_s']*1e3:.2f} ms/microbatch; "
-                f"{h['queries_per_s']:.0f} q/s; rmse {h['rmse']:.4f}{reopt}"
+                f"{h['queries_per_s']:.0f} q/s; rmse {h['rmse']:.4f}"
+                f"{'; ' + str(h['timeouts']) + ' timeouts' if h['timeouts'] else ''}"
+                f"{reopt}"
+            )
+        if "latency" in r:
+            o = r["latency"]["overall"]
+            print(
+                f"engine: p50 {o['p50_s']*1e3:.2f} ms, p99 "
+                f"{o['p99_s']*1e3:.2f} ms per ticket; sustained "
+                f"{o['sustained_qps']:.0f} q/s; {o['expired']} expired; "
+                f"buckets {sorted(r['latency']['bucket_uses'].items())}"
             )
         return
     r = serve_gp(

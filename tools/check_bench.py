@@ -32,10 +32,22 @@ BASELINES = ROOT / "BENCH_baselines.json"
 _ROW_FIELDS = {
     "BENCH_gp_bank.json": {"name", "seconds", "derived"},
     "BENCH_optimize.json": {"name", "seconds", "derived"},
+    "BENCH_serve.json": {"name", "seconds", "derived"},
     "BENCH_expansions.json": {"bench", "expansion", "name", "seconds",
                               "derived"},
 }
 _GENERIC_ROW_FIELDS = {"name", "seconds"}
+
+
+def _field_at(payload, dotted: str):
+    """Resolve a possibly-nested payload field by dotted path
+    (``"qps.pipelined/jnp"`` -> payload["qps"]["pipelined/jnp"])."""
+    cur = payload
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
 
 
 def _flat_parity(d, prefix=""):
@@ -98,6 +110,26 @@ def check_file(path: Path, rules: dict, cfg: dict, errors: list,
     for key in rules.get("parity_keys", []):
         if not any(k.split(".")[0] == key for k in flat):
             errors.append(f"{name}: missing parity record {key!r}")
+
+    # -- gated scalar fields: recorded claims, not timings ------------------
+    # ``min_fields``/``max_fields`` hard-gate dotted payload fields against
+    # committed thresholds (e.g. the serving speedup claim, or "no
+    # non-expired ticket was ever dropped") — these are semantic claims
+    # like parity, NOT machine-speed numbers, so they fail hard.
+    for dotted, lo in rules.get("min_fields", {}).items():
+        v = _field_at(payload, dotted)
+        if not isinstance(v, (int, float)) or not (v >= float(lo)):
+            errors.append(
+                f"{name}: field {dotted} = {v!r} below required minimum "
+                f"{lo:g}"
+            )
+    for dotted, hi in rules.get("max_fields", {}).items():
+        v = _field_at(payload, dotted)
+        if not isinstance(v, (int, float)) or not (v <= float(hi)):
+            errors.append(
+                f"{name}: field {dotted} = {v!r} above allowed maximum "
+                f"{hi:g}"
+            )
 
     # -- required families (the expansions trajectory) ----------------------
     fams_want = set(rules.get("families", []))
