@@ -116,6 +116,45 @@ def serve_rows() -> str:
     return "\n".join(out)
 
 
+def lifecycle_rows() -> str:
+    """Render BENCH_lifecycle.json (the tiered-serving trajectory) as a
+    table + the gated claims, or a placeholder."""
+    path = ROOT / "BENCH_lifecycle.json"
+    if not path.exists():
+        return ("*(no `BENCH_lifecycle.json` yet — run "
+                "`PYTHONPATH=src python -m benchmarks.tenant_churn`)*")
+    try:
+        d = json.loads(path.read_text())
+    except json.JSONDecodeError:
+        return "*(BENCH_lifecycle.json unreadable)*"
+    rows = d.get("results", [])
+    if not rows:
+        return "*(BENCH_lifecycle.json present but empty)*"
+    out = ["| name | seconds | derived |", "|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['name']} | {r['seconds']:.4f} | {r['derived']} |")
+    par = d.get("parity_abs", {})
+    if par:
+        worst = max(
+            (v for rec in par.values() for v in rec.values()), default=0.0
+        )
+        out.append("")
+        out.append(
+            f"Worst paged-vs-resident / downdate-vs-refit parity across "
+            f"{sorted(par)}: **{worst:g}** (gate: ≤1e-5, asserted "
+            f"in-benchmark and by `tools/check_bench.py`)."
+        )
+    life = d.get("lifecycle", {}).get("jnp", {})
+    if life:
+        out.append(
+            f"Lifecycle churn during the run: {life.get('warm_restores', 0)}"
+            f" warm restores, {life.get('evictions', 0)} evictions, "
+            f"{life.get('cold_saves', 0)} cold saves — all through the "
+            f"recompile-free insert/evict path."
+        )
+    return "\n".join(out)
+
+
 def table(cells, mesh: str) -> str:
     rows = [
         "| arch | shape | kind | compute s | memory s | collective s | dominant "
@@ -403,6 +442,34 @@ Current trajectory (acceptance shape B=64/microbatch=64; the speedup and
 no-dropped-tickets claims are HARD gates in `tools/check_bench.py`):
 
 {serve_rows()}
+
+## §Tenant lifecycle (TieredBank)
+
+The fleet made elastic (`src/repro/bank/lifecycle.py::TieredBank`): the
+hot working set stays device-resident in a `GPBank`, everything else
+lives as versioned per-tenant checkpoints
+(`src/repro/checkpoint/gpstate.py` — the manifest carries the GPSpec
+structure + expansion + an omega hash, so restoring into a mismatched
+spec raises exactly like `with_spec`).  A cold tenant's first query
+warm-restores it through the recompile-free `GPBank.insert` (LRU tenant
+evicted to the cold tier); arbitrary paging churn compiles ZERO new
+executables (pinned by tests/test_lifecycle.py with the same jit
+cache-size mechanism as tests/test_gp_bank.py).  Sliding-window
+forgetting ages drifted tenants via the batched rank-k Cholesky
+*downdate* (the mirror of the rank-k update), falling back to a masked
+refit on the retained window when a downdate loses positive
+definiteness — `serve_fleet` wires this to `BankRouter` staleness so
+drifted tenants get aged, then re-optimized:
+
+    PYTHONPATH=src python -m benchmarks.tenant_churn  # writes BENCH_lifecycle.json
+    PYTHONPATH=src python -m repro.launch.serve_gp --fleet 16 --capacity 8 \\
+        --cold-dir /tmp/cold --window 40
+
+Current trajectory (acceptance shape: 16 tenants through 8 hot slots;
+paged-vs-resident and downdate-vs-refit parities are HARD gates in
+`tools/check_bench.py`):
+
+{lifecycle_rows()}
 
 ## §Hyperparameter optimization at fleet scale
 

@@ -26,6 +26,7 @@ def main() -> None:
         roofline_table,
         serve_latency,
         streaming_fit,
+        tenant_churn,
     )
 
     modules = [
@@ -38,6 +39,7 @@ def main() -> None:
         ("gp_bank", gp_bank),                        # fleet bank vs loop of singles
         ("gp_hyperopt", gp_hyperopt),                # fleet hyperopt vs loop
         ("serve_latency", serve_latency),            # pipelined engine vs sync
+        ("tenant_churn", tenant_churn),              # tiered paging + forgetting
         ("roofline_table", roofline_table),          # dry-run summary
     ]
     failed = 0

@@ -1,0 +1,242 @@
+"""Elastic tenant lifecycle: paged serving, cold restores, and forgetting.
+
+The lifecycle claim behind ``repro.bank.TieredBank`` (PR 7): a fleet
+larger than the device can hold serves through a hot/cold tier WITHOUT
+giving up the bank's batched serving economics or its numerics —
+
+* **paged vs resident serving** — a working set that FITS the hot
+  capacity serves through the tier at essentially the resident bank's
+  QPS (the page-through wrapper is a dict touch per call once everyone
+  is hot), and a query batch that pulls tenants out of the cold tier
+  answers within 1e-5 of the never-evicted bank.  The parity is asserted
+  here and recorded for ``tools/check_bench.py`` to gate HARD.
+* **cold-restore latency** — seconds per evict + warm-restore cycle
+  (checkpoint write, manifest-validated load, recompile-free
+  ``GPBank.insert``): the page-in cost a cold tenant's first query pays.
+* **downdate vs refit** — sliding-window forgetting via the batched
+  rank-k Cholesky downdate against the semantically-identical refit on
+  the retained window: the downdate touches O(k) rank-1 sweeps instead
+  of re-factorizing W rows, and its posterior must match the refit to
+  1e-5 (asserted + gated).
+
+Everything lands in ``BENCH_lifecycle.json``.
+
+  PYTHONPATH=src python -m benchmarks.tenant_churn [--smoke | --full]
+
+Smoke and full keep the same acceptance shape (B=16 tenants through
+capacity=8); full runs more queries, more paging cycles, and the pallas
+backend too.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bank import GPBank, TieredBank
+from repro.data import make_gp_dataset
+
+from .common import bench_spec, emit, time_loop
+
+ROOT = Path(__file__).resolve().parents[1]
+JSON_PATH = ROOT / "BENCH_lifecycle.json"
+
+# acceptance shape: 16 tenants served through 8 hot slots.  N=40 rows
+# and noise=0.1 are the downdate-stable shapes the tests pin
+# (tests/test_lifecycle.py::TestForgetting); k=6 keeps the max error
+# across all 16 tenants at ~4e-6, 2.5x inside the 1e-5 parity gate
+# (k=8 sits right at the gate at this fleet width).
+B, N_ROWS, P, N_MERCER = 16, 40, 2, 6
+CAPACITY = 8
+K_FORGET = 6
+MICROBATCH = 64
+
+
+def _fleet(backend: str, *, seed: int = 0):
+    spec = bench_spec("hermite", P, n=N_MERCER,
+                      num_features=(N_MERCER ** P) // 2, backend=backend,
+                      seed=seed, noise=0.1)
+    Xb = np.zeros((B, N_ROWS, P), np.float32)
+    yb = np.zeros((B, N_ROWS), np.float32)
+    for s in range(B):
+        X, y, *_ = make_gp_dataset(N_ROWS, P, seed=seed + s)
+        Xb[s], yb[s] = np.asarray(X), np.asarray(y)
+    return jnp.asarray(Xb), jnp.asarray(yb), spec
+
+
+def _workload(nq: int, tenant_pool, *, seed: int = 0):
+    """Query batches whose DISTINCT tenants fit a hot tier of CAPACITY
+    slots (``ensure_hot`` refuses wider batches by design)."""
+    rng = np.random.default_rng(seed)
+    pool = list(tenant_pool)
+    batches = []
+    for lo in range(0, nq, MICROBATCH):
+        q = min(MICROBATCH, nq - lo)
+        ids = [pool[int(i)] for i in rng.integers(0, len(pool), q)]
+        Xq = rng.uniform(-1, 1, size=(q, P)).astype(np.float32)
+        batches.append((ids, jnp.asarray(Xq)))
+    return batches
+
+
+def _serve(front, batches):
+    for ids, Xq in batches:
+        mu, var = front.mean_var(ids, Xq)
+    jax.block_until_ready((mu, var))
+
+
+def run(full: bool = False, smoke: bool = False):
+    nq = 1024 if smoke else (8192 if full else 4096)
+    cycles = 16 if smoke else (96 if full else 48)
+    repeats = 3 if smoke else 5
+    backends = ["jnp", "pallas"] if full else ["jnp"]
+
+    results = []
+
+    def record(name, seconds, derived=""):
+        results.append({"name": name, "seconds": seconds, "derived": derived})
+
+    parity = {}
+    qps = {}
+    lifecycle = {}
+
+    for backend in backends:
+        Xb, yb, spec = _fleet(backend)
+        resident = GPBank.fit(Xb, yb, spec)
+        tmp = tempfile.TemporaryDirectory(prefix="tenant_churn_")
+        tiered = TieredBank.fit(Xb, yb, spec, cold_dir=tmp.name,
+                                capacity=CAPACITY)
+        tag = f"B={B};cap={CAPACITY};nq={nq}"
+
+        # -- parity: paged (evict -> cold -> warm-restore) vs resident ------
+        # the verification batch deliberately spans both tiers, so every
+        # answer it gets went through at least one page-in
+        cold_ids = tiered.cold_tenants[:CAPACITY]
+        vbatches = _workload(256, cold_ids, seed=7)
+        mu_p, var_p, mu_r, var_r = [], [], [], []
+        for ids, Xq in vbatches:
+            mp, vp = tiered.mean_var(ids, Xq)
+            mr, vr = resident.mean_var(ids, Xq)
+            mu_p.append(np.asarray(mp)); var_p.append(np.asarray(vp))
+            mu_r.append(np.asarray(mr)); var_r.append(np.asarray(vr))
+        pkey = (f"paged_vs_resident/{backend}" if backend != "jnp"
+                else "paged_vs_resident")
+        parity[pkey] = {
+            "mean_abs": float(np.max(np.abs(np.concatenate(mu_p)
+                                            - np.concatenate(mu_r)))),
+            "var_abs": float(np.max(np.abs(np.concatenate(var_p)
+                                           - np.concatenate(var_r)))),
+        }
+        assert parity[pkey]["mean_abs"] <= 1e-5 \
+            and parity[pkey]["var_abs"] <= 1e-5, parity[pkey]
+
+        # -- serving QPS: working set fits the hot tier ---------------------
+        hot_ids = tiered.hot_tenants
+        batches = _workload(nq, hot_ids, seed=1)
+        tiered.ensure_hot(hot_ids)            # steady state: no paging
+        t_res = time_loop(lambda: _serve(resident, batches),
+                          repeats=repeats)
+        t_tier = time_loop(lambda: _serve(tiered, batches),
+                          repeats=repeats)
+        qps[f"resident/{backend}"] = nq / t_res
+        qps[f"paged/{backend}"] = nq / t_tier
+        emit(f"churn/{backend}-resident-serve", t_res, tag)
+        emit(f"churn/{backend}-paged-serve", t_tier,
+             f"{tag};overhead={t_tier / t_res:.2f}x")
+        record(f"{backend}-resident-serve", t_res, tag)
+        record(f"{backend}-paged-serve", t_tier, tag)
+
+        # -- cold-restore latency: evict + warm-restore cycles --------------
+        # every page_in below misses (the pool cycles over 2x capacity),
+        # so each one pays a checkpoint write (the eviction) + a
+        # manifest-validated load + the recompile-free insert
+        pool = tiered.tenants
+        t0 = time_loop(
+            lambda: [tiered.page_in(pool[(i * 3 + 1) % len(pool)])
+                     if not tiered.is_hot(pool[(i * 3 + 1) % len(pool)])
+                     else None
+                     for i in range(cycles)],
+            warmup=1, repeats=repeats,
+        )
+        per_restore = t0 / cycles
+        emit(f"churn/{backend}-cold-restore", per_restore,
+             f"cycles={cycles}")
+        record(f"{backend}-cold-restore", per_restore, f"cycles={cycles}")
+        lifecycle[backend] = dict(tiered.stats)
+
+        # -- forgetting: batched rank-k downdate vs window refit ------------
+        ids = list(range(B))
+        down, ok = resident.downdate(ids, Xb[:, :K_FORGET], yb[:, :K_FORGET])
+        assert bool(np.all(ok)), "downdate lost PD at the bench shape"
+        refit = resident.refit_window(ids, Xb[:, K_FORGET:],
+                                      yb[:, K_FORGET:])
+        fbatches = _workload(256, ids[:CAPACITY], seed=11)
+        mu_d, var_d, mu_f, var_f = [], [], [], []
+        for bids, Xq in fbatches:
+            md, vd = down.mean_var(bids, Xq)
+            mf, vf = refit.mean_var(bids, Xq)
+            mu_d.append(np.asarray(md)); var_d.append(np.asarray(vd))
+            mu_f.append(np.asarray(mf)); var_f.append(np.asarray(vf))
+        fkey = (f"downdate_vs_refit/{backend}" if backend != "jnp"
+                else "downdate_vs_refit")
+        parity[fkey] = {
+            "mean_abs": float(np.max(np.abs(np.concatenate(mu_d)
+                                            - np.concatenate(mu_f)))),
+            "var_abs": float(np.max(np.abs(np.concatenate(var_d)
+                                           - np.concatenate(var_f)))),
+        }
+        assert parity[fkey]["mean_abs"] <= 1e-5 \
+            and parity[fkey]["var_abs"] <= 1e-5, parity[fkey]
+
+        t_down = time_loop(
+            lambda: jax.block_until_ready(
+                resident.downdate(ids, Xb[:, :K_FORGET],
+                                  yb[:, :K_FORGET])[0].stack.chol
+            ),
+            repeats=repeats,
+        )
+        t_refit = time_loop(
+            lambda: jax.block_until_ready(
+                resident.refit_window(ids, Xb[:, K_FORGET:],
+                                      yb[:, K_FORGET:]).stack.chol
+            ),
+            repeats=repeats,
+        )
+        ftag = f"B={B};k={K_FORGET};W={N_ROWS - K_FORGET}"
+        emit(f"churn/{backend}-downdate", t_down, ftag)
+        emit(f"churn/{backend}-refit-window", t_refit,
+             f"{ftag};downdate_speedup={t_refit / t_down:.2f}x")
+        record(f"{backend}-downdate", t_down, ftag)
+        record(f"{backend}-refit-window", t_refit, ftag)
+
+        tmp.cleanup()
+
+    emit("churn/json-written", 0.0,
+         f"paged_overhead={qps['resident/jnp'] / qps['paged/jnp']:.2f}x")
+
+    payload = {
+        "schema": 1,
+        "smoke": bool(smoke),
+        "config": {"B": B, "n_rows": N_ROWS, "p": P, "n": N_MERCER,
+                   "capacity": CAPACITY, "k_forget": K_FORGET,
+                   "queries": nq, "cycles": cycles,
+                   "microbatch": MICROBATCH, "repeats": repeats},
+        "results": results,
+        "parity_abs": parity,
+        "qps": qps,
+        "lifecycle": lifecycle,
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def main():
+    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,22 +2,27 @@
 
 ``GPBank`` keeps B independent fitted GP sessions device-resident as one
 stacked ``FAGPState`` and drives fit / mixed-tenant mean_var / rank-k
-update for the whole fleet with single batched executables;
-``BankRouter`` coalesces per-tenant query and observation queues into the
-padded fixed-shape batches the bank wants; ``FleetEngine`` pipelines the
-router — dispatch-ahead blocks, per-tenant deadlines with the documented
-timeout sentinel, queue-budget backpressure, arrival-rate bucket
-autotuning, and p50/p99/QPS observability.  See ``bank.bank`` and
-``bank.engine`` for the design notes.
+update (and its forgetting mirror, rank-k downdate) for the whole fleet
+with single batched executables; ``BankRouter`` coalesces per-tenant query
+and observation queues into the padded fixed-shape batches the bank wants;
+``FleetEngine`` pipelines the router — dispatch-ahead blocks, per-tenant
+deadlines with the documented timeout sentinel, queue-budget backpressure,
+arrival-rate bucket autotuning, and p50/p99/QPS observability.
+``TieredBank`` makes the fleet elastic: versioned per-tenant checkpoints
+form a cold tier, cold tenants warm-restore on demand through the
+recompile-free insert path, and sliding-window forgetting ages drifted
+tenants via the batched downdate.  See ``bank.bank``, ``bank.engine`` and
+``bank.lifecycle`` for the design notes.
 """
 from .bank import GPBank
 from .engine import (
     TIMEOUT_MU, TIMEOUT_VAR, FleetEngine, LatencyStats, QueueFull,
     TicketResult,
 )
+from .lifecycle import TieredBank
 from .router import BankRouter
 
 __all__ = [
     "GPBank", "BankRouter", "FleetEngine", "LatencyStats", "QueueFull",
-    "TicketResult", "TIMEOUT_MU", "TIMEOUT_VAR",
+    "TicketResult", "TieredBank", "TIMEOUT_MU", "TIMEOUT_VAR",
 ]

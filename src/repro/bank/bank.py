@@ -128,6 +128,115 @@ _bank_update_scatter_donated = jax.jit(
     _bank_update_scatter_impl, donate_argnums=(0, 1, 2)
 )
 
+# relative positive-definiteness guard for the rank-1 downdate sweep: a
+# pivot whose downdated square drops below this fraction of its original
+# square is declared lost (f32 eps is ~1.2e-7; anything this small is
+# noise-dominated and the refit fallback takes over)
+_DOWNDATE_TOL = 1e-6
+
+
+def _chol_rank1_downdate(L: jax.Array, w: jax.Array):
+    """Cholesky of L L^T - w w^T, O(M^2) — the mirror of
+    ``fagp._chol_rank1_update``'s LINPACK sweep with hyperbolic instead of
+    Givens rotations.  Unlike additions, downdates can LOSE positive
+    definiteness (w outside the column space, or f32 cancellation);
+    returns ``(L', ok)`` where ``ok=False`` flags a pivot that went
+    nonpositive — the caller must discard L' and refit from retained data.
+    A zero w (masked row) is an exact identity: r = |Lkk|, c = 1, s = 0."""
+    M = L.shape[0]
+    ar = jnp.arange(M)
+
+    def step(carry, k):
+        L, w, ok = carry
+        Lkk = L[k, k]
+        wk = w[k]
+        r2 = Lkk * Lkk - wk * wk
+        ok = ok & (r2 > _DOWNDATE_TOL * Lkk * Lkk)
+        r = jnp.sqrt(jnp.maximum(r2, jnp.float32(1e-30)))
+        c = r / Lkk
+        s = wk / Lkk
+        col = L[:, k]
+        below = ar > k
+        newcol = jnp.where(below, (col - s * w) / c, col).at[k].set(r)
+        w = jnp.where(below, c * w - s * newcol, w)
+        return (L.at[:, k].set(newcol), w, ok), None
+
+    (L, _, ok), _ = jax.lax.scan(step, (L, w, jnp.bool_(True)), ar)
+    return L, ok
+
+
+def _downdate_arrays(chol, b, sqrtlam, noise, Phi_rm, y_rm):
+    """Array-level rank-K downdate core: (chol, b) -> (chol', b', u', ok).
+
+    Removes K previously-absorbed rows from the factorization —
+    B' = B - sum_k v_k v_k^T with v_k = D phi_k / sigma — via sequential
+    rank-1 hyperbolic sweeps (there is no safe refactorization shortcut:
+    forming B' by subtraction and re-Cholesky-ing silently NaNs on lost
+    positive definiteness, while the sweep detects it per pivot).  ``ok``
+    is False when ANY sweep lost a pivot; the outputs are then garbage by
+    contract and the caller falls back to a masked refit from the retained
+    window."""
+    sig2 = noise**2
+    W = Phi_rm * sqrtlam[None, :] / noise
+
+    def one(carry, w):
+        L, ok = carry
+        L2, ok2 = _chol_rank1_downdate(L, w)
+        return (L2, ok & ok2), None
+
+    (chol, ok), _ = jax.lax.scan(one, (chol, jnp.bool_(True)), W)
+    b = b - Phi_rm.T @ y_rm
+    u = fagp._solve_mean_weights(chol, sqrtlam, b, sig2)
+    return chol, b, u, ok
+
+
+@jax.jit
+def _bank_downdate_scatter(chol_s, u_s, b_s, sqrtlam_s, noise_g, slots,
+                           Phi_g, y_g, mask_g):
+    """The downdate mirror of ``_bank_update_scatter``: gather slot
+    states, remove the masked rank-k rows per group, scatter back.  Groups
+    that lost positive definiteness (and fully-masked padding groups)
+    write their gathered values back VERBATIM — a failed downdate must
+    leave the slot untouched so the refit fallback starts from consistent
+    state.  Returns the stacked leaves plus a (G,) ``ok`` flag per group
+    (padding groups report ok: nothing to remove succeeded trivially)."""
+    Phi_g = Phi_g * mask_g[..., None]
+    y_g = y_g * mask_g
+    ch, bb, uu, ok = jax.vmap(_downdate_arrays)(
+        chol_s[slots], b_s[slots], sqrtlam_s[slots], noise_g, Phi_g, y_g
+    )
+    real = jnp.max(mask_g, axis=1) > 0
+    good = ok & real
+    ch = jnp.where(good[:, None, None], ch, chol_s[slots])
+    uu = jnp.where(good[:, None], uu, u_s[slots])
+    bb = jnp.where(good[:, None], bb, b_s[slots])
+    return (chol_s.at[slots].set(ch), u_s.at[slots].set(uu),
+            b_s.at[slots].set(bb), ok | ~real)
+
+
+@jax.jit
+def _bank_refit_scatter(chol_s, u_s, b_s, lam_s, sqrtlam_s, slots,
+                        Xg, yg, maskg, eps_g, rho_g, noise_g, spec, idx):
+    """Masked refit of selected slots from retained window data, scattered
+    back into the stack — the fallback leg of sliding-window forgetting
+    (and a general repair path).  Rides ``_bank_hetero_refit`` so every
+    group refits under its own slot's hyperparameters (identical to the
+    shared values in a homogeneous bank).  Fully-masked padding groups
+    write their gathered values back verbatim, so the group axis can be
+    padded to a fixed shape bucket without touching real slots."""
+    lam, sqrtlam, chol, u, b = _bank_hetero_refit(
+        Xg, yg, maskg, eps_g, rho_g, noise_g, spec, idx
+    )
+    real = jnp.max(maskg, axis=1) > 0
+    chol = jnp.where(real[:, None, None], chol, chol_s[slots])
+    u = jnp.where(real[:, None], u, u_s[slots])
+    b = jnp.where(real[:, None], b, b_s[slots])
+    lam = jnp.where(real[:, None], lam, lam_s[slots])
+    sqrtlam = jnp.where(real[:, None], sqrtlam, sqrtlam_s[slots])
+    return (chol_s.at[slots].set(chol), u_s.at[slots].set(u),
+            b_s.at[slots].set(b), lam_s.at[slots].set(lam),
+            sqrtlam_s.at[slots].set(sqrtlam))
+
 
 @jax.jit
 def _write_slot(chol_s, u_s, b_s, lam_s, sqrtlam_s, slot, chol, u, b, lam,
@@ -687,6 +796,139 @@ class GPBank:
             noise_g, slots, Phi_g, yk, mask,
         )
         stack = dataclasses.replace(self.stack, chol=chol, u=u, b=b)
+        new = dataclasses.replace(self, stack=stack)
+        self._carry_binv_into(new, slots)
+        return new
+
+    # -- sliding-window forgetting (rank-k downdate + refit fallback) -------
+
+    def downdate(self, tenant_ids, Xk: jax.Array, yk: jax.Array,
+                 mask: Optional[jax.Array] = None):
+        """Batched rank-k FORGET: group g removes previously-absorbed rows
+        (Xk[g], yk[g]) from tenant ``tenant_ids[g]``'s factorization — the
+        mirror of :meth:`update` via hyperbolic rank-1 downdate sweeps.
+        ``mask`` (G, k) zeroes padded rows.  Tenants must be distinct
+        within one call (the scatter would race).
+
+        Returns ``(bank, ok)`` where ``ok`` is a host (G,) bool array:
+        groups whose downdate lost positive definiteness kept their slot
+        UNCHANGED (ok False) — re-factorize them from retained data with
+        :meth:`refit_window`.  ``TieredBank.age`` drives both legs."""
+        Xk = jnp.asarray(Xk)
+        yk = jnp.asarray(yk)
+        if Xk.ndim != 3 or yk.shape != Xk.shape[:2]:
+            raise ValueError(
+                f"GPBank.downdate wants Xk (G, k, p) and yk (G, k); got "
+                f"{Xk.shape} and {yk.shape}"
+            )
+        ids = list(tenant_ids)
+        if len(set(ids)) != len(ids):
+            raise ValueError(
+                f"duplicate tenant in one downdate batch ({ids!r}): the "
+                f"scattered writes would collide — split into rounds"
+            )
+        if len(ids) != Xk.shape[0]:
+            raise ValueError(
+                f"one tenant id per downdate group: got {len(ids)} ids "
+                f"for {Xk.shape[0]} groups"
+            )
+        return self._downdate_at_slots(self._slots_for(ids), Xk, yk, mask)
+
+    def _downdate_at_slots(self, slots: jax.Array, Xk: jax.Array,
+                           yk: jax.Array,
+                           mask: Optional[jax.Array] = None):
+        """Slot-addressed core of :meth:`downdate` — the fixed-shape entry
+        for ``TieredBank.age``'s bucketed group axis (fully-masked padding
+        groups on distinct slots are exact identity writes and report
+        ok)."""
+        G, k, p = Xk.shape
+        fagp._check_p(self.spec, p)
+        if mask is None:
+            mask = jnp.ones((G, k), Xk.dtype)
+        else:
+            mask = jnp.asarray(mask).astype(Xk.dtype)
+            if mask.shape != (G, k):
+                raise ValueError(
+                    f"mask must be (G, k) = {(G, k)}, got {mask.shape}"
+                )
+        backend = fagp._check_backend_support(self.spec)
+        if self.hypers is not None:
+            Phi_g = _hetero_group_features(
+                self.stack, Xk, self.hypers.eps[slots],
+                self.hypers.rho[slots],
+            )
+            noise_g = self.hypers.noise[slots]
+        else:
+            aux = fagp._backend_aux(backend, self.stack.idx, self.spec)
+            Phi_g = backend.features(
+                Xk.reshape(G * k, p), self.spec, self.stack.idx, aux,
+            ).reshape(G, k, -1)
+            noise_g = jnp.broadcast_to(
+                jnp.asarray(self.stack.params.noise, jnp.float32), (G,)
+            )
+        chol, u, b, ok = _bank_downdate_scatter(
+            self.stack.chol, self.stack.u, self.stack.b, self.stack.sqrtlam,
+            noise_g, slots, Phi_g, yk, mask,
+        )
+        stack = dataclasses.replace(self.stack, chol=chol, u=u, b=b)
+        new = dataclasses.replace(self, stack=stack)
+        self._carry_binv_into(new, slots)
+        return new, np.asarray(ok)
+
+    def refit_window(self, tenant_ids, Xw: jax.Array, yw: jax.Array,
+                     mask: Optional[jax.Array] = None) -> "GPBank":
+        """Re-factorize ``tenant_ids`` from scratch on their RETAINED
+        window data (Xw (G, W, p), yw (G, W), mask (G, W) for ragged
+        windows) — each under its own slot's hyperparameters, per-slot
+        eigenvalue rows rewritten.  The fallback for downdates that lost
+        positive definiteness, and the exact semantic reference the
+        downdate is gated against (<= 1e-5, benchmarks/tenant_churn.py)."""
+        Xw = jnp.asarray(Xw)
+        yw = jnp.asarray(yw)
+        if Xw.ndim != 3 or yw.shape != Xw.shape[:2]:
+            raise ValueError(
+                f"GPBank.refit_window wants Xw (G, W, p) and yw (G, W); "
+                f"got {Xw.shape} and {yw.shape}"
+            )
+        ids = list(tenant_ids)
+        if len(set(ids)) != len(ids):
+            raise ValueError(
+                f"duplicate tenant in one refit batch ({ids!r})"
+            )
+        if len(ids) != Xw.shape[0]:
+            raise ValueError(
+                f"one tenant id per refit group: got {len(ids)} ids for "
+                f"{Xw.shape[0]} groups"
+            )
+        return self._refit_at_slots(self._slots_for(ids), Xw, yw, mask)
+
+    def _refit_at_slots(self, slots: jax.Array, Xw: jax.Array,
+                        yw: jax.Array,
+                        mask: Optional[jax.Array] = None) -> "GPBank":
+        """Slot-addressed core of :meth:`refit_window` (fixed-shape entry;
+        fully-masked padding groups leave their slots untouched)."""
+        G, W, p = Xw.shape
+        fagp._check_p(self.spec, p)
+        if mask is None:
+            mask = jnp.ones((G, W), Xw.dtype)
+        else:
+            mask = jnp.asarray(mask).astype(Xw.dtype)
+            if mask.shape != (G, W):
+                raise ValueError(
+                    f"mask must be (G, W) = {(G, W)}, got {mask.shape}"
+                )
+        hyp = self._stacked_hypers()
+        spec_r = self.spec.replace(
+            block_rows=min(self.spec.block_rows, max(1, W))
+        )
+        st = self.stack
+        chol, u, b, lam, sqrtlam = _bank_refit_scatter(
+            st.chol, st.u, st.b, st.lam, st.sqrtlam, slots,
+            Xw, yw, mask, hyp.eps[slots], hyp.rho[slots], hyp.noise[slots],
+            spec_r, st.idx,
+        )
+        stack = dataclasses.replace(st, chol=chol, u=u, b=b, lam=lam,
+                                    sqrtlam=sqrtlam)
         new = dataclasses.replace(self, stack=stack)
         self._carry_binv_into(new, slots)
         return new

@@ -194,6 +194,20 @@ class FleetEngine:
     auto_pump:     dispatch opportunistically from :meth:`submit` once a
                    bucketful is waiting (the steady-state pipelining
                    mode); disable for manual pump/harvest control.
+    tiered:        a :class:`~repro.bank.TieredBank` fronting the router's
+                   bank with a cold tier.  With it, :meth:`submit` /
+                   :meth:`observe` accept COLD tenants: the engine pages
+                   them in through the tier (recompile-free warm restore;
+                   the LRU victim goes to the cold tier) and swaps the
+                   restored bank into the router.  In-flight blocks are
+                   never stalled by a page-in — banks are immutable, so
+                   already-dispatched futures keep computing against the
+                   pre-swap stack while new dispatches see the new one
+                   (the dispatch cache is keyed on bank identity).
+                   Tenants with pending or in-flight work are pinned
+                   against eviction.  :meth:`ingest` additionally feeds
+                   absorbed rows into the tier's sliding-window
+                   bookkeeping.
     clock:         injectable monotonic clock (tests drive deadlines
                    deterministically with a fake one).
     """
@@ -208,6 +222,7 @@ class FleetEngine:
         default_slo_s: Optional[float] = None,
         slo_s: Optional[Mapping[Hashable, float]] = None,
         auto_pump: bool = True,
+        tiered=None,
         clock: Callable[[], float] = time.perf_counter,
     ):
         if max_in_flight < 1:
@@ -220,6 +235,9 @@ class FleetEngine:
         self.default_slo_s = default_slo_s
         self.slo_s = dict(slo_s or {})
         self.auto_pump = bool(auto_pump)
+        self.tiered = tiered
+        if tiered is not None and tiered.bank is not router.bank:
+            tiered.adopt(router.bank)
         self._clock = clock
         self.stats = LatencyStats()
         self.buckets = _pow2_buckets(router.microbatch, max_coalesce)
@@ -264,18 +282,57 @@ class FleetEngine:
 
     # -- admission ----------------------------------------------------------
 
+    def _page_in(self, tenant: Hashable) -> None:
+        """Warm-restore a cold tenant through the tier and swap the
+        restored bank into the router.  Tenants with pending or in-flight
+        work (queries AND queued observations) are pinned — evicting one
+        would fail its eventual dispatch/ingest.  Never stalls in-flight
+        blocks: their futures hold the old immutable stack."""
+        t = self.tiered
+
+        def pins():
+            p = {m[0] for m in self._meta.values()}
+            p.update(self.router._observations)
+            return p
+
+        t.adopt(self.router.bank)
+        try:
+            t.page_in(tenant, pinned=pins())
+        except RuntimeError:
+            # every hot slot pinned.  All engine pins are SOFT: queued
+            # observations can be absorbed now (early ingest), and
+            # pending/in-flight queries can be run to completion — their
+            # results go back into the done-buffer, so every ticket stays
+            # redeemable by the next harvest.  In-flight blocks are never
+            # cancelled; they complete against the old immutable stack.
+            # (This fallback fires only at full pin coverage — normal
+            # paging never waits on in-flight work.)
+            if self.router._observations:
+                self.ingest()
+            if self.router.pending or self._in_flight:
+                # NB: harvest() swaps self._done for a fresh dict, so the
+                # drain must complete before the buffer is looked up
+                redeemed = self.drain()
+                self._done.update(redeemed)
+            t.adopt(self.router.bank)
+            t.page_in(tenant, pinned=pins())
+        self.router.bank = t.bank
+
     def submit(self, tenant: Hashable, x, *,
                deadline_s: Optional[float] = None) -> int:
         """Enqueue one query row; returns a ticket redeemed by a later
         :meth:`harvest` / :meth:`drain`.  Raises :class:`QueueFull` when
         the queue budget is exhausted (backpressure — nothing is
-        enqueued)."""
+        enqueued).  With a :attr:`tiered` store, a cold tenant is paged
+        in here (before admission charges anything)."""
         pending = len(self.router._pending)
         if pending + self._rows_in_flight >= self.queue_budget:
             raise QueueFull(
                 f"queue depth {pending + self._rows_in_flight} is at the "
                 f"budget ({self.queue_budget}); harvest or raise the budget"
             )
+        if self.tiered is not None and tenant not in self.router.bank.slots:
+            self._page_in(tenant)
         now = self._clock()
         ticket = self.router.submit(tenant, x)
         if deadline_s is None:
@@ -299,14 +356,41 @@ class FleetEngine:
         return ticket
 
     def observe(self, tenant: Hashable, x, y) -> None:
-        """Enqueue one observation (delegates to the router)."""
+        """Enqueue one observation (delegates to the router; a cold
+        tenant is paged in first when a :attr:`tiered` store exists)."""
+        if self.tiered is not None and tenant not in self.router.bank.slots:
+            self._page_in(tenant)
         self.router.observe(tenant, x, y)
 
     def ingest(self) -> int:
         """Absorb pending observations (``BankRouter.ingest``: batched,
         bucketed, failure-restoring — and donating old stack buffers when
-        the router was built with ``donate_updates=True``)."""
-        return self.router.ingest()
+        the router was built with ``donate_updates=True``).  With a
+        :attr:`tiered` store, absorbed rows also enter the tier's
+        sliding-window bookkeeping (so :meth:`TieredBank.age` can forget
+        them later) and the updated bank is adopted back — even on a
+        mid-ingest failure, the rows earlier rounds DID absorb are
+        recorded before the error propagates."""
+        if self.tiered is None:
+            return self.router.ingest()
+        before = {
+            t: list(rows) for t, rows in self.router._observations.items()
+        }
+        try:
+            return self.router.ingest()
+        finally:
+            # rows absorbed = queued-before minus restored-after (a failed
+            # round restores its own and all still-queued rows in order,
+            # so what remains is a suffix of what was there)
+            after = self.router._observations
+            for t, rows in before.items():
+                absorbed = rows[: len(rows) - len(after.get(t, []))]
+                if absorbed:
+                    self.tiered.record_rows(
+                        t, np.stack([x for x, _ in absorbed]),
+                        np.asarray([yv for _, yv in absorbed], np.float32),
+                    )
+            self.tiered.adopt(self.router.bank)
 
     # -- bucket autotuning --------------------------------------------------
 

@@ -1,0 +1,522 @@
+"""TieredBank — elastic tenant lifecycle in front of a fixed-capacity bank.
+
+A :class:`~repro.bank.GPBank` is a *cache*: ``capacity`` device-resident
+slots, full stop.  The ROADMAP north-star (millions of tenants) needs an
+elastic *store*: the working set stays hot on the device, everything else
+lives as versioned checkpoints on disk, and membership churn moves O(M^2)
+summary statistics — never raw training rows — between the tiers (the
+compact-summary structure of PAPERS.md, arXiv 1305.5826).
+
+``TieredBank`` fronts a ``GPBank`` with exactly that:
+
+* **Cold tier** — per-tenant versioned checkpoints through
+  :mod:`repro.checkpoint.gpstate`: each save lands as
+  ``<cold_dir>/<tenant>/step_<version>`` with a manifest carrying the
+  GPSpec structure + expansion + omega hash; restoring into a bank with a
+  mismatched spec raises exactly like ``with_spec`` does.  Heterogeneous
+  hyperparameters ride along (the unstacked state's spec carries its
+  slot's own eps/rho/noise), so a tenant that was optimized, evicted and
+  warm-restored serves under the hyperparameters it learned.
+* **Hot/cold paging** — :meth:`mean_var` / :meth:`update` on a cold
+  tenant warm-restore it through the existing recompile-free
+  ``GPBank.insert`` (jitted slot write with a *traced* index), evicting
+  the least-recently-used hot tenant to the cold tier when the bank is
+  full.  Arbitrary paging churn compiles ZERO new executables — pinned by
+  tests/test_lifecycle.py with the same ``_cache_size`` mechanism as
+  tests/test_gp_bank.py.
+* **Sliding-window forgetting** — :meth:`age` removes each tenant's rows
+  beyond the newest ``window`` via the batched rank-k Cholesky *downdate*
+  (``GPBank.downdate``, the mirror of PR 1's rank-k update), falling back
+  to a masked refit from the retained window (``GPBank.refit_window``)
+  for any tenant whose downdate lost positive definiteness.  Both legs
+  run on power-of-two shape buckets (group axis padded with fully-masked
+  identity groups), so forgetting churn is also compile-stable.
+  ``serve_fleet`` wires this to ``BankRouter``'s staleness counters:
+  drifted tenants get aged, then re-optimized.
+
+The bank reference is owned here between external swaps: a serving stack
+that mutates the bank elsewhere (``BankRouter.ingest`` /
+``reoptimize``) hands the new bank back via :meth:`adopt` —
+``FleetEngine`` does this automatically when constructed with
+``tiered=``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import urllib.parse
+from collections import OrderedDict
+from pathlib import Path
+from typing import Hashable, Iterable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import gpstate
+from repro.core import fagp
+
+from .bank import GPBank
+
+__all__ = ["TieredBank"]
+
+
+def _tenant_key(tenant: Hashable) -> str:
+    """Filesystem-safe, reversible directory name for a tenant id.  The
+    cold tier must enumerate its tenants from disk alone, so ids are
+    restricted to the round-trippable types (int, str)."""
+    if isinstance(tenant, bool):
+        raise TypeError("bool tenant ids cannot live in a cold tier")
+    if isinstance(tenant, (int, np.integer)):
+        return f"i{int(tenant)}"
+    if isinstance(tenant, str):
+        return "s" + urllib.parse.quote(tenant, safe="")
+    raise TypeError(
+        f"cold-tier tenant ids must be int or str (got "
+        f"{type(tenant).__name__}): the tier is enumerated from directory "
+        f"names, which must round-trip"
+    )
+
+
+def _tenant_from_key(key: str) -> Hashable:
+    if key.startswith("i"):
+        return int(key[1:])
+    if key.startswith("s"):
+        return urllib.parse.unquote(key[1:])
+    raise ValueError(f"not a tenant key: {key!r}")
+
+
+def _pow2_bucket(n: int, cap: int) -> int:
+    return min(cap, 1 << max(0, n - 1).bit_length())
+
+
+class TieredBank:
+    """See module docstring.  Not thread-safe; one instance per serving
+    loop, and between :meth:`adopt` calls it assumes it is the only
+    writer of its bank.
+
+    bank:     the hot tier (any constructed ``GPBank``).
+    cold_dir: root of the cold tier (created if missing).  A directory
+              that already holds checkpoints contributes its tenants as
+              cold immediately — the tier is durable across processes.
+    window:   sliding-window length W; 0 disables forgetting.  With
+              W > 0, rows ingested through :meth:`update` /
+              :meth:`record_rows` are tracked per tenant (host-side), and
+              :meth:`age` downdates everything older than the newest W
+              rows.  Window buffers ride cold checkpoints as ``extra``
+              arrays, so paging preserves forgetting state.
+    """
+
+    def __init__(self, bank: GPBank, cold_dir, *, window: int = 0):
+        if window < 0:
+            raise ValueError(f"window must be >= 0, got {window}")
+        self._bank = bank
+        self.cold_dir = Path(cold_dir)
+        self.cold_dir.mkdir(parents=True, exist_ok=True)
+        self.window = int(window)
+        self._lru: OrderedDict = OrderedDict((t, None) for t in bank.slots)
+        self._cold: set = set()
+        for p in self.cold_dir.iterdir():
+            if p.is_dir() and gpstate.latest_version(p) is not None:
+                t = _tenant_from_key(p.name)
+                if t not in bank.slots:
+                    self._cold.add(t)
+        # per-tenant absorbed rows, oldest first: [(x (p,), y), ...] —
+        # the forgetting bookkeeping (window > 0 only)
+        self._rows: dict = {}
+        # lifecycle counters (observability + benchmark surface)
+        self.stats = {
+            "cold_saves": 0, "warm_restores": 0, "evictions": 0,
+            "downdated_rows": 0, "refit_fallbacks": 0,
+        }
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def fit(
+        cls,
+        Xb,
+        yb,
+        spec,
+        *,
+        cold_dir,
+        capacity: Optional[int] = None,
+        window: int = 0,
+        tenant_ids: Optional[Sequence[Hashable]] = None,
+        mask=None,
+    ) -> "TieredBank":
+        """Fit B tenants into a tiered store with ``capacity`` hot slots:
+        the first ``capacity`` tenants stay device-resident, the rest are
+        fitted in batched chunks (same executable: the tenant axis is
+        padded to the hot capacity with fully-masked slots) and written
+        straight to the cold tier.  Window buffers are seeded from the fit
+        rows, so :meth:`age` counts them."""
+        Xb = jnp.asarray(Xb)
+        yb = jnp.asarray(yb)
+        B, N, p = Xb.shape
+        ids = list(range(B)) if tenant_ids is None else list(tenant_ids)
+        if len(ids) != B:
+            raise ValueError(f"need {B} tenant ids, got {len(ids)}")
+        cap = B if capacity is None else int(capacity)
+        if cap < 1:
+            raise ValueError(f"capacity must be >= 1, got {cap}")
+        hot_n = min(cap, B)
+        mask = None if mask is None else jnp.asarray(mask)
+
+        def seg(lo, hi):
+            m = None if mask is None else mask[lo:hi]
+            return Xb[lo:hi], yb[lo:hi], m
+
+        Xh, yh, mh = seg(0, hot_n)
+        bank = GPBank.fit(Xh, yh, spec, mask=mh, tenant_ids=ids[:hot_n],
+                          capacity=cap)
+        tb = cls(bank, cold_dir, window=window)
+        if window:
+            tb._seed_rows(ids[:hot_n], Xh, yh, mh)
+        # remaining tenants: chunked batched fits through a scratch bank,
+        # each chunk padded to hot_n tenants (one executable), then saved
+        # cold.  The scratch bank is discarded; only checkpoints remain.
+        for lo in range(hot_n, B, hot_n):
+            hi = min(lo + hot_n, B)
+            Xc, yc, mc = seg(lo, hi)
+            n_real = hi - lo
+            if n_real < hot_n:     # pad the tenant axis with masked slots
+                padm = jnp.zeros((hot_n - n_real, N), Xb.dtype)
+                mc = jnp.ones((n_real, N), Xb.dtype) if mc is None else mc
+                mc = jnp.concatenate([mc, padm])
+                Xc = jnp.concatenate(
+                    [Xc, jnp.zeros((hot_n - n_real, N, p), Xb.dtype)]
+                )
+                yc = jnp.concatenate(
+                    [yc, jnp.zeros((hot_n - n_real, N), yb.dtype)]
+                )
+            scratch = GPBank.fit(Xc, yc, spec,
+                                 mask=mc, tenant_ids=range(hot_n))
+            for j in range(n_real):
+                t = ids[lo + j]
+                rows_extra = None
+                if window:
+                    rows = tb._rows_from(Xc[j], yc[j],
+                                         None if mc is None else mc[j])
+                    rows_extra = tb._rows_extra(rows)
+                gpstate.save_state(tb._cold_path(t), scratch.state(j),
+                                   extra=rows_extra)
+                tb._cold.add(t)
+                tb.stats["cold_saves"] += 1
+        return tb
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def bank(self) -> GPBank:
+        """The hot tier.  Serving stacks read this; anything that swaps
+        the bank elsewhere must hand the result back via :meth:`adopt`."""
+        return self._bank
+
+    @property
+    def spec(self):
+        return self._bank.spec
+
+    @property
+    def capacity(self) -> int:
+        return self._bank.capacity
+
+    @property
+    def hot_tenants(self) -> list:
+        return self._bank.tenants
+
+    @property
+    def cold_tenants(self) -> list:
+        return sorted(self._cold, key=repr)
+
+    @property
+    def tenants(self) -> list:
+        return self.hot_tenants + self.cold_tenants
+
+    def __len__(self) -> int:
+        return len(self._bank.slots) + len(self._cold)
+
+    def __contains__(self, tenant: Hashable) -> bool:
+        return tenant in self._bank.slots or tenant in self._cold
+
+    def is_hot(self, tenant: Hashable) -> bool:
+        return tenant in self._bank.slots
+
+    def version(self, tenant: Hashable) -> Optional[int]:
+        """Newest cold-tier version of ``tenant`` (None when never
+        saved)."""
+        return gpstate.latest_version(self._cold_path(tenant))
+
+    def _cold_path(self, tenant: Hashable) -> Path:
+        return self.cold_dir / _tenant_key(tenant)
+
+    # -- window bookkeeping (host-side) --------------------------------------
+
+    @staticmethod
+    def _rows_from(X, y, mask) -> list:
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float32)
+        keep = (np.ones(len(y), bool) if mask is None
+                else np.asarray(mask) > 0)
+        return [(X[i].copy(), float(y[i])) for i in np.flatnonzero(keep)]
+
+    @staticmethod
+    def _rows_extra(rows: list) -> Optional[dict]:
+        if not rows:
+            return None
+        return {
+            "win_x": np.stack([x for x, _ in rows]).astype(np.float32),
+            "win_y": np.asarray([y for _, y in rows], np.float32),
+        }
+
+    def _seed_rows(self, ids, Xb, yb, mask) -> None:
+        for j, t in enumerate(ids):
+            self._rows[t] = self._rows_from(
+                Xb[j], yb[j], None if mask is None else mask[j]
+            )
+
+    def record_rows(self, tenant: Hashable, X, y, mask=None) -> None:
+        """Append absorbed rows to ``tenant``'s window bookkeeping without
+        touching the factorization — for rows that were ingested through
+        an external path (``BankRouter.ingest``; ``FleetEngine`` calls
+        this from its tiered ingest).  No-op when ``window == 0``."""
+        if not self.window:
+            return
+        self._rows.setdefault(tenant, []).extend(
+            self._rows_from(np.atleast_2d(np.asarray(X, np.float32)),
+                            np.atleast_1d(np.asarray(y, np.float32)), mask)
+        )
+
+    # -- cold tier: save / evict / restore -----------------------------------
+
+    def save(self, tenant: Hashable) -> int:
+        """Checkpoint a HOT tenant to the cold tier without evicting it
+        (versioned: every save appends history).  Returns the version."""
+        st = self._bank.state(tenant)      # hetero spec rides along
+        ver = gpstate.save_state(
+            self._cold_path(tenant), st,
+            extra=self._rows_extra(self._rows.get(tenant, [])),
+        )
+        self.stats["cold_saves"] += 1
+        return ver
+
+    def evict_to_cold(self, tenant: Hashable) -> int:
+        """Save ``tenant``'s current state as a new cold version, then
+        free its hot slot (``GPBank.evict`` — recompile-free).  Returns
+        the version written."""
+        ver = self.save(tenant)
+        self._bank = self._bank.evict(tenant)
+        self._lru.pop(tenant, None)
+        self._cold.add(tenant)
+        self.stats["evictions"] += 1
+        return ver
+
+    def _evict_victim(self, pinned: frozenset) -> None:
+        for t in self._lru:            # oldest-touched first
+            if t not in pinned:
+                self.evict_to_cold(t)
+                return
+        raise RuntimeError(
+            f"cannot page in: all {self.capacity} hot slots are pinned "
+            f"(pending or in-flight work); raise the capacity or drain "
+            f"first"
+        )
+
+    def page_in(self, tenant: Hashable, *,
+                pinned: Iterable[Hashable] = ()) -> None:
+        """Warm-restore a cold tenant into a hot slot, evicting the LRU
+        unpinned tenant to the cold tier if the bank is full.  The restore
+        rides the recompile-free ``GPBank.insert`` (jitted traced-slot
+        write): arbitrary paging churn compiles nothing new.  The
+        checkpoint manifest is validated against the bank's spec structure
+        BEFORE any array loads — a stale checkpoint from a different
+        expansion/truncation/omega raises, like ``with_spec``."""
+        if tenant in self._bank.slots:
+            return
+        if tenant not in self._cold:
+            raise KeyError(
+                f"tenant {tenant!r} is in neither tier (hot: "
+                f"{self.hot_tenants!r}; {len(self._cold)} cold)"
+            )
+        _, st, extra = gpstate.load_state(
+            self._cold_path(tenant), like_spec=self._bank.spec,
+        )
+        if self._bank.hypers is None and any(
+            not fagp._leaf_equal(getattr(st.spec, f),
+                                 getattr(self._bank.spec, f))
+            for f in ("eps", "rho", "noise")
+        ):
+            # a tenant that learned its own hyperparameters (PR 5) cannot
+            # join a homogeneous bank; promote the bank to heterogeneous
+            # (per-slot overlay materialized once).  One-time serving-path
+            # recompile — warm both paths up front if churn must stay
+            # compile-free.
+            self._bank = dataclasses.replace(
+                self._bank, hypers=self._bank._stacked_hypers()
+            )
+        if bool(np.all(self._bank.active)):     # no free slot: make one
+            self._evict_victim(frozenset(pinned) | {tenant})
+        self._bank = self._bank.insert(tenant, st)
+        self._cold.discard(tenant)
+        self._lru[tenant] = None
+        self._lru.move_to_end(tenant)
+        if self.window and "win_x" in extra:
+            self._rows[tenant] = self._rows_from(
+                extra["win_x"], extra["win_y"], None
+            )
+        self.stats["warm_restores"] += 1
+
+    def ensure_hot(self, tenants, *,
+                   pinned: Iterable[Hashable] = ()) -> None:
+        """Page in every cold tenant in ``tenants`` (deduplicated, first
+        appearance first).  All of them are implicitly pinned — a batch
+        can never evict one of its own members to admit another."""
+        want = list(dict.fromkeys(tenants))
+        if len(want) > self.capacity:
+            raise ValueError(
+                f"batch touches {len(want)} distinct tenants but only "
+                f"{self.capacity} hot slots exist; split the batch"
+            )
+        pin = frozenset(pinned) | set(want)
+        for t in want:
+            if t not in self._bank.slots:
+                self.page_in(t, pinned=pin)
+
+    def adopt(self, bank: GPBank) -> None:
+        """Hand back a bank that was swapped outside this tier (router
+        ingest / reoptimize).  Membership metadata is re-synced
+        defensively; per-tenant window buffers key on tenant ids, so they
+        survive any swap that keeps ids stable."""
+        self._bank = bank
+        for t in list(self._lru):
+            if t not in bank.slots:
+                del self._lru[t]
+        for t in bank.slots:
+            if t not in self._lru:
+                self._lru[t] = None
+
+    def _touch(self, tenants) -> None:
+        for t in dict.fromkeys(tenants):
+            if t in self._lru:
+                self._lru.move_to_end(t)
+
+    # -- serving (page-through wrappers) -------------------------------------
+
+    def mean_var(self, tenant_ids, Xq):
+        """Mixed-tenant ``mean_var`` over BOTH tiers: cold tenants are
+        warm-restored first (members of the batch are pinned against each
+        other), then one batched hot call answers everything."""
+        ids = list(tenant_ids)
+        self.ensure_hot(ids)
+        self._touch(ids)
+        return self._bank.mean_var(ids, Xq)
+
+    def update(self, tenant_ids, Xk, yk, mask=None) -> GPBank:
+        """Batched rank-k ingest over both tiers: cold tenants page in,
+        then one ``GPBank.update`` absorbs every group.  Absorbed rows
+        enter the window bookkeeping (mask-aware).  Returns the new hot
+        bank (also adopted internally)."""
+        ids = list(tenant_ids)
+        self.ensure_hot(ids)
+        self._touch(ids)
+        self._bank = self._bank.update(ids, Xk, yk, mask)
+        if self.window:
+            Xk = np.asarray(Xk)
+            yk = np.asarray(yk)
+            for g, t in enumerate(ids):
+                self._rows.setdefault(t, []).extend(self._rows_from(
+                    Xk[g], yk[g], None if mask is None else np.asarray(mask)[g]
+                ))
+        return self._bank
+
+    def insert(self, tenant: Hashable, source) -> None:
+        """Admit a NEW tenant (id unknown to both tiers), evicting the LRU
+        hot tenant to the cold tier when the bank is full.  ``source`` is
+        anything ``GPBank.insert`` takes; (X, y) tuples additionally seed
+        the window bookkeeping."""
+        if tenant in self:
+            raise ValueError(f"tenant {tenant!r} already in the tier")
+        _tenant_key(tenant)            # fail before mutating on bad ids
+        if bool(np.all(self._bank.active)):
+            self._evict_victim(frozenset({tenant}))
+        self._bank = self._bank.insert(tenant, source)
+        self._lru[tenant] = None
+        self._lru.move_to_end(tenant)
+        if self.window and isinstance(source, tuple):
+            X, y = source
+            self._rows[tenant] = self._rows_from(X, y, None)
+
+    # -- sliding-window forgetting -------------------------------------------
+
+    def age(self, tenant_ids=None) -> dict:
+        """Forget everything older than each tenant's newest ``window``
+        rows: one bucketed batched rank-k downdate for every over-window
+        tenant, then one bucketed masked refit from the retained window
+        for any group whose downdate lost positive definiteness.  Cold
+        tenants in ``tenant_ids`` are paged in first (aging is a
+        factorization rewrite).  Returns
+        ``{"aged": [...], "forgotten_rows": n, "refit": [...]}``."""
+        out = {"aged": [], "forgotten_rows": 0, "refit": []}
+        if not self.window:
+            return out
+        cands = list(dict.fromkeys(
+            self.tenants if tenant_ids is None else tenant_ids
+        ))
+        over = [t for t in cands
+                if len(self._rows.get(t, ())) > self.window]
+        if not over:
+            return out
+        self.ensure_hot(over)
+        self._touch(over)
+        W = self.window
+        p = self.spec.p
+        excess = {t: self._rows[t][:-W] for t in over}
+        kmax = _pow2_bucket(max(len(r) for r in excess.values()),
+                            1 << 30)
+        G = len(over)
+        bucket = _pow2_bucket(G, self.capacity)
+        slots = [self._bank.slot_of(t) for t in over]
+        Xg = np.zeros((bucket, kmax, p), np.float32)
+        yg = np.zeros((bucket, kmax), np.float32)
+        mg = np.zeros((bucket, kmax), np.float32)
+        for g, t in enumerate(over):
+            rows = excess[t]
+            for i, (x, yv) in enumerate(rows):
+                Xg[g, i], yg[g, i], mg[g, i] = x, yv, 1.0
+        used = set(slots)
+        free = (s for s in range(self.capacity) if s not in used)
+        for _ in range(bucket - G):    # identity padding on distinct slots
+            slots.append(next(free))
+        bank, ok = self._bank._downdate_at_slots(
+            jnp.asarray(np.asarray(slots, np.int32)),
+            jnp.asarray(Xg), jnp.asarray(yg), jnp.asarray(mg),
+        )
+        self._bank = bank
+        failed = [t for g, t in enumerate(over) if not ok[g]]
+        if failed:
+            # refit the survivors' factorizations from their retained
+            # window (ragged: tenants keep exactly W rows here, but stay
+            # mask-general), same bucketing discipline
+            Gf = len(failed)
+            fbucket = _pow2_bucket(Gf, self.capacity)
+            fslots = [self._bank.slot_of(t) for t in failed]
+            Xw = np.zeros((fbucket, W, p), np.float32)
+            yw = np.zeros((fbucket, W), np.float32)
+            mw = np.zeros((fbucket, W), np.float32)
+            for g, t in enumerate(failed):
+                rows = self._rows[t][-W:]
+                for i, (x, yv) in enumerate(rows):
+                    Xw[g, i], yw[g, i], mw[g, i] = x, yv, 1.0
+            fused = set(fslots)
+            ffree = (s for s in range(self.capacity) if s not in fused)
+            for _ in range(fbucket - Gf):
+                fslots.append(next(ffree))
+            self._bank = self._bank._refit_at_slots(
+                jnp.asarray(np.asarray(fslots, np.int32)),
+                jnp.asarray(Xw), jnp.asarray(yw), jnp.asarray(mw),
+            )
+            self.stats["refit_fallbacks"] += Gf
+        for t in over:
+            self._rows[t] = self._rows[t][-W:]
+        n_forgot = sum(len(r) for r in excess.values())
+        self.stats["downdated_rows"] += n_forgot
+        out.update(aged=over, forgotten_rows=n_forgot, refit=failed)
+        return out

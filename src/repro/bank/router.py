@@ -239,7 +239,7 @@ class BankRouter:
 
     # -- staleness + periodic re-optimization -------------------------------
 
-    def stale_tenants(self, min_rows: int) -> list:
+    def stale_tenants(self, min_rows: int, *, retain=()) -> list:
         """Tenants that absorbed at least ``min_rows`` observations since
         their hyperparameters were last optimized (insertion order) — the
         candidates for the next :meth:`reoptimize` round.
@@ -249,9 +249,18 @@ class BankRouter:
         inheriting its previous life's count.  (An evict + same-id
         re-insert that happens entirely between two router calls is
         indistinguishable from the tenant never leaving — swap banks
-        through a fresh router if that distinction matters.)"""
+        through a fresh router if that distinction matters.)
+
+        ``retain`` names tenants whose counters survive even while absent
+        from the bank: a :class:`~repro.bank.TieredBank` pages tenants to
+        a cold tier and back, and a cold tenant's drift record must not
+        reset just because it was evicted for capacity (pass
+        ``retain=tiered.tenants``).  Retained-but-cold tenants are still
+        never RETURNED as stale — they are not servable until paged in."""
+        keep = set(retain)
         self._since_reopt = {
-            t: c for t, c in self._since_reopt.items() if t in self.bank.slots
+            t: c for t, c in self._since_reopt.items()
+            if t in self.bank.slots or t in keep
         }
         return [
             t for t in self.bank.slots

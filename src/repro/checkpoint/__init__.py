@@ -2,14 +2,24 @@
 
 * Arbitrary pytrees are flattened to path-keyed npz (bf16 stored as a u16
   view with a dtype manifest — numpy has no native bf16).
-* Writes go to ``<dir>/tmp.<step>`` then ``os.replace`` to ``step_<n>`` —
-  a crash mid-write never corrupts the latest checkpoint.
+* Writes go to ``<dir>/tmp.<step>.<pid>`` then ``os.replace`` to
+  ``step_<n>`` — a crash mid-write never corrupts the latest checkpoint,
+  and a killed writer's staging leftovers are ignored and reaped by the
+  next ``latest_step``/``restore`` once the pid is verifiably gone.
 * ``restore`` returns host arrays; pass ``shardings`` to place them onto the
   *current* mesh — sharding is recomputed from the logical rules at restore
   time, never baked into the file, which is what makes restarts elastic
   (restore onto a different device count / mesh shape just works).
 * ``AsyncCheckpointer`` overlaps serialization with the next train steps.
+* ``gpstate`` layers versioned, spec-validated GP-session serialization on
+  top (``GP.save``/``GP.load`` and the ``TieredBank`` cold tier): the
+  manifest carries the GPSpec structure + an omega hash, and restoring
+  into a mismatched spec raises like ``with_spec`` does.
 """
+from .gpstate import load_state, save_state
 from .store import AsyncCheckpointer, latest_step, restore, save
 
-__all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
+__all__ = [
+    "save", "restore", "latest_step", "AsyncCheckpointer",
+    "save_state", "load_state",
+]

@@ -1,0 +1,240 @@
+"""Versioned, spec-validated (de)serialization of fitted GP sessions.
+
+A fitted :class:`~repro.core.fagp.FAGPState` is O(M^2) summary statistics
+(chol/u/b) plus the hyperparameter leaves of its baked
+:class:`~repro.core.fagp.GPSpec` — small enough to page between device,
+disk and machines (the compact-summary structure of PAPERS.md, arXiv
+1305.5826).  This module writes that state through the generic atomic
+checkpoint store (:mod:`repro.checkpoint.store`) with a manifest carrying
+the spec's STRUCTURE — expansion family, truncation, and a sha256 of any
+RFF spectral draws — so a restore into an incompatible spec raises exactly
+like ``FAGPState.with_spec`` does today, instead of silently serving a
+factorization under the wrong feature map.
+
+Layout per version: ``<dir>/step_<version>/{arrays.npz, manifest.json}``
+(the store's atomic-rename format); ``save_state`` auto-increments the
+version so every save is durable history, and ``latest_step``/``restore``
+semantics (including dead-writer tmp reaping) come for free.
+
+Consumers: ``GP.save``/``GP.load`` (single sessions) and the cold tier of
+:class:`~repro.bank.TieredBank` (per-tenant paging, with window buffers
+riding along as ``extra`` arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fagp
+from repro.core.fagp import FAGPState, GPSpec
+
+from . import store
+
+__all__ = ["save_state", "load_state", "spec_manifest", "omega_hash"]
+
+FORMAT = "repro.gpstate"
+FORMAT_VERSION = 1
+
+# state leaves serialized for every session (b is guaranteed: bank-less
+# pre-PR-1 states without it are rejected at save time, like banks do)
+_LEAVES = ("lam", "sqrtlam", "chol", "u", "b")
+
+
+def omega_hash(omega) -> Optional[str]:
+    """sha256 over the RFF spectral draws (shape + f32 payload); None for
+    deterministic expansions.  Cheap manifest-level identity for the
+    bank-structure check that ``_check_bankable_hetero`` does by value."""
+    if omega is None:
+        return None
+    arr = np.ascontiguousarray(np.asarray(omega, np.float32))
+    h = hashlib.sha256()
+    h.update(repr(arr.shape).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def spec_manifest(spec: GPSpec) -> dict:
+    """The JSON-safe structural description of a spec: everything needed
+    to rebuild it at load time except the hyperparameter arrays (those are
+    data leaves in the npz)."""
+    return {
+        "expansion": spec.expansion,
+        "n": int(spec.n),
+        "index_set": spec.index_set,
+        "degree": None if spec.degree is None else int(spec.degree),
+        "block_rows": int(spec.block_rows),
+        "store_train": bool(spec.store_train),
+        "backend": spec.backend,
+        "omega_sha256": omega_hash(spec.omega),
+    }
+
+
+def _check_compatible(meta: dict, spec: GPSpec, who: str) -> None:
+    """Raise unless the checkpoint's structural manifest matches ``spec``
+    — the serialized mirror of the with_spec / bank-admission checks."""
+    ms = meta["spec"]
+    for f in fagp._STRUCTURAL_FIELDS:
+        if ms[f] != getattr(spec, f):
+            raise ValueError(
+                f"{who}: checkpoint/spec mismatch: checkpoint was saved "
+                f"with {f}={ms[f]!r} but the target spec has "
+                f"{f}={getattr(spec, f)!r}; structural choices are frozen "
+                f"into the factorization — refit instead of restoring"
+            )
+    if ms["omega_sha256"] != omega_hash(spec.omega):
+        raise ValueError(
+            f"{who}: checkpoint/spec mismatch: the RFF spectral draws "
+            f"(omega) differ from the target spec's; the base frequencies "
+            f"are structural — refit under the target draws"
+        )
+
+
+def save_state(
+    ckpt_dir: str | Path,
+    state: FAGPState,
+    *,
+    step: Optional[int] = None,
+    extra: Optional[dict] = None,
+) -> int:
+    """Serialize one fitted session; returns the version written.
+
+    ``step=None`` auto-increments past the directory's latest version.
+    ``extra`` is an optional dict of host/device arrays stored alongside
+    the state (e.g. the cold tier's sliding-window buffers) and returned
+    verbatim by :func:`load_state`.
+    """
+    spec = state.spec
+    if spec is None:
+        raise ValueError(
+            "save_state needs a spec-carrying state (fit() bakes one in); "
+            "attach one with state.with_spec(spec) first"
+        )
+    if state.b is None:
+        raise ValueError(
+            "save_state: state lacks the raw moment vector b (a pre-PR-1 "
+            "fit path); refit before saving"
+        )
+    if step is None:
+        last = store.latest_step(ckpt_dir)
+        step = 0 if last is None else last + 1
+    tree = {
+        "leaves": {f: getattr(state, f) for f in _LEAVES},
+        "hypers": {"eps": spec.eps, "rho": spec.rho, "noise": spec.noise},
+    }
+    if spec.omega is not None:
+        tree["omega"] = spec.omega
+    has_train = state.Phi is not None and state.y is not None
+    if has_train:
+        tree["train"] = {"Phi": state.Phi, "y": state.y}
+    extra = dict(extra or {})
+    if extra:
+        tree["extra"] = extra
+    meta = {
+        "format": FORMAT,
+        "format_version": FORMAT_VERSION,
+        "spec": spec_manifest(spec),
+        "p": int(spec.p),
+        "M": int(state.n_features),
+        "n_tasks": int(state.n_tasks),
+        "has_train": bool(has_train),
+        "extra_keys": sorted(extra),
+    }
+    store.save(ckpt_dir, step, tree, metadata=meta)
+    return step
+
+
+def _read_manifest(ckpt_dir: Path, step: int) -> dict:
+    d = ckpt_dir / f"step_{step:010d}"
+    if not d.is_dir():
+        raise FileNotFoundError(f"no checkpoint version {step} under {ckpt_dir}")
+    return json.loads((d / "manifest.json").read_text())
+
+
+def load_state(
+    ckpt_dir: str | Path,
+    *,
+    step: Optional[int] = None,
+    like_spec: Optional[GPSpec] = None,
+    require_hypers_match: bool = False,
+) -> tuple[int, FAGPState, dict]:
+    """Restore one session; returns ``(version, state, extra)``.
+
+    The spec is rebuilt from the manifest + saved hyperparameter leaves —
+    bit-exact round trip, omega included.  ``like_spec`` validates the
+    checkpoint against a target spec's STRUCTURE before any array loads
+    (mismatch raises, like ``with_spec``); ``require_hypers_match=True``
+    additionally requires the eps/rho/noise leaves to equal the target's
+    (homogeneous-bank admission; a heterogeneous bank leaves it off).
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = store.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    manifest = _read_manifest(ckpt_dir, step)
+    meta = manifest["metadata"]
+    if meta.get("format") != FORMAT:
+        raise ValueError(
+            f"{ckpt_dir} step {step} is not a {FORMAT} checkpoint "
+            f"(format={meta.get('format')!r})"
+        )
+    if like_spec is not None:
+        _check_compatible(meta, like_spec, "load_state")
+
+    # rebuild a like-tree with the manifest's structure; restore() takes
+    # array shapes from the npz, so placeholders carry structure only
+    z = np.zeros(0, np.float32)
+    like: dict = {
+        "leaves": {f: z for f in _LEAVES},
+        "hypers": {"eps": z, "rho": z, "noise": z},
+    }
+    if meta["spec"]["omega_sha256"] is not None:
+        like["omega"] = z
+    if meta["has_train"]:
+        like["train"] = {"Phi": z, "y": z}
+    if meta["extra_keys"]:
+        like["extra"] = {k: z for k in meta["extra_keys"]}
+    _, tree = store.restore(ckpt_dir, like, step=step)
+
+    ms = meta["spec"]
+    spec = GPSpec(
+        eps=tree["hypers"]["eps"], rho=tree["hypers"]["rho"],
+        noise=tree["hypers"]["noise"], n=ms["n"],
+        index_set=ms["index_set"], degree=ms["degree"],
+        block_rows=ms["block_rows"], store_train=ms["store_train"],
+        backend=ms["backend"], expansion=ms["expansion"],
+        omega=tree.get("omega"),
+    )
+    if like_spec is not None and require_hypers_match:
+        for f in fagp._HYPER_FIELDS:
+            if not fagp._leaf_equal(getattr(spec, f), getattr(like_spec, f)):
+                raise ValueError(
+                    f"load_state: checkpoint hyperparameter {f} differs "
+                    f"from the target spec's; the target shares one "
+                    f"feature map and eigenvalue scaling — refit the "
+                    f"session under it (or restore into a heterogeneous "
+                    f"bank)"
+                )
+    train = tree.get("train", {})
+    state = FAGPState(
+        idx=jnp.asarray(spec.indices()),
+        lam=tree["leaves"]["lam"], sqrtlam=tree["leaves"]["sqrtlam"],
+        chol=tree["leaves"]["chol"], u=tree["leaves"]["u"],
+        params=spec.params, Phi=train.get("Phi"), y=train.get("y"),
+        b=tree["leaves"]["b"], spec=spec,
+    )
+    extra = {
+        k: np.asarray(v) for k, v in tree.get("extra", {}).items()
+    }
+    return step, state, extra
+
+
+def latest_version(ckpt_dir: str | Path) -> Optional[int]:
+    """The newest saved version under ``ckpt_dir`` (None when empty)."""
+    return store.latest_step(ckpt_dir)

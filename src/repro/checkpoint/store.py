@@ -2,6 +2,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 from pathlib import Path
@@ -13,6 +14,31 @@ import numpy as np
 __all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
 
 _SEP = "/"
+_STEP_RE = re.compile(r"^step_(\d+)$")
+_TMP_RE = re.compile(r"^tmp\.(\d+)\.(\d+)$")
+
+
+def _sweep_stale_tmp(ckpt_dir: Path) -> None:
+    """Remove ``tmp.<step>.<pid>`` staging dirs whose writer died mid-write.
+
+    A killed writer (crash, OOM, SIGKILL) leaves its staging dir behind;
+    the atomic ``os.replace`` never ran, so the dir is garbage — but a
+    LIVE writer's staging dir must not be touched.  Our own pid is always
+    skipped (an ``AsyncCheckpointer`` worker thread may be mid-write), and
+    other pids are only reaped when the process is verifiably gone."""
+    for p in ckpt_dir.iterdir():
+        m = _TMP_RE.match(p.name)
+        if m is None or not p.is_dir():
+            continue
+        pid = int(m.group(2))
+        if pid == os.getpid():
+            continue
+        try:
+            os.kill(pid, 0)          # signal 0: existence probe only
+        except ProcessLookupError:
+            shutil.rmtree(p, ignore_errors=True)
+        except PermissionError:
+            pass                     # pid alive under another user
 
 
 def _flatten(tree):
@@ -57,13 +83,18 @@ def save(ckpt_dir: str | Path, step: int, tree: Any, *, metadata: dict | None = 
 
 
 def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    """Highest committed step in ``ckpt_dir`` (None when there is none).
+    Stray ``tmp.*`` staging dirs from killed writers are ignored — only the
+    atomically-renamed ``step_<n>`` dirs count — and verifiably-dead
+    writers' leftovers are reaped on the way."""
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
         return None
+    _sweep_stale_tmp(ckpt_dir)
     steps = [
-        int(p.name.split("_")[1])
+        int(m.group(1))
         for p in ckpt_dir.iterdir()
-        if p.is_dir() and p.name.startswith("step_")
+        if p.is_dir() and (m := _STEP_RE.match(p.name)) is not None
     ]
     return max(steps) if steps else None
 
@@ -76,9 +107,11 @@ def restore(ckpt_dir: str | Path, like: Any, *, step: int | None = None,
     are device_put onto the CURRENT mesh, implementing elastic restore."""
     ckpt_dir = Path(ckpt_dir)
     if step is None:
-        step = latest_step(ckpt_dir)
+        step = latest_step(ckpt_dir)          # also reaps dead-writer tmp dirs
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    elif ckpt_dir.exists():
+        _sweep_stale_tmp(ckpt_dir)
     d = ckpt_dir / f"step_{step:010d}"
     manifest = json.loads((d / "manifest.json").read_text())
     with np.load(d / "arrays.npz") as z:
@@ -114,6 +147,12 @@ class AsyncCheckpointer:
         self._error: Optional[BaseException] = None
 
     def wait(self):
+        """Block until the in-flight write (if any) finishes.  A worker
+        that failed raises its ORIGINAL exception here — a silent worker
+        death would let training run on believing its state is durable.
+        The error is raised exactly once (a later ``wait`` is clean), and
+        ``save`` calls ``wait`` first, so a failure can never be skipped
+        by simply scheduling the next checkpoint."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -131,6 +170,10 @@ class AsyncCheckpointer:
             try:
                 save(self.ckpt_dir, step, host_tree, metadata=metadata)
             except BaseException as e:  # surfaced on next wait()
+                try:
+                    e.add_note(f"async checkpoint of step {step} failed")
+                except AttributeError:
+                    pass
                 self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)

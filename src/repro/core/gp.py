@@ -173,3 +173,30 @@ class GP:
         block_rows); structural changes are rejected (see
         :meth:`FAGPState.with_spec`)."""
         return GP(state=self.state.with_spec(spec, **overrides))
+
+    # -- durability ----------------------------------------------------------
+
+    def save(self, ckpt_dir, *, step: Optional[int] = None) -> int:
+        """Serialize this session under ``ckpt_dir`` (versioned: each save
+        lands as ``step_<version>``; ``step=None`` auto-increments).  The
+        manifest records the spec's structure — expansion, truncation, an
+        omega hash — so :meth:`load` round-trips bit-exactly and a restore
+        into an incompatible spec raises.  Returns the version written."""
+        from repro.checkpoint import gpstate
+
+        return gpstate.save_state(ckpt_dir, self.state, step=step)
+
+    @classmethod
+    def load(cls, ckpt_dir, *, step: Optional[int] = None,
+             spec: Optional[GPSpec] = None) -> "GP":
+        """Restore a session saved by :meth:`save` (``step=None`` loads the
+        newest version).  The spec is rebuilt from the checkpoint itself —
+        hyperparameter leaves, omega draws and all.  Passing ``spec``
+        validates the checkpoint against it (structure AND
+        hyperparameters, like ``with_spec``) and raises on mismatch."""
+        from repro.checkpoint import gpstate
+
+        _, state, _ = gpstate.load_state(
+            ckpt_dir, step=step, like_spec=spec, require_hypers_match=True,
+        )
+        return cls(state=state)

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.bank import BankRouter, FleetEngine, GPBank
+from repro.bank import BankRouter, FleetEngine, GPBank, TieredBank
 from repro.core import fagp
 from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
@@ -152,6 +152,9 @@ def serve_fleet(
     max_in_flight: int = 4,
     queue_budget: int = 4096,
     slo_s: float | None = None,
+    capacity: int | None = None,
+    cold_dir: str | None = None,
+    window: int = 0,
 ) -> dict:
     """Serve a fleet of ``tenants`` small independent GPs concurrently.
 
@@ -178,6 +181,18 @@ def serve_fleet(
     ``GPBank.optimize`` run over their accumulated data
     (``router.reoptimize``) — the bank becomes heterogeneous and each
     tenant serves under its own learned hyperparameters.
+
+    ``cold_dir`` turns the fleet ELASTIC (pipelined engine only): the
+    bank becomes a :class:`~repro.bank.TieredBank` with ``capacity`` hot
+    slots (default: all tenants resident) fronting versioned per-tenant
+    checkpoints under ``cold_dir`` — traffic to cold tenants warm-restores
+    them through the engine, evicting LRU tenants back to disk, with zero
+    new executables across the churn.  ``window > 0`` additionally ages
+    drifted tenants before re-optimization: everything older than each
+    stale tenant's newest ``window`` rows is forgotten via the batched
+    rank-k Cholesky downdate (masked-refit fallback on lost positive
+    definiteness), so re-learned hyperparameters track the CURRENT regime
+    instead of averaging over the tenant's whole history.
     """
     rng = np.random.default_rng(seed)
     spec = GPSpec.create(
@@ -200,15 +215,32 @@ def serve_fleet(
         yb[t] = np.asarray(y_all[:n_train])
         pools.append((np.asarray(X_all), np.asarray(y_all)))
 
-    t0 = time.perf_counter()
-    bank = GPBank.fit(jnp.asarray(Xb), jnp.asarray(yb), spec)
-    jax.block_until_ready(bank.stack.u)
-    t_fit = time.perf_counter() - t0
-
     if engine not in ("pipelined", "sync"):
         raise ValueError(
             f"engine must be 'pipelined' or 'sync', got {engine!r}"
         )
+    if cold_dir is not None and engine != "pipelined":
+        raise ValueError(
+            "a tiered fleet (cold_dir) needs the pipelined engine: the "
+            "sync router fail-fasts on cold tenants instead of paging"
+        )
+    if (capacity is not None or window) and cold_dir is None:
+        raise ValueError(
+            "capacity/window need a cold tier; pass cold_dir"
+        )
+    t0 = time.perf_counter()
+    tiered = None
+    if cold_dir is not None:
+        tiered = TieredBank.fit(
+            jnp.asarray(Xb), jnp.asarray(yb), spec, cold_dir=cold_dir,
+            capacity=capacity, window=window,
+        )
+        bank = tiered.bank
+    else:
+        bank = GPBank.fit(jnp.asarray(Xb), jnp.asarray(yb), spec)
+    jax.block_until_ready(bank.stack.u)
+    t_fit = time.perf_counter() - t0
+
     router = BankRouter(bank, microbatch=microbatch,
                         ingest_chunk=ingest_chunk)
     eng = None
@@ -216,37 +248,60 @@ def serve_fleet(
         eng = FleetEngine(
             router, max_in_flight=max_in_flight,
             queue_budget=queue_budget, default_slo_s=slo_s,
+            tiered=tiered,
         )
     consumed = [n_train] * tenants
     history = []
     for r in range(rounds):
         # -- ingest: each tenant streams a few fresh observations ----------
+        front = eng if eng is not None else router
         for _ in range(observations_per_round):
             t = int(rng.integers(0, tenants))
             X_all, y_all = pools[t]
             i = consumed[t] % X_all.shape[0]
             consumed[t] += 1
-            router.observe(t, X_all[i], y_all[i])
+            front.observe(t, X_all[i], y_all[i])
         t0 = time.perf_counter()
-        absorbed = router.ingest()
+        absorbed = front.ingest()
         jax.block_until_ready(router.bank.stack.u)
         t_ingest = time.perf_counter() - t0
 
         # -- periodic re-optimization of stale tenants ---------------------
-        t_reopt, n_reopt = 0.0, 0
+        t_reopt, n_reopt, n_aged = 0.0, 0, 0
         if reopt_every and (r + 1) % reopt_every == 0:
-            stale = router.stale_tenants(reopt_min_rows)
+            # cold tenants keep their drift counters (retain=) — paging a
+            # tenant out for capacity must not reset its staleness
+            stale = (router.stale_tenants(reopt_min_rows,
+                                          retain=tiered.tenants)
+                     if tiered is not None
+                     else router.stale_tenants(reopt_min_rows))
+            if stale and tiered is not None and window:
+                # age BEFORE re-optimizing: forget rows outside each stale
+                # tenant's sliding window (batched downdate + refit
+                # fallback) so the re-learned hyperparameters fit the
+                # current regime, then re-optimize on the retained window
+                tiered.adopt(router.bank)
+                aged = tiered.age(stale)
+                router.bank = tiered.bank
+                n_aged = aged["forgotten_rows"]
             if stale:
                 # row axis padded to the FIXED pool size (masked): a
                 # max-consumed row count would grow every reopt round and
                 # retrace the lane executables each time.  (The tenant
                 # axis still varies with the stale set — bounded by the
                 # distinct stale-set sizes, not by round count.)
-                n_max = total
+                n_max = window if (tiered is not None and window) else total
                 Xo = np.zeros((len(stale), n_max, p), np.float32)
                 yo = np.zeros((len(stale), n_max), np.float32)
                 mo = np.zeros((len(stale), n_max), np.float32)
                 for i, t in enumerate(stale):
+                    if tiered is not None and window:
+                        # aged fleet: learn from the RETAINED window only
+                        # (the forgotten rows are gone from the
+                        # factorization — the hypers should follow)
+                        for j, (xr, yr) in enumerate(tiered._rows[t]):
+                            Xo[i, j], yo[i, j], mo[i, j] = xr, yr, 1.0
+                        continue
                     X_all, y_all = pools[t]
                     rows = min(consumed[t], X_all.shape[0])
                     Xo[i, :rows] = X_all[:rows]
@@ -261,6 +316,8 @@ def serve_fleet(
                 jax.block_until_ready(router.bank.stack.u)
                 t_reopt = time.perf_counter() - t0
                 n_reopt = len(stale)
+                if tiered is not None:
+                    tiered.adopt(router.bank)
 
         # -- queries: mixed-tenant traffic through the frontend ------------
         q_tenants = rng.integers(0, tenants, queries_per_round)
@@ -313,6 +370,7 @@ def serve_fleet(
             "timeouts": timeouts,
             "reopt_s": t_reopt,
             "reopt_tenants": n_reopt,
+            "aged_rows": n_aged,
         })
     out = {
         "fit_s": t_fit,
@@ -323,6 +381,11 @@ def serve_fleet(
     }
     if eng is not None:
         out["latency"] = eng.metrics()
+    if tiered is not None:
+        out["lifecycle"] = dict(
+            tiered.stats, capacity=tiered.capacity,
+            hot=len(tiered.hot_tenants), cold=len(tiered.cold_tenants),
+        )
     return out
 
 
@@ -350,6 +413,16 @@ def main():
     ap.add_argument("--slo", type=float, default=None, metavar="SECONDS",
                     help="per-ticket deadline; expired tickets get the "
                          "timeout sentinel instead of a device slot")
+    ap.add_argument("--capacity", type=int, default=None, metavar="C",
+                    help="hot slots in a tiered fleet (< --fleet pages "
+                         "the rest to the cold tier); needs --cold-dir")
+    ap.add_argument("--cold-dir", default=None, metavar="DIR",
+                    help="cold-tier checkpoint directory (enables the "
+                         "TieredBank lifecycle; pipelined engine only)")
+    ap.add_argument("--window", type=int, default=0, metavar="W",
+                    help="sliding-window length: before each reopt, "
+                         "forget rows older than each stale tenant's "
+                         "newest W (rank-k downdate); needs --cold-dir")
     args = ap.parse_args()
     if args.fleet:
         r = serve_fleet(
@@ -359,7 +432,8 @@ def main():
             observations_per_round=args.update_size,
             microbatch=args.microbatch, reopt_every=args.reopt_every,
             engine=args.engine, max_in_flight=args.max_in_flight,
-            slo_s=args.slo,
+            slo_s=args.slo, capacity=args.capacity,
+            cold_dir=args.cold_dir, window=args.window,
         )
         print(
             f"fleet of {r['tenants']} fitted in {r['fit_s']*1e3:.1f} ms "
@@ -385,6 +459,15 @@ def main():
                 f"{o['p99_s']*1e3:.2f} ms per ticket; sustained "
                 f"{o['sustained_qps']:.0f} q/s; {o['expired']} expired; "
                 f"buckets {sorted(r['latency']['bucket_uses'].items())}"
+            )
+        if "lifecycle" in r:
+            lc = r["lifecycle"]
+            print(
+                f"lifecycle: {lc['hot']}/{lc['capacity']} hot, "
+                f"{lc['cold']} cold; {lc['warm_restores']} restores, "
+                f"{lc['evictions']} evictions, {lc['cold_saves']} saves; "
+                f"{lc['downdated_rows']} rows forgotten "
+                f"({lc['refit_fallbacks']} refit fallbacks)"
             )
         return
     r = serve_gp(

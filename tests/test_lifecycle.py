@@ -1,0 +1,567 @@
+"""Tests for the elastic tenant lifecycle (PR 7).
+
+Pins the contracts of the TieredBank tentpole and its checkpoint layer:
+  1. versioned GP-session serialization round-trips BIT-exactly for all
+     three expansions (omega leaf included), heterogeneous banks restore
+     per-slot hyperparameter/eigenvalue rows, and restoring into a
+     mismatched spec raises (like ``with_spec``);
+  2. the checkpoint store survives interrupted writes: stray
+     ``tmp.<step>.<pid>`` staging dirs from dead writers are ignored AND
+     reaped by ``latest_step``/``restore``, live writers' dirs are not
+     touched, and ``AsyncCheckpointer`` surfaces worker-thread failures
+     on ``wait()`` (exactly once);
+  3. hot/cold paging: evict -> cold -> warm-restore ``mean_var`` matches
+     the never-evicted bank to <= 1e-5 on BOTH backends (hetero hypers
+     included), arbitrary paging churn compiles ZERO new executables
+     (jit cache-miss counts, the test_gp_bank idiom), and LRU/pinning
+     semantics hold;
+  4. sliding-window forgetting: the batched rank-k Cholesky downdate
+     matches a refit on the retained window to <= 1e-5, lost positive
+     definiteness leaves the slot untouched and routes through the
+     masked-refit fallback, and ``FleetEngine`` pages cold tenants in
+     without stalling in-flight blocks.
+"""
+import os
+import subprocess
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.bank import BankRouter, FleetEngine, GPBank, TieredBank
+from repro.bank import bank as bank_mod
+from repro.checkpoint import gpstate, store
+from repro.core import fagp
+from repro.core.gp import GP, GPSpec
+from repro.data import make_gp_dataset
+
+SEED = 0
+
+
+def _data(N, p, seed=SEED):
+    X, y, *_ = make_gp_dataset(N, p, seed=seed)
+    return jnp.asarray(X), jnp.asarray(y)
+
+
+def _fleet(B, N, p, n, *, seed=SEED, backend="jnp", noise=0.1):
+    spec = GPSpec.create(n, eps=[0.8] * p, rho=2.0, noise=noise,
+                         backend=backend)
+    Xb = np.zeros((B, N, p), np.float32)
+    yb = np.zeros((B, N), np.float32)
+    for s in range(B):
+        X, y = _data(N, p, seed=seed + s)
+        Xb[s], yb[s] = np.asarray(X), np.asarray(y)
+    return jnp.asarray(Xb), jnp.asarray(yb), spec
+
+
+def _dead_pid():
+    """A pid guaranteed not to be running: a just-reaped child's."""
+    proc = subprocess.Popen(["true"])
+    proc.wait()
+    return proc.pid
+
+
+# ---------------------------------------------------------------------------
+# satellite 1+2: store crash-safety + async failure surfacing
+# ---------------------------------------------------------------------------
+
+
+class TestStoreCrashSafety:
+    def test_latest_step_ignores_and_reaps_dead_writer_tmp(self, tmp_path):
+        """An interrupted write (killed writer) leaves tmp.<step>.<pid>;
+        latest_step must not count it as a checkpoint AND must clean it
+        up once the writer is verifiably gone."""
+        store.save(tmp_path, 2, {"a": np.arange(3.0)})
+        stale = tmp_path / f"tmp.7.{_dead_pid()}"
+        stale.mkdir()
+        (stale / "arrays.npz").write_bytes(b"partial garbage")
+        assert store.latest_step(tmp_path) == 2
+        assert not stale.exists()
+
+    def test_live_writer_tmp_is_preserved(self, tmp_path):
+        """Our own pid's staging dir may belong to an in-flight
+        AsyncCheckpointer worker — never reap it."""
+        store.save(tmp_path, 0, {"a": np.arange(3.0)})
+        mine = tmp_path / f"tmp.9.{os.getpid()}"
+        mine.mkdir()
+        assert store.latest_step(tmp_path) == 0
+        assert mine.exists()
+
+    def test_restore_with_explicit_step_sweeps(self, tmp_path):
+        tree = {"a": np.arange(4.0)}
+        store.save(tmp_path, 5, tree)
+        stale = tmp_path / f"tmp.5.{_dead_pid()}"
+        stale.mkdir()
+        step, out = store.restore(tmp_path, tree, step=5)
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(out["a"]), tree["a"])
+        assert not stale.exists()
+
+    def test_non_step_dirs_ignored(self, tmp_path):
+        store.save(tmp_path, 1, {"a": np.zeros(2)})
+        (tmp_path / "step_notanumber").mkdir()
+        (tmp_path / "unrelated").mkdir()
+        assert store.latest_step(tmp_path) == 1
+
+    def test_interrupted_write_never_corrupts_previous(self, tmp_path):
+        """The atomic-rename contract end to end: a stray staging dir for
+        the SAME step does not shadow the committed version."""
+        tree = {"a": np.arange(6.0)}
+        store.save(tmp_path, 3, tree)
+        stale = tmp_path / f"tmp.3.{_dead_pid()}"
+        stale.mkdir()
+        (stale / "manifest.json").write_text("{corrupt")
+        step, out = store.restore(tmp_path, tree)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(out["a"]), tree["a"])
+
+
+class TestAsyncCheckpointerFailure:
+    def test_worker_error_surfaces_on_wait(self, tmp_path, monkeypatch):
+        ac = store.AsyncCheckpointer(tmp_path)
+        boom = RuntimeError("disk exploded")
+
+        def failing_save(*a, **k):
+            raise boom
+
+        monkeypatch.setattr(store, "save", failing_save)
+        ac.save(4, {"a": np.zeros(2)})
+        with pytest.raises(RuntimeError, match="disk exploded") as ei:
+            ac.wait()
+        assert ei.value is boom
+        # raised exactly once: a later wait is clean
+        ac.wait()
+
+    def test_failure_cannot_be_skipped_by_next_save(self, tmp_path,
+                                                    monkeypatch):
+        """save() waits first, so scheduling the next checkpoint cannot
+        silently swallow a prior failure."""
+        ac = store.AsyncCheckpointer(tmp_path)
+        monkeypatch.setattr(
+            store, "save",
+            lambda *a, **k: (_ for _ in ()).throw(OSError("enospc")),
+        )
+        ac.save(0, {"a": np.zeros(2)})
+        with pytest.raises(OSError, match="enospc"):
+            ac.save(1, {"a": np.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: versioned spec-validated round trips
+# ---------------------------------------------------------------------------
+
+
+def _spec_for(expansion, p):
+    if expansion == "hermite":
+        return GPSpec.create(5, eps=[0.8] * p, rho=2.0, noise=0.1)
+    kernel = {"rff_se": "se", "rff_matern52": "matern52"}[expansion]
+    return GPSpec.create_rff([0.8] * p, kernel=kernel, num_features=32,
+                             noise=0.1, seed=3)
+
+
+class TestGPStateRoundTrip:
+    @pytest.mark.parametrize("expansion",
+                             ["hermite", "rff_se", "rff_matern52"])
+    def test_bit_exact_round_trip(self, tmp_path, expansion):
+        """Every state leaf AND every spec data leaf (omega included)
+        round-trips bit-exactly through save/load."""
+        p = 2
+        spec = _spec_for(expansion, p)
+        X, y = _data(48, p)
+        gp = GP.fit(X, y, spec)
+        ver = gp.save(tmp_path)
+        assert ver == 0
+        gp2 = GP.load(tmp_path)
+        for f in ("lam", "sqrtlam", "chol", "u", "b"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(gp.state, f)),
+                np.asarray(getattr(gp2.state, f)), err_msg=f,
+            )
+        for f in ("eps", "rho", "noise", "omega"):
+            a, b = getattr(gp.spec, f), getattr(gp2.spec, f)
+            if a is None:
+                assert b is None
+            else:
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                              err_msg=f)
+        for f in fagp._STRUCTURAL_FIELDS:
+            assert getattr(gp.spec, f) == getattr(gp2.spec, f)
+        # the restored session answers identically
+        Xq, _ = _data(8, p, seed=9)
+        np.testing.assert_array_equal(
+            np.asarray(gp.mean_var(Xq)[0]), np.asarray(gp2.mean_var(Xq)[0])
+        )
+
+    def test_versions_accumulate_and_address(self, tmp_path):
+        p = 2
+        spec = _spec_for("hermite", p)
+        X, y = _data(40, p)
+        gp = GP.fit(X, y, spec)
+        assert gp.save(tmp_path) == 0
+        gp_up = gp.update(*_data(8, p, seed=5))
+        assert gp_up.save(tmp_path) == 1
+        assert gpstate.latest_version(tmp_path) == 1
+        old = GP.load(tmp_path, step=0)
+        new = GP.load(tmp_path)
+        np.testing.assert_array_equal(np.asarray(old.state.u),
+                                      np.asarray(gp.state.u))
+        np.testing.assert_array_equal(np.asarray(new.state.u),
+                                      np.asarray(gp_up.state.u))
+
+    def test_wrong_spec_restore_raises(self, tmp_path):
+        p = 2
+        X, y = _data(40, p)
+        GP.fit(X, y, _spec_for("hermite", p)).save(tmp_path / "h")
+        GP.fit(X, y, _spec_for("rff_se", p)).save(tmp_path / "r")
+        # expansion mismatch
+        with pytest.raises(ValueError, match="structural"):
+            GP.load(tmp_path / "h", spec=_spec_for("rff_se", p))
+        # truncation mismatch within one family
+        with pytest.raises(ValueError, match="structural"):
+            GP.load(tmp_path / "h",
+                    spec=GPSpec.create(7, eps=[0.8] * p, noise=0.1))
+        # same family, different spectral draws
+        other = GPSpec.create_rff([0.8] * p, kernel="se", num_features=32,
+                                  noise=0.1, seed=99)
+        with pytest.raises(ValueError, match="omega"):
+            GP.load(tmp_path / "r", spec=other)
+        # hyperparameter mismatch is rejected when required (GP.load)
+        with pytest.raises(ValueError, match="hyperparameter"):
+            GP.load(tmp_path / "h",
+                    spec=GPSpec.create(5, eps=[0.5] * p, noise=0.1))
+
+    def test_hetero_bank_slots_round_trip_per_slot_rows(self, tmp_path):
+        """A heterogeneous bank's unstacked states carry per-slot
+        (eps, rho, noise) AND per-slot lam/sqrtlam rows; paging one out
+        and back must restore all of them bit-exactly."""
+        Xb, yb, spec = _fleet(3, 32, 2, 4)
+        bank = GPBank.fit(Xb, yb, spec).optimize(
+            Xb, yb, steps=6, restarts=1
+        )
+        tb = TieredBank(bank, tmp_path / "cold")
+        st_before = bank.state(1)
+        tb.evict_to_cold(1)
+        tb.page_in(1)
+        st_after = tb.bank.state(1)
+        for f in ("lam", "sqrtlam", "chol", "u", "b"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st_before, f)),
+                np.asarray(getattr(st_after, f)), err_msg=f,
+            )
+        for f in ("eps", "rho", "noise"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(st_before.spec, f)),
+                np.asarray(getattr(st_after.spec, f)), err_msg=f,
+            )
+
+    def test_cold_checkpoint_from_other_structure_raises(self, tmp_path):
+        """A cold tier written under one expansion cannot page into a bank
+        of another: the manifest check fires before any array load."""
+        p = 2
+        X, y = _data(32, p)
+        cold = tmp_path / "cold"
+        gpstate.save_state(cold / "i0",
+                           GP.fit(X, y, _spec_for("rff_se", p)).state)
+        Xb, yb, spec = _fleet(2, 32, p, 4)
+        bank = GPBank.fit(Xb, yb, spec, tenant_ids=[1, 2], capacity=3)
+        tb = TieredBank(bank, cold)
+        assert 0 in tb.cold_tenants
+        with pytest.raises(ValueError, match="structural"):
+            tb.page_in(0)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: hot/cold paging
+# ---------------------------------------------------------------------------
+
+
+class TestTieredPaging:
+    @pytest.mark.parametrize("backend", ["jnp", "pallas"])
+    def test_evict_cold_restore_parity(self, tmp_path, backend):
+        """evict -> cold -> warm-restore mean_var == never-evicted bank
+        to <= 1e-5 (the acceptance gate), on both backends."""
+        B, N, p, n = 6, 32, 2, 5
+        Xb, yb, spec = _fleet(B, N, p, n, backend=backend)
+        ref = GPBank.fit(Xb, yb, spec)
+        tb = TieredBank.fit(Xb, yb, spec, cold_dir=tmp_path / "cold",
+                            capacity=3)
+        assert tb.cold_tenants == [3, 4, 5]
+        rng = np.random.default_rng(7)
+        Xq = jnp.asarray(rng.uniform(-1, 1, (9, p)).astype(np.float32))
+        ids = [4, 0, 4, 3, 3, 0, 4, 3, 0]      # mixed tiers, 3 distinct
+        mu, var = tb.mean_var(ids, Xq)
+        mur, varr = ref.mean_var(ids, Xq)
+        np.testing.assert_allclose(np.asarray(mu), np.asarray(mur),
+                                   atol=1e-5, rtol=0)
+        np.testing.assert_allclose(np.asarray(var), np.asarray(varr),
+                                   atol=1e-5, rtol=0)
+
+    def test_hetero_evict_restore_parity(self, tmp_path):
+        """Per-slot learned hypers ride the cold tier: a tenant optimized,
+        evicted and restored serves <= 1e-5 of never-evicted."""
+        Xb, yb, spec = _fleet(3, 32, 2, 4)
+        bank = GPBank.fit(Xb, yb, spec).optimize(Xb, yb, steps=6,
+                                                 restarts=1)
+        tb = TieredBank(bank, tmp_path / "cold")
+        rng = np.random.default_rng(8)
+        Xq = jnp.asarray(rng.uniform(-1, 1, (6, p := 2)).astype(np.float32))
+        mu0, var0 = bank.mean_var([2] * 6, Xq)
+        tb.evict_to_cold(2)
+        mu1, var1 = tb.mean_var([2] * 6, Xq)     # pages back in
+        np.testing.assert_allclose(np.asarray(mu1), np.asarray(mu0),
+                                   atol=1e-5, rtol=0)
+        np.testing.assert_allclose(np.asarray(var1), np.asarray(var0),
+                                   atol=1e-5, rtol=0)
+
+    def test_paging_churn_zero_recompiles(self, tmp_path):
+        """Arbitrary evict/restore churn reuses the warm executables:
+        zero jit cache misses across 30 paging cycles (same mechanism as
+        tests/test_gp_bank.py)."""
+        B, N, p, n = 8, 32, 2, 5
+        Xb, yb, spec = _fleet(B, N, p, n)
+        tb = TieredBank.fit(Xb, yb, spec, cold_dir=tmp_path / "cold",
+                            capacity=4)
+        rng = np.random.default_rng(9)
+        Xq = jnp.asarray(rng.uniform(-1, 1, (4, p)).astype(np.float32))
+        for t in range(B):                      # warm every path once
+            tb.mean_var([t] * 4, Xq)
+        writes0 = bank_mod._write_slot._cache_size()
+        serve0 = fagp._bank_gathered_posterior._cache_size()
+        for r in range(30):
+            tb.mean_var([(3 * r + 1) % B] * 4, Xq)
+        assert bank_mod._write_slot._cache_size() == writes0
+        assert fagp._bank_gathered_posterior._cache_size() == serve0
+        assert tb.stats["warm_restores"] >= 20
+
+    def test_lru_eviction_and_pinning(self, tmp_path):
+        Xb, yb, spec = _fleet(4, 32, 2, 4)
+        tb = TieredBank.fit(Xb, yb, spec, cold_dir=tmp_path / "cold",
+                            capacity=2)
+        assert tb.hot_tenants == [0, 1]
+        Xq = jnp.zeros((1, 2), jnp.float32)
+        tb.mean_var([0], Xq)                    # 0 is now most-recent
+        tb.page_in(2)                           # evicts LRU = 1
+        assert not tb.is_hot(1) and tb.is_hot(0) and tb.is_hot(2)
+        tb.page_in(3, pinned=[2])               # 2 pinned -> victim is 0
+        assert tb.is_hot(2) and tb.is_hot(3) and not tb.is_hot(0)
+        with pytest.raises(RuntimeError, match="pinned"):
+            tb.page_in(0, pinned=[2, 3])
+        with pytest.raises(ValueError, match="split the batch"):
+            tb.ensure_hot([0, 1, 2])
+        with pytest.raises(KeyError):
+            tb.page_in("never-seen")
+
+    def test_durable_across_instances(self, tmp_path):
+        """The cold tier is directory state: a NEW TieredBank over the
+        same dir sees the same cold tenants and serves identically."""
+        Xb, yb, spec = _fleet(4, 32, 2, 4)
+        cold = tmp_path / "cold"
+        tb = TieredBank.fit(Xb, yb, spec, cold_dir=cold, capacity=2)
+        Xq = jnp.asarray(
+            np.random.default_rng(3).uniform(-1, 1, (4, 2)).astype(np.float32)
+        )
+        mu0, _ = tb.mean_var([3] * 4, Xq)
+        bank2 = GPBank.create(spec, capacity=2)
+        tb2 = TieredBank(bank2, cold)
+        assert set(tb2.cold_tenants) >= {2, 3}
+        mu1, _ = tb2.mean_var([3] * 4, Xq)
+        np.testing.assert_array_equal(np.asarray(mu0), np.asarray(mu1))
+
+    def test_string_and_bad_tenant_ids(self, tmp_path):
+        Xb, yb, spec = _fleet(2, 32, 2, 4)
+        tb = TieredBank.fit(Xb, yb, spec, cold_dir=tmp_path / "cold",
+                            capacity=2, tenant_ids=["alpha", "b/../c"])
+        tb.evict_to_cold("b/../c")              # quoted: path-safe
+        assert (tb.cold_dir / "sb%2F..%2Fc").exists()
+        tb.page_in("b/../c")
+        assert tb.is_hot("b/../c")
+        with pytest.raises(TypeError, match="int or str"):
+            tb.insert((1, 2), (Xb[0], yb[0]))
+
+
+# ---------------------------------------------------------------------------
+# tentpole: sliding-window forgetting
+# ---------------------------------------------------------------------------
+
+
+class TestForgetting:
+    def test_downdate_matches_refit_on_retained_window(self):
+        """The rank-k downdate == refit on the retained rows to <= 1e-5
+        (mu and var), batched over several tenants at once."""
+        B, N, p, n, k = 4, 40, 2, 6, 8
+        Xb, yb, spec = _fleet(B, N, p, n, noise=0.1)
+        bank = GPBank.fit(Xb, yb, spec)
+        down, ok = bank.downdate(
+            list(range(B)), Xb[:, :k], yb[:, :k]
+        )
+        assert ok.all()
+        refit = bank.refit_window(list(range(B)), Xb[:, k:], yb[:, k:])
+        rng = np.random.default_rng(11)
+        Xq = jnp.asarray(rng.uniform(-1, 1, (12, p)).astype(np.float32))
+        ids = [int(t) for t in rng.integers(0, B, 12)]
+        mu_d, var_d = down.mean_var(ids, Xq)
+        mu_r, var_r = refit.mean_var(ids, Xq)
+        np.testing.assert_allclose(np.asarray(mu_d), np.asarray(mu_r),
+                                   atol=1e-5, rtol=0)
+        np.testing.assert_allclose(np.asarray(var_d), np.asarray(var_r),
+                                   atol=1e-5, rtol=0)
+
+    def test_pd_loss_leaves_slot_untouched_and_flags(self):
+        """Downdating rows that were never absorbed loses positive
+        definiteness: ok=False and the slot is BIT-exactly unchanged."""
+        B, N, p, n = 2, 40, 2, 6
+        Xb, yb, spec = _fleet(B, N, p, n, noise=0.1)
+        bank = GPBank.fit(Xb, yb, spec)
+        bogus_X = jnp.full((1, 8, p), 0.3, jnp.float32)
+        bogus_y = jnp.full((1, 8), 50.0, jnp.float32)
+        new, ok = bank.downdate([0], bogus_X, bogus_y)
+        assert not ok[0]
+        s = bank.slot_of(0)
+        for f in ("chol", "u", "b"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(new.stack, f)[s]),
+                np.asarray(getattr(bank.stack, f)[s]), err_msg=f,
+            )
+
+    def test_age_window_and_refit_fallback(self, tmp_path):
+        """age() forgets rows beyond the window via the downdate, and a
+        PD-losing tenant falls back to the masked refit from its retained
+        window — landing within 1e-5 of a fresh fit on those rows."""
+        B, N, p, n, W = 2, 40, 2, 6, 32
+        Xb, yb, spec = _fleet(B, N, p, n, noise=0.1)
+        tb = TieredBank.fit(Xb, yb, spec, cold_dir=tmp_path / "cold",
+                            window=W)
+        # tenant 1's excess is poisoned with never-absorbed rows -> the
+        # downdate must fail and the refit fallback take over
+        bogus = [(np.full(p, 0.3, np.float32), 50.0)] * 8
+        tb._rows[1] = bogus + tb._rows[1][-W:]
+        out = tb.age()
+        assert set(out["aged"]) == {0, 1}
+        assert out["refit"] == [1]
+        assert tb.stats["refit_fallbacks"] == 1
+        assert all(len(tb._rows[t]) == W for t in (0, 1))
+        # both tenants now factorize exactly their retained windows
+        ref = GPBank.fit(Xb[:, N - W:], yb[:, N - W:], spec)
+        rng = np.random.default_rng(13)
+        Xq = jnp.asarray(rng.uniform(-1, 1, (8, p)).astype(np.float32))
+        for t in (0, 1):
+            mu, var = tb.mean_var([t] * 8, Xq)
+            mur, varr = ref.mean_var([t] * 8, Xq)
+            np.testing.assert_allclose(np.asarray(mu), np.asarray(mur),
+                                       atol=1e-5, rtol=0)
+            np.testing.assert_allclose(np.asarray(var), np.asarray(varr),
+                                       atol=1e-5, rtol=0)
+
+    def test_window_rides_cold_checkpoints(self, tmp_path):
+        """Eviction persists the window buffer; restore resumes forgetting
+        where it left off."""
+        Xb, yb, spec = _fleet(2, 40, 2, 5)
+        tb = TieredBank.fit(Xb, yb, spec, cold_dir=tmp_path / "cold",
+                            window=36)
+        rows_before = [tuple(map(np.asarray, r)) for r in tb._rows[0]]
+        tb.evict_to_cold(0)
+        tb._rows.pop(0, None)
+        tb.page_in(0)
+        assert len(tb._rows[0]) == len(rows_before)
+        np.testing.assert_array_equal(
+            np.stack([x for x, _ in tb._rows[0]]),
+            np.stack([x for x, _ in rows_before]),
+        )
+
+
+# ---------------------------------------------------------------------------
+# tentpole: engine integration
+# ---------------------------------------------------------------------------
+
+
+class TestEnginePaging:
+    def _tiered_engine(self, tmp_path, *, capacity=3, window=0, B=6):
+        Xb, yb, spec = _fleet(B, 32, 2, 5)
+        tb = TieredBank.fit(Xb, yb, spec, cold_dir=tmp_path / "cold",
+                            capacity=capacity, window=window)
+        router = BankRouter(tb.bank, microbatch=8)
+        eng = FleetEngine(router, max_in_flight=2, tiered=tb,
+                          auto_pump=False)
+        ref = GPBank.fit(Xb, yb, spec)
+        return tb, eng, ref
+
+    def test_submit_pages_in_without_stalling_in_flight(self, tmp_path):
+        """A cold tenant's submit pages it in while another tenant's
+        dispatched block stays in flight (immutable banks: the old stack
+        keeps computing), and every ticket lands within 1e-5 of the
+        resident reference."""
+        tb, eng, ref = self._tiered_engine(tmp_path)
+        rng = np.random.default_rng(17)
+        xs = rng.uniform(-1, 1, (16, 2)).astype(np.float32)
+        hot = tb.hot_tenants[0]
+        t_hot = [eng.submit(hot, xs[i]) for i in range(8)]
+        eng.pump(max_blocks=1)
+        assert eng.in_flight_blocks == 1
+        cold = tb.cold_tenants[0]
+        t_cold = [eng.submit(cold, xs[8 + i]) for i in range(8)]
+        assert eng.in_flight_blocks == 1        # page-in did not stall it
+        assert tb.is_hot(cold)
+        assert tb.is_hot(hot)                   # pinned by in-flight work
+        res = eng.drain()
+        for i, tk in enumerate(t_hot + t_cold):
+            t = hot if i < 8 else cold
+            mur, _ = ref.mean_var([t], xs[i][None])
+            assert abs(res[tk].mu - float(mur[0])) <= 1e-5
+
+    def test_full_pin_coverage_drains_and_succeeds(self, tmp_path):
+        """When pending queries pin EVERY hot slot, the engine drains to
+        completion (results stay redeemable) and then pages in."""
+        tb, eng, ref = self._tiered_engine(tmp_path, capacity=2, B=4)
+        rng = np.random.default_rng(19)
+        xs = rng.uniform(-1, 1, (12, 2)).astype(np.float32)
+        tickets, expect = [], []
+        for i in range(12):
+            t = int(rng.integers(0, 4))
+            tickets.append(eng.submit(t, xs[i]))
+            expect.append(t)
+        res = eng.drain()
+        for i, tk in enumerate(tickets):
+            mur, _ = ref.mean_var([expect[i]], xs[i][None])
+            assert abs(res[tk].mu - float(mur[0])) <= 1e-5
+
+    def test_observe_and_ingest_record_window_rows(self, tmp_path):
+        tb, eng, ref = self._tiered_engine(tmp_path, window=40)
+        cold = tb.cold_tenants[0]
+        rng = np.random.default_rng(23)
+        xs = rng.uniform(-1, 1, (3, 2)).astype(np.float32)
+        for i in range(3):
+            eng.observe(cold, xs[i], float(i) * 0.1)
+        assert tb.is_hot(cold)
+        before = len(tb._rows.get(cold, []))
+        assert eng.ingest() == 3
+        assert len(tb._rows[cold]) == before + 3
+        assert eng.router.bank is tb.bank       # adopted back
+        ref2 = ref.update([cold], xs[None],
+                          jnp.asarray([[0.0, 0.1, 0.2]], jnp.float32))
+        Xq = jnp.asarray(xs)
+        mu, _ = tb.mean_var([cold] * 3, Xq)
+        mur, _ = ref2.mean_var([cold] * 3, Xq)
+        np.testing.assert_allclose(np.asarray(mu), np.asarray(mur),
+                                   atol=1e-5, rtol=0)
+
+    def test_router_staleness_retained_for_cold_tenants(self, tmp_path):
+        """A tenant's drift counter survives an evict -> restore cycle
+        when retained (TieredBank fleets), and resets without retain."""
+        Xb, yb, spec = _fleet(3, 32, 2, 4)
+        tb = TieredBank.fit(Xb, yb, spec, cold_dir=tmp_path / "cold")
+        router = BankRouter(tb.bank)
+        router._since_reopt[0] = 20
+        tb.evict_to_cold(0)
+        router.bank = tb.bank
+        assert router.stale_tenants(10, retain=tb.tenants) == []  # cold
+        tb.page_in(0)
+        router.bank = tb.bank
+        assert router.stale_tenants(10, retain=tb.tenants) == [0]
+        # without retain the eviction would have dropped the counter
+        router._since_reopt[1] = 20
+        tb.evict_to_cold(1)
+        router.bank = tb.bank
+        router.stale_tenants(10)
+        tb.page_in(1)
+        router.bank = tb.bank
+        assert router.stale_tenants(10) == [0]   # 1's counter was dropped
