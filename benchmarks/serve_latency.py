@@ -32,19 +32,22 @@ from __future__ import annotations
 
 import json
 import sys
+import tempfile
 import time
 from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.bank import BankRouter, FleetEngine, GPBank
+from repro.bank import BankRouter, FleetEngine, GPBank, TieredBank
 from repro.data import make_gp_dataset
+from repro.obs import MetricsRegistry, Tracer, serving_watchdog
 
 from .common import bench_spec, emit, time_loop
 
 ROOT = Path(__file__).resolve().parents[1]
 JSON_PATH = ROOT / "BENCH_serve.json"
+OBS_JSON_PATH = ROOT / "BENCH_obs.json"
 
 # the acceptance shape: B=64 tenants, n=8, p=2 (M=64), microbatch=64
 B, N_ROWS, P, N_MERCER = 64, 8, 2, 8
@@ -106,7 +109,256 @@ def _deadline_scenario(bank, *, nq: int = 256):
     return timeouts, nq, served_after
 
 
-def run(full: bool = False, smoke: bool = False):
+# churn shape for the zero-recompile gate: 16 tenants paged through 8 hot
+# slots, window = the seeded row count so every aged round forgets exactly
+# the rows observed that round (2/tenant) — the downdate/refit buckets are
+# identical between the warmup rounds and the armed rounds by construction
+CHURN_B, CHURN_CAP, CHURN_ROWS, CHURN_MERCER = 16, 8, 40, 6
+CHURN_OBS_PER_TENANT = 2
+CHURN_AGED = list(range(CHURN_CAP))  # fixed list -> fixed group bucket
+
+
+def _obs_pass(bank, tenants, Xq, *, metrics=None, tracer=None,
+              watchdog=None):
+    router = BankRouter(bank, microbatch=MICROBATCH,
+                        metrics=metrics, tracer=tracer)
+    eng = FleetEngine(router, max_in_flight=MAX_IN_FLIGHT,
+                      max_coalesce=MAX_COALESCE, metrics=metrics,
+                      tracer=tracer, watchdog=watchdog)
+    tickets = [eng.submit(t, x) for t, x in zip(tenants, Xq)]
+    return eng.drain(), tickets, eng
+
+
+def _churn_fleet(cold_dir, *, metrics=None, tracer=None, seed: int = 0):
+    spec = bench_spec("hermite", P, n=CHURN_MERCER,
+                      num_features=(CHURN_MERCER ** P) // 2,
+                      backend="jnp", seed=seed, noise=0.1)
+    Xb = np.zeros((CHURN_B, CHURN_ROWS, P), np.float32)
+    yb = np.zeros((CHURN_B, CHURN_ROWS), np.float32)
+    for s in range(CHURN_B):
+        X, y, *_ = make_gp_dataset(CHURN_ROWS, P, seed=seed + s)
+        Xb[s], yb[s] = np.asarray(X), np.asarray(y)
+    return TieredBank.fit(
+        jnp.asarray(Xb), jnp.asarray(yb), spec, cold_dir=cold_dir,
+        capacity=CHURN_CAP, window=CHURN_ROWS,
+        metrics=metrics, tracer=tracer,
+    )
+
+
+def _churn_round(eng, tb, rng, *, queries: int = 64):
+    """One full lifecycle round: mixed-tenant queries (page-ins included —
+    the fleet is 2x the hot capacity), per-tenant observation ingest, and
+    a sliding-window age of a fixed tenant subset."""
+    tks = [
+        eng.submit(int(rng.integers(0, CHURN_B)),
+                   rng.uniform(-1, 1, P).astype(np.float32))
+        for _ in range(queries)
+    ]
+    out = eng.drain()
+    assert all(out[t].ok for t in tks)
+    for t in range(CHURN_B):
+        for _ in range(CHURN_OBS_PER_TENANT):
+            eng.observe(t, rng.uniform(-1, 1, P).astype(np.float32),
+                        float(rng.normal()))
+    eng.ingest()
+    tb.adopt(eng.router.bank)
+    aged = tb.age(CHURN_AGED)
+    eng.router.bank = tb.bank
+    return aged
+
+
+def run_obs(full: bool = False, smoke: bool = False,
+            trace_out: str | None = None):
+    """The telemetry lanes behind ``BENCH_obs.json``:
+
+    * **overhead** — the acceptance-shape pipelined workload (B=64,
+      microbatch=64) timed twice: once wired to the shared null
+      registry/tracer (the default every serving entrypoint gets) and
+      once fully instrumented (live :class:`MetricsRegistry`, a
+      recording :class:`Tracer`, and an ARMED recompile watchdog
+      checking every pump).  ``overhead_ratio`` = instrumented / null
+      wall time — ``tools/check_bench.py`` gates it <= 1.05 HARD.
+    * **churn watchdog** — a tiered fleet (16 tenants through 8 hot
+      slots, sliding window) runs full submit/observe/page/age rounds
+      with every serving executable registered; after two identical
+      warmup rounds the watchdog arms, and the armed rounds must mint
+      exactly ZERO new executables (``recompiles`` — gated == 0 HARD).
+
+    ``trace_out`` additionally dumps every recorded span (pipeline
+    stages + lifecycle) as Chrome-trace JSONL.
+    """
+    nq = 4096
+    repeats = 12 if smoke else 20
+
+    results = []
+
+    def record(name, seconds, derived=""):
+        results.append({"name": name, "seconds": seconds, "derived": derived})
+
+    # -- overhead lane: instrumented vs null, identical workload ------------
+    bank = _fleet("jnp")
+    tenants, Xq = _workload(nq)
+    tag = f"B={B};mb={MICROBATCH};nq={nq}"
+    # warm EVERY rung of the coalesce ladder before anything is timed or
+    # armed: an armed repeat must never be the first to visit a rung.
+    # One fresh engine per rung — a cold arrival EWMA makes the pending
+    # count alone pick the bucket, so each rung is actually dispatched
+    # (a long-lived warmer's arrival-rate heuristic skips rungs)
+    probe = FleetEngine(BankRouter(bank, microbatch=MICROBATCH),
+                        max_in_flight=MAX_IN_FLIGHT,
+                        max_coalesce=MAX_COALESCE, auto_pump=False)
+    for rung in probe.buckets:
+        e2 = FleetEngine(
+            BankRouter(bank, microbatch=MICROBATCH),
+            max_in_flight=MAX_IN_FLIGHT, max_coalesce=MAX_COALESCE,
+            auto_pump=False,
+        )
+        for _ in range(rung):
+            e2.submit(0, np.zeros(P, np.float32))
+        e2.pump(max_blocks=1)
+        e2.drain()
+    _obs_pass(bank, tenants, Xq)                      # warm the full path
+
+    reg = MetricsRegistry()
+    tracer = Tracer()
+    wd = serving_watchdog(mode="count", metrics=reg)
+    _obs_pass(bank, tenants, Xq, metrics=reg, tracer=tracer, watchdog=wd)
+    wd.arm()
+    # INTERLEAVED ABBA pairs, median-of-ratios: each null/instrumented
+    # pair runs back to back (same machine-noise environment) and the
+    # pair order alternates every repeat, so linear load drift within
+    # the run cancels instead of always taxing whichever lane runs
+    # second; the MEDIAN across pair ratios then shrugs off scheduler
+    # spikes that make a min-of-two-separate-blocks estimate flap
+    # around a ~1% true overhead
+    # the registry holds engine collectors via weakrefs, so the last
+    # instrumented engine must stay alive until after the snapshot below
+    # or its unflushed counter deltas die with it
+    keep: dict = {}
+
+    def _null():
+        t0 = time.perf_counter()
+        _obs_pass(bank, tenants, Xq)
+        return time.perf_counter() - t0
+
+    def _inst():
+        t0 = time.perf_counter()
+        out = _obs_pass(bank, tenants, Xq, metrics=reg, tracer=tracer,
+                        watchdog=wd)
+        dt = time.perf_counter() - t0
+        keep["eng"] = out[2]
+        return dt
+
+    ratios, nulls, insts = [], [], []
+    for i in range(repeats):
+        if i & 1:
+            dt_inst = _inst()
+            dt_null = _null()
+        else:
+            dt_null = _null()
+            dt_inst = _inst()
+        nulls.append(dt_null)
+        insts.append(dt_inst)
+        ratios.append(dt_inst / dt_null)
+    t_null, t_inst = min(nulls), min(insts)
+    # two independent upward-robust estimates of the same true ratio —
+    # the median of per-pair ratios and the ratio of per-lane floors —
+    # agree when the machine is quiet and diverge under load bursts;
+    # report the smaller (a burst can only inflate either one)
+    overhead = float(min(np.median(ratios), t_inst / t_null))
+    emit("serve/obs-null", t_null, tag)
+    emit("serve/obs-instrumented", t_inst,
+         f"{tag};overhead={overhead:.3f}x")
+    record("obs-null", t_null, tag)
+    record("obs-instrumented", t_inst, f"{tag};overhead={overhead:.3f}x")
+    snap = reg.snapshot()
+    assert snap["counters"].get("serve_admitted_total", 0) > 0
+    del keep["eng"]
+    overhead_recompiles = wd.recompiles               # armed lane: 0
+
+    # -- churn lane: zero new executables across page/age lifecycle ---------
+    rng = np.random.default_rng(5)
+    with tempfile.TemporaryDirectory(prefix="bench_obs_") as tmp:
+        tb = _churn_fleet(tmp, metrics=reg, tracer=tracer)
+        router = BankRouter(tb.bank, microbatch=8,
+                            metrics=reg, tracer=tracer)
+        cwd = serving_watchdog(mode="count", metrics=reg)
+        # auto_pump=False: bucket choice follows pending depth alone, so
+        # the armed rounds replay exactly the warmup rounds' shapes
+        eng = FleetEngine(router, max_in_flight=2, tiered=tb,
+                          auto_pump=False,
+                          metrics=reg, tracer=tracer, watchdog=cwd)
+        # warm every rung of the coalesce ladder once THROUGH the engine
+        # dispatch path (a fresh throwaway engine per rung: its arrival
+        # EWMA starts cold, so pending count alone picks the bucket —
+        # the long-lived engine's arrival-rate heuristic would skip
+        # rungs), then two full churn rounds (the second reaches the
+        # steady-state downdate shapes the armed rounds repeat); the
+        # refit-fallback lane is warmed explicitly — it only fires on
+        # lost positive definiteness, which the armed rounds must not
+        # have to pay for
+        hot0 = tb.hot_tenants[0]
+        for rung in eng.buckets:
+            e2 = FleetEngine(BankRouter(tb.bank, microbatch=8),
+                             max_in_flight=2, auto_pump=False)
+            for _ in range(rung):
+                e2.submit(hot0, np.zeros(P, np.float32))
+            e2.pump(max_blocks=1)
+            e2.drain()
+        for _ in range(2):
+            _churn_round(eng, tb, rng)
+        fb = 1 if CHURN_CAP <= 1 else CHURN_CAP
+        slots = np.arange(fb, dtype=np.int32)
+        tb._bank._refit_at_slots(
+            jnp.asarray(slots),
+            jnp.zeros((fb, CHURN_ROWS, P), jnp.float32),
+            jnp.zeros((fb, CHURN_ROWS), jnp.float32),
+            jnp.zeros((fb, CHURN_ROWS), jnp.float32),
+        )
+        cwd.arm()
+        cwd.recompiles, cwd.events = 0, []
+        t0 = time.perf_counter()
+        rounds = 2 if smoke else 4
+        forgot = 0
+        for _ in range(rounds):
+            forgot += _churn_round(eng, tb, rng)["forgotten_rows"]
+        cwd.check("churn")
+        t_churn = time.perf_counter() - t0
+        recompiles = cwd.recompiles
+    assert forgot == rounds * CHURN_CAP * CHURN_OBS_PER_TENANT, forgot
+    emit("serve/obs-churn-watchdog", t_churn,
+         f"rounds={rounds};recompiles={recompiles};forgot={forgot}")
+    record("obs-churn-watchdog", t_churn,
+           f"rounds={rounds};recompiles={recompiles}")
+
+    if trace_out:
+        n = tracer.write_jsonl(trace_out)
+        emit("serve/obs-trace-written", 0.0, f"events={n};path={trace_out}")
+
+    payload = {
+        "schema": 1,
+        "smoke": bool(smoke),
+        "config": {"B": B, "microbatch": MICROBATCH, "queries": nq,
+                   "repeats": repeats, "churn_B": CHURN_B,
+                   "churn_capacity": CHURN_CAP, "churn_rounds": rounds},
+        "results": results,
+        "overhead_ratio": overhead,
+        "recompiles": recompiles + overhead_recompiles,
+        "trace_events": len(tracer),
+        "metric_series": {
+            "counters": len(snap["counters"]),
+            "gauges": len(snap["gauges"]),
+            "histograms": len(snap["histograms"]),
+        },
+    }
+    OBS_JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    emit("serve/obs-json-written", 0.0,
+         f"overhead={overhead:.3f}x;recompiles={payload['recompiles']}")
+    return payload
+
+
+def run(full: bool = False, smoke: bool = False,
+        trace_out: str | None = None):
     nq = 2048 if smoke else (8192 if full else 4096)
     repeats = 3 if smoke else 5
     backends = ["jnp", "pallas"] if full else ["jnp"]
@@ -205,11 +457,22 @@ def run(full: bool = False, smoke: bool = False):
         "dropped_non_expired": dropped_non_expired,
     }
     JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    run_obs(full=full, smoke=smoke, trace_out=trace_out)
     return payload
 
 
 def main():
-    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv)
+    trace_out = None
+    if "--trace-out" in sys.argv:
+        i = sys.argv.index("--trace-out") + 1
+        if i >= len(sys.argv):
+            raise SystemExit("usage: --trace-out FILE")
+        trace_out = sys.argv[i]
+    full, smoke = "--full" in sys.argv, "--smoke" in sys.argv
+    if "--obs-only" in sys.argv:
+        run_obs(full=full, smoke=smoke, trace_out=trace_out)
+        return
+    run(full=full, smoke=smoke, trace_out=trace_out)
 
 
 if __name__ == "__main__":

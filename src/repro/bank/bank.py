@@ -1032,6 +1032,8 @@ class GPBank:
         jitter: float = 0.3,
         seed: int = 0,
         callback=None,
+        metrics=None,
+        tracer=None,
     ) -> "GPBank":
         """Learn per-tenant hyperparameters for the whole fleet in one
         batched run, then refit the winners back into the stacked state.
@@ -1056,6 +1058,10 @@ class GPBank:
         query row's features under its slot's hyperparameters.  A bank that
         is already heterogeneous re-optimizes starting from each tenant's
         current values.
+
+        ``metrics`` / ``tracer`` (``repro.obs``) forward to
+        ``optimize_fleet``, which reports per-round progress through the
+        existing callback contract (composed with any user ``callback``).
         """
         from repro.optim.gp_hyperopt import optimize_fleet
 
@@ -1095,7 +1101,7 @@ class GPBank:
         res = optimize_fleet(
             Xb, yb, self.spec, mask=mask, restarts=restarts, steps=steps,
             lr=lr, tol=tol, jitter=jitter, seed=seed, init=init,
-            callback=callback,
+            callback=callback, metrics=metrics, tracer=tracer,
         )
         maskb = (jnp.ones((B, N), Xb.dtype) if mask is None else mask)
         spec_r = self.spec.replace(

@@ -48,9 +48,20 @@ engine removes every per-tick barrier:
   automatically) and dispatches the underlying jitted executable
   directly.
 * **Latency observability** — every completed ticket records its
-  submit→harvest latency per tenant; :meth:`metrics` reports per-tenant
-  and overall p50/p99 (exactly ``numpy.percentile``), timeout counts,
-  bucket usage, and sustained queries/s over the engine's lifetime.
+  submit→harvest latency per tenant into a BOUNDED reservoir
+  (:class:`LatencyStats`); :meth:`metrics` reports per-tenant and overall
+  p50/p99 (exactly ``numpy.percentile`` over the reservoir), timeout
+  counts, bucket usage, and sustained queries/s over the engine's
+  lifetime.  Passing ``metrics=`` / ``tracer=`` / ``watchdog=``
+  (``repro.obs``) additionally lights up fleet telemetry: pipeline-stage
+  spans at block granularity (bucket_select, coalesce, dispatch,
+  device_wait, harvest, expire, page_in; per-query admit events sampled
+  1-in-256 so tracing cannot blow the latency budget), registry counters
+  and gauges flushed through a scrape-time collector (the serving loop
+  never pays per-event registry costs beyond one histogram record per
+  block), and a :class:`~repro.obs.RecompileWatchdog` check per pump so
+  a shape leak past the bucket ladder is reported at the block where it
+  compiled.  All three default to no-ops costing one attribute lookup.
 
 Failure containment matches the router's contract: a dispatch that raises
 mid-flight requeues its block at the FRONT of the router backlog before
@@ -65,6 +76,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import random
 import time
 from collections import Counter, deque
 from typing import Callable, Hashable, Mapping, NamedTuple, Optional
@@ -72,6 +84,8 @@ from typing import Callable, Hashable, Mapping, NamedTuple, Optional
 import numpy as np
 
 from ..core import fagp
+from ..obs import metrics as obs_metrics
+from ..obs.trace import NULL_TRACER, NullTracer
 from . import bank as bank_mod
 from .bank import GPBank
 from .router import BankRouter
@@ -112,28 +126,60 @@ class TicketResult(NamedTuple):
 
 
 class LatencyStats:
-    """Per-tenant latency samples + timeout counters.
+    """Per-tenant latency samples + timeout counters, BOUNDED memory.
+
+    Each tenant's samples live in a uniform reservoir (Vitter's
+    Algorithm R) capped at ``bound`` entries: up to the bound every
+    sample is retained and percentiles are EXACT; past it each new
+    sample replaces a uniformly random slot with probability
+    ``bound / n``, so the buffer stays a uniform random sample of the
+    WHOLE stream and ``percentiles()`` returns the classical
+    reservoir-sample estimator (unbiased order-statistic probabilities,
+    error ~O(1/sqrt(bound)) in rank).  Under sustained traffic memory is
+    O(tenants x bound) forever, instead of growing per served query.
 
     Percentiles are computed with ``numpy.percentile`` (linear
     interpolation — the reference semantics the unit tests pin), over
     COMPLETED tickets only; timeouts are counted separately so an SLO
-    breach cannot hide inside a rosy p99.
+    breach cannot hide inside a rosy p99.  ``counts`` tracks the TRUE
+    per-tenant totals regardless of the bound; ``samples`` maps tenant
+    -> current reservoir contents (arrival order below the bound).
     """
 
-    def __init__(self) -> None:
+    def __init__(self, *, bound: int = 4096, seed: int = 0) -> None:
+        if bound < 1:
+            raise ValueError("bound must be >= 1")
+        self.bound = int(bound)
         self.samples: dict[Hashable, list] = {}
+        self.counts: Counter = Counter()
         self.timeouts: Counter = Counter()
+        self._rng = random.Random(seed)
 
     def record(self, tenant: Hashable, seconds: float) -> None:
-        self.samples.setdefault(tenant, []).append(float(seconds))
+        buf = self.samples.get(tenant)
+        if buf is None:
+            buf = self.samples[tenant] = []
+        n = self.counts[tenant]
+        self.counts[tenant] = n + 1
+        if n < self.bound:
+            buf.append(float(seconds))
+        else:
+            j = self._rng.randrange(n + 1)
+            if j < self.bound:
+                buf[j] = float(seconds)
 
     def record_timeout(self, tenant: Hashable) -> None:
         self.timeouts[tenant] += 1
 
+    def count(self, tenant: Hashable) -> int:
+        """TRUE number of recorded samples (not capped at the bound)."""
+        return int(self.counts[tenant])
+
     def percentiles(self, tenant: Optional[Hashable] = None,
                     qs=(50.0, 99.0)) -> tuple:
         """(p50, p99, ...) seconds for one tenant (or pooled over all when
-        ``tenant`` is None); NaNs when no samples."""
+        ``tenant`` is None); NaNs when no samples.  Exact while every
+        reservoir is below its bound; the reservoir estimator above."""
         if tenant is None:
             vals = [s for lst in self.samples.values() for s in lst]
         else:
@@ -210,6 +256,18 @@ class FleetEngine:
                    bookkeeping.
     clock:         injectable monotonic clock (tests drive deadlines
                    deterministically with a fake one).
+    metrics:       a :class:`repro.obs.MetricsRegistry`; the engine
+                   registers a scrape-time collector flushing its
+                   counters/gauges (admitted, completed, expired,
+                   queue-full rejections, page-ins, per-bucket dispatch
+                   counts, queue depth, in-flight rows, latency
+                   quantiles) into it.  Default: the no-op NULL registry.
+    tracer:        a :class:`repro.obs.Tracer`; pipeline stages emit
+                   spans at block granularity plus 1-in-64-sampled
+                   per-query ``admit`` events.  Default: no-op.
+    watchdog:      a :class:`repro.obs.RecompileWatchdog`; checked after
+                   every pump so a serving-path recompile is reported at
+                   the block that caused it.  Default: None (no checks).
     """
 
     def __init__(
@@ -224,6 +282,9 @@ class FleetEngine:
         auto_pump: bool = True,
         tiered=None,
         clock: Callable[[], float] = time.perf_counter,
+        metrics: Optional[obs_metrics.MetricsRegistry] = None,
+        tracer=None,
+        watchdog=None,
     ):
         if max_in_flight < 1:
             raise ValueError("max_in_flight must be >= 1")
@@ -264,6 +325,24 @@ class FleetEngine:
         self._expired = 0
         self._t_first_submit: Optional[float] = None
         self._t_last_harvest: Optional[float] = None
+        # -- telemetry (repro.obs) -----------------------------------------
+        # plain ints on the hot path; the registry sees them through a
+        # scrape-time collector (_publish), so per-event cost is zero
+        reg = obs_metrics.NULL if metrics is None else metrics
+        self.registry = reg
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.watchdog = watchdog
+        self._trace_on = not isinstance(self.tracer, NullTracer)
+        self._n_admitted = 0
+        self._n_queue_full = 0
+        self._n_page_ins = 0
+        self._published: dict = {}       # series key -> last flushed total
+        self._h_block_service = reg.histogram(
+            "serve_block_service_seconds",
+            "dispatch->harvest wall time per padded block",
+        )
+        if not isinstance(reg, obs_metrics.NullRegistry):
+            reg.add_collector(self._publish)
 
     # -- introspection ------------------------------------------------------
 
@@ -288,6 +367,11 @@ class FleetEngine:
         work (queries AND queued observations) are pinned — evicting one
         would fail its eventual dispatch/ingest.  Never stalls in-flight
         blocks: their futures hold the old immutable stack."""
+        with self.tracer.span("page_in", tenant=str(tenant)):
+            self._page_in_inner(tenant)
+        self._n_page_ins += 1
+
+    def _page_in_inner(self, tenant: Hashable) -> None:
         t = self.tiered
 
         def pins():
@@ -327,6 +411,7 @@ class FleetEngine:
         in here (before admission charges anything)."""
         pending = len(self.router._pending)
         if pending + self._rows_in_flight >= self.queue_budget:
+            self._n_queue_full += 1
             raise QueueFull(
                 f"queue depth {pending + self._rows_in_flight} is at the "
                 f"budget ({self.queue_budget}); harvest or raise the budget"
@@ -335,6 +420,12 @@ class FleetEngine:
             self._page_in(tenant)
         now = self._clock()
         ticket = self.router.submit(tenant, x)
+        # admit telemetry: a plain int plus a 1-in-256-sampled trace
+        # event — submit is the per-query hot path and the overhead gate
+        # in BENCH_obs.json (<=1.05x) rules out a full span per query
+        self._n_admitted += 1
+        if self._trace_on and not (self._n_admitted & 255):
+            self.tracer.instant("admit", tenant=str(tenant), depth=pending)
         if deadline_s is None:
             deadline_s = self.slo_s.get(tenant, self.default_slo_s)
         deadline = math.inf if deadline_s is None else now + float(deadline_s)
@@ -469,12 +560,13 @@ class FleetEngine:
 
     def _expire(self, ticket: int, tenant: Hashable, t_submit: float,
                 now: float) -> None:
-        self.stats.record_timeout(tenant)
-        self._expired += 1
-        self._done[ticket] = TicketResult(
-            TIMEOUT_MU, TIMEOUT_VAR, timed_out=True,
-            latency_s=now - t_submit,
-        )
+        with self.tracer.span("expire"):
+            self.stats.record_timeout(tenant)
+            self._expired += 1
+            self._done[ticket] = TicketResult(
+                TIMEOUT_MU, TIMEOUT_VAR, timed_out=True,
+                latency_s=now - t_submit,
+            )
 
     def pump(self, max_blocks: Optional[int] = None) -> int:
         """Dispatch pending queries as padded blocks WITHOUT blocking on
@@ -485,24 +577,28 @@ class FleetEngine:
         failure the block's live entries are requeued at the front of the
         router backlog before the error propagates."""
         dispatched = 0
+        tr = self.tracer
         while (self.router.pending
                and len(self._in_flight) < self.max_in_flight
                and (max_blocks is None or dispatched < max_blocks)):
-            bucket = self._dispatch_bucket()
+            with tr.span("bucket_select"):
+                bucket = self._dispatch_bucket()
             entries = []
             now = self._clock()
-            while len(entries) < bucket and self.router.pending:
-                for e in self.router.take(bucket - len(entries)):
-                    tenant, t_sub, deadline = self._meta[e[0]]
-                    if now > deadline:
-                        del self._meta[e[0]]
-                        self._expire(e[0], tenant, t_sub, now)
-                    else:
-                        entries.append(e)
+            with tr.span("coalesce"):
+                while len(entries) < bucket and self.router.pending:
+                    for e in self.router.take(bucket - len(entries)):
+                        tenant, t_sub, deadline = self._meta[e[0]]
+                        if now > deadline:
+                            del self._meta[e[0]]
+                            self._expire(e[0], tenant, t_sub, now)
+                        else:
+                            entries.append(e)
             if not entries:       # the whole backlog had expired
                 continue
             try:
-                mu, var = self._dispatch(entries, bucket)
+                with tr.span("dispatch", bucket=bucket, rows=len(entries)):
+                    mu, var = self._dispatch(entries, bucket)
             except Exception:
                 self.router.requeue(entries)
                 raise
@@ -514,16 +610,20 @@ class FleetEngine:
             dispatched += 1
         if dispatched:
             self._pump_threshold = self._target_bucket()
+            if self.watchdog is not None:
+                self.watchdog.check("pump")
         return dispatched
 
     # -- result harvest -----------------------------------------------------
 
     def _collect(self, blk: _InFlight) -> dict:
-        mu = np.asarray(blk.mu)       # blocks iff the result hasn't landed
-        var = np.asarray(blk.var)
+        with self.tracer.span("device_wait", bucket=blk.bucket):
+            mu = np.asarray(blk.mu)   # blocks iff the result hasn't landed
+            var = np.asarray(blk.var)
         now = self._clock()
         self._t_last_harvest = now
         service = now - blk.t_dispatch
+        self._h_block_service.record(service)
         self._service_ewma = (
             service if self._service_ewma == 0.0
             else self._alpha * service
@@ -557,7 +657,8 @@ class FleetEngine:
                     or GPBank.result_ready(blk.mu, blk.var)):
                 break
             self._in_flight.popleft()
-            out.update(self._collect(blk))
+            with self.tracer.span("harvest", bucket=blk.bucket):
+                out.update(self._collect(blk))
             first = False
         return out
 
@@ -578,6 +679,57 @@ class FleetEngine:
 
     # -- observability ------------------------------------------------------
 
+    def _publish(self) -> None:
+        """Flush plain-int hot-path counters into the metrics registry.
+        Runs as a registry collector (i.e. at scrape/snapshot time, on
+        the scraper's thread), so the serving loop never pays per-event
+        registry costs.  Counters are flushed as deltas against the last
+        published totals; gauges are overwritten."""
+        reg = self.registry
+        pub = self._published
+
+        def flush(name, help, total, **labels):
+            key = (name, tuple(sorted(labels.items())))
+            delta = total - pub.get(key, 0)
+            if delta:
+                reg.counter(name, help, **labels).inc(delta)
+                pub[key] = total
+
+        flush("serve_admitted_total", "tickets admitted", self._n_admitted)
+        flush("serve_completed_total", "tickets completed", self._completed)
+        flush("serve_expired_total", "tickets answered with the timeout "
+              "sentinel", self._expired)
+        flush("serve_queue_full_total", "admissions refused (backpressure)",
+              self._n_queue_full)
+        flush("serve_page_ins_total", "cold tenants paged in through the "
+              "tier", self._n_page_ins)
+        for bucket, n in self.bucket_uses.items():
+            flush("serve_dispatch_blocks_total", "padded blocks dispatched",
+                  n, bucket=bucket)
+        reg.gauge("serve_queue_depth",
+                  "rows waiting + rows on the device").set(self.depth)
+        reg.gauge("serve_in_flight_rows",
+                  "rows riding the device queue").set(self._rows_in_flight)
+        reg.gauge("serve_in_flight_blocks",
+                  "blocks riding the device queue").set(
+                      len(self._in_flight))
+        reg.gauge("serve_arrival_rate",
+                  "EWMA arrival rate, tickets/s").set(self._arrival_rate)
+        reg.gauge("serve_service_ewma_seconds",
+                  "EWMA block service time").set(self._service_ewma)
+        # latency quantiles from the bounded reservoir (the Prometheus
+        # client-side-summary pattern — a streaming per-query histogram
+        # would cost ~140ns/query on the harvest path, which the <=1.05x
+        # overhead gate does not leave room for)
+        p50, p99 = self.stats.percentiles(None)
+        reg.gauge("serve_latency_seconds", "submit->harvest latency "
+                  "(reservoir quantile)", quantile="0.5").set(p50)
+        reg.gauge("serve_latency_seconds", "submit->harvest latency "
+                  "(reservoir quantile)", quantile="0.99").set(p99)
+        if self.watchdog is not None:
+            flush("serve_recompiles_total", "serving-path executables "
+                  "compiled after watchdog arm", self.watchdog.recompiles)
+
     def metrics(self) -> dict:
         """Latency + throughput snapshot.
 
@@ -588,13 +740,16 @@ class FleetEngine:
                       ``sustained_qps`` = completed tickets / (last
                       harvest - first submit).
         ``bucket_uses``: dispatch counts per autotuned bucket size.
+        ``registry``:    the metrics-registry snapshot — engine, tier,
+                         router and optimizer series in one schema (empty
+                         sections when no registry was wired in).
         """
         tenants = {}
         ids = set(self.stats.samples) | set(self.stats.timeouts)
         for t in ids:
             p50, p99 = self.stats.percentiles(t)
             tenants[t] = {
-                "count": len(self.stats.samples.get(t, [])),
+                "count": self.stats.count(t),
                 "p50_s": p50,
                 "p99_s": p99,
                 "timeouts": int(self.stats.timeouts.get(t, 0)),
@@ -615,4 +770,5 @@ class FleetEngine:
                 "sustained_qps": qps,
             },
             "bucket_uses": dict(self.bucket_uses),
+            "registry": self.registry.snapshot(),
         }

@@ -54,6 +54,8 @@ import numpy as np
 from repro.checkpoint import gpstate
 from repro.core import fagp
 
+from ..obs import metrics as obs_metrics
+from ..obs.trace import NULL_TRACER
 from .bank import GPBank
 
 __all__ = ["TieredBank"]
@@ -103,9 +105,19 @@ class TieredBank:
               :meth:`age` downdates everything older than the newest W
               rows.  Window buffers ride cold checkpoints as ``extra``
               arrays, so paging preserves forgetting state.
+    metrics:  a :class:`repro.obs.MetricsRegistry`; the tier registers a
+              scrape-time collector mirroring its ``stats`` dict into
+              ``lifecycle_*_total`` counters plus hot/cold tenant-count
+              gauges.  The ``stats`` dict stays the canonical in-process
+              surface.  Default: no-op.
+    tracer:   a :class:`repro.obs.Tracer`; checkpoint save/restore,
+              evict-to-cold, and age/downdate/refit emit spans.
+              Default: no-op.
     """
 
-    def __init__(self, bank: GPBank, cold_dir, *, window: int = 0):
+    def __init__(self, bank: GPBank, cold_dir, *, window: int = 0,
+                 metrics: Optional[obs_metrics.MetricsRegistry] = None,
+                 tracer=None):
         if window < 0:
             raise ValueError(f"window must be >= 0, got {window}")
         self._bank = bank
@@ -127,6 +139,30 @@ class TieredBank:
             "cold_saves": 0, "warm_restores": 0, "evictions": 0,
             "downdated_rows": 0, "refit_fallbacks": 0,
         }
+        self.registry = obs_metrics.NULL if metrics is None else metrics
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self._published: dict = {}
+        if not isinstance(self.registry, obs_metrics.NullRegistry):
+            self.registry.add_collector(self._publish)
+
+    def _publish(self) -> None:
+        """Registry collector: mirror the ``stats`` dict into
+        ``lifecycle_*_total`` counters (as deltas) and tier sizes into
+        gauges — runs at scrape/snapshot time, never on a paging path."""
+        reg = self.registry
+        pub = self._published
+        for key, total in self.stats.items():
+            delta = total - pub.get(key, 0)
+            if delta:
+                reg.counter(f"lifecycle_{key}_total",
+                            "TieredBank.stats mirror").inc(delta)
+                pub[key] = total
+        reg.gauge("lifecycle_hot_tenants",
+                  "tenants resident in the hot bank").set(
+                      len(self._bank.slots))
+        reg.gauge("lifecycle_cold_tenants",
+                  "tenants living only as cold checkpoints").set(
+                      len(self._cold))
 
     # -- constructors --------------------------------------------------------
 
@@ -142,6 +178,8 @@ class TieredBank:
         window: int = 0,
         tenant_ids: Optional[Sequence[Hashable]] = None,
         mask=None,
+        metrics: Optional[obs_metrics.MetricsRegistry] = None,
+        tracer=None,
     ) -> "TieredBank":
         """Fit B tenants into a tiered store with ``capacity`` hot slots:
         the first ``capacity`` tenants stay device-resident, the rest are
@@ -168,7 +206,8 @@ class TieredBank:
         Xh, yh, mh = seg(0, hot_n)
         bank = GPBank.fit(Xh, yh, spec, mask=mh, tenant_ids=ids[:hot_n],
                           capacity=cap)
-        tb = cls(bank, cold_dir, window=window)
+        tb = cls(bank, cold_dir, window=window, metrics=metrics,
+                 tracer=tracer)
         if window:
             tb._seed_rows(ids[:hot_n], Xh, yh, mh)
         # remaining tenants: chunked batched fits through a scratch bank,
@@ -290,11 +329,12 @@ class TieredBank:
     def save(self, tenant: Hashable) -> int:
         """Checkpoint a HOT tenant to the cold tier without evicting it
         (versioned: every save appends history).  Returns the version."""
-        st = self._bank.state(tenant)      # hetero spec rides along
-        ver = gpstate.save_state(
-            self._cold_path(tenant), st,
-            extra=self._rows_extra(self._rows.get(tenant, [])),
-        )
+        with self.tracer.span("checkpoint_save", tenant=str(tenant)):
+            st = self._bank.state(tenant)  # hetero spec rides along
+            ver = gpstate.save_state(
+                self._cold_path(tenant), st,
+                extra=self._rows_extra(self._rows.get(tenant, [])),
+            )
         self.stats["cold_saves"] += 1
         return ver
 
@@ -302,8 +342,9 @@ class TieredBank:
         """Save ``tenant``'s current state as a new cold version, then
         free its hot slot (``GPBank.evict`` — recompile-free).  Returns
         the version written."""
-        ver = self.save(tenant)
-        self._bank = self._bank.evict(tenant)
+        with self.tracer.span("evict_to_cold", tenant=str(tenant)):
+            ver = self.save(tenant)
+            self._bank = self._bank.evict(tenant)
         self._lru.pop(tenant, None)
         self._cold.add(tenant)
         self.stats["evictions"] += 1
@@ -336,9 +377,10 @@ class TieredBank:
                 f"tenant {tenant!r} is in neither tier (hot: "
                 f"{self.hot_tenants!r}; {len(self._cold)} cold)"
             )
-        _, st, extra = gpstate.load_state(
-            self._cold_path(tenant), like_spec=self._bank.spec,
-        )
+        with self.tracer.span("checkpoint_restore", tenant=str(tenant)):
+            _, st, extra = gpstate.load_state(
+                self._cold_path(tenant), like_spec=self._bank.spec,
+            )
         if self._bank.hypers is None and any(
             not fagp._leaf_equal(getattr(st.spec, f),
                                  getattr(self._bank.spec, f))
@@ -464,6 +506,10 @@ class TieredBank:
                 if len(self._rows.get(t, ())) > self.window]
         if not over:
             return out
+        with self.tracer.span("age", tenants=len(over)):
+            return self._age_over(over, out)
+
+    def _age_over(self, over: list, out: dict) -> dict:
         self.ensure_hot(over)
         self._touch(over)
         W = self.window
@@ -485,10 +531,11 @@ class TieredBank:
         free = (s for s in range(self.capacity) if s not in used)
         for _ in range(bucket - G):    # identity padding on distinct slots
             slots.append(next(free))
-        bank, ok = self._bank._downdate_at_slots(
-            jnp.asarray(np.asarray(slots, np.int32)),
-            jnp.asarray(Xg), jnp.asarray(yg), jnp.asarray(mg),
-        )
+        with self.tracer.span("downdate", groups=bucket):
+            bank, ok = self._bank._downdate_at_slots(
+                jnp.asarray(np.asarray(slots, np.int32)),
+                jnp.asarray(Xg), jnp.asarray(yg), jnp.asarray(mg),
+            )
         self._bank = bank
         failed = [t for g, t in enumerate(over) if not ok[g]]
         if failed:
@@ -509,10 +556,11 @@ class TieredBank:
             ffree = (s for s in range(self.capacity) if s not in fused)
             for _ in range(fbucket - Gf):
                 fslots.append(next(ffree))
-            self._bank = self._bank._refit_at_slots(
-                jnp.asarray(np.asarray(fslots, np.int32)),
-                jnp.asarray(Xw), jnp.asarray(yw), jnp.asarray(mw),
-            )
+            with self.tracer.span("refit", groups=fbucket):
+                self._bank = self._bank._refit_at_slots(
+                    jnp.asarray(np.asarray(fslots, np.int32)),
+                    jnp.asarray(Xw), jnp.asarray(yw), jnp.asarray(mw),
+                )
             self.stats["refit_fallbacks"] += Gf
         for t in over:
             self._rows[t] = self._rows[t][-W:]

@@ -36,23 +36,46 @@ periodic re-optimization hook ``serve_fleet`` drives.
 """
 from __future__ import annotations
 
-from typing import Hashable
+from typing import Hashable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs.trace import NULL_TRACER
 from .bank import GPBank
 
 __all__ = ["BankRouter"]
 
 
 class BankRouter:
-    """See module docstring.  Not thread-safe; one router per serving loop."""
+    """See module docstring.  Not thread-safe; one router per serving loop.
+
+    ``metrics=`` / ``tracer=`` (``repro.obs``) light up telemetry:
+    counters for flushed blocks, ingested rows/rounds and reoptimized
+    tenants, and spans around flush, each ingest round, and reoptimize —
+    recorded at block/round granularity, never per row.  Both default to
+    no-ops."""
 
     def __init__(self, bank: GPBank, *, microbatch: int = 64,
-                 ingest_chunk: int = 16, donate_updates: bool = False):
+                 ingest_chunk: int = 16, donate_updates: bool = False,
+                 metrics: Optional[obs_metrics.MetricsRegistry] = None,
+                 tracer=None):
         if microbatch < 1 or ingest_chunk < 1:
             raise ValueError("microbatch and ingest_chunk must be >= 1")
+        reg = obs_metrics.NULL if metrics is None else metrics
+        self.registry = reg
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self._c_flush_blocks = reg.counter(
+            "router_flush_blocks_total", "padded blocks served by flush")
+        self._c_ingest_rows = reg.counter(
+            "router_ingest_rows_total", "observation rows absorbed")
+        self._c_ingest_rounds = reg.counter(
+            "router_ingest_rounds_total", "distinct-tenant update rounds")
+        self._c_reopt_rounds = reg.counter(
+            "router_reopt_rounds_total", "batched reoptimize calls")
+        self._c_reopt_tenants = reg.counter(
+            "router_reopt_tenants_total", "tenants reoptimized")
         self.bank = bank
         self.microbatch = int(microbatch)
         self.ingest_chunk = int(ingest_chunk)
@@ -134,18 +157,20 @@ class BankRouter:
         todo, self._pending = self._pending, []
         out: dict[int, tuple[float, float]] = {}
         mb = self.microbatch
-        for lo in range(0, len(todo), mb):
-            block = todo[lo : lo + mb]
-            tenants, Xq = self._pack_block(block, mb)
-            try:
-                mu, var = self.bank.mean_var(tenants, jnp.asarray(Xq))
-            except Exception:
-                self._pending = todo + self._pending
-                raise
-            mu = np.asarray(mu)
-            var = np.asarray(var)
-            for i, (ticket, _, _) in enumerate(block):
-                out[ticket] = (float(mu[i]), float(var[i]))
+        with self.tracer.span("flush", rows=len(todo)):
+            for lo in range(0, len(todo), mb):
+                block = todo[lo : lo + mb]
+                tenants, Xq = self._pack_block(block, mb)
+                try:
+                    mu, var = self.bank.mean_var(tenants, jnp.asarray(Xq))
+                except Exception:
+                    self._pending = todo + self._pending
+                    raise
+                mu = np.asarray(mu)
+                var = np.asarray(var)
+                for i, (ticket, _, _) in enumerate(block):
+                    out[ticket] = (float(mu[i]), float(var[i]))
+                self._c_flush_blocks.inc()
         return out
 
     # -- ingest path --------------------------------------------------------
@@ -188,6 +213,8 @@ class BankRouter:
         while queues:
             slots, Xg, yg, mg = [], [], [], []
             taken: dict[Hashable, list] = {}
+            round_span = self.tracer.span("ingest", tenants=len(queues))
+            round_span.__enter__()
             try:
                 for t in list(queues):
                     rows, rest = queues[t][:k], queues[t][k:]
@@ -232,7 +259,12 @@ class BankRouter:
                         t, []
                     )
                 raise
-            absorbed += sum(len(rows) for rows in taken.values())
+            finally:
+                round_span.__exit__(None, None, None)
+            round_rows = sum(len(rows) for rows in taken.values())
+            absorbed += round_rows
+            self._c_ingest_rounds.inc()
+            self._c_ingest_rows.inc(round_rows)
             for t, rows in taken.items():
                 self._since_reopt[t] = self._since_reopt.get(t, 0) + len(rows)
         return absorbed
@@ -279,8 +311,15 @@ class BankRouter:
         ids = list(tenant_ids)
         if not ids:
             return
-        self.bank = self.bank.optimize(
-            Xb, yb, tenant_ids=ids, mask=mask, **kw
-        )
+        if self.registry is not obs_metrics.NULL:
+            kw.setdefault("metrics", self.registry)
+        if self.tracer is not NULL_TRACER:
+            kw.setdefault("tracer", self.tracer)
+        with self.tracer.span("reopt", tenants=len(ids)):
+            self.bank = self.bank.optimize(
+                Xb, yb, tenant_ids=ids, mask=mask, **kw
+            )
+        self._c_reopt_rounds.inc()
+        self._c_reopt_tenants.inc(len(ids))
         for t in ids:
             self._since_reopt[t] = 0

@@ -11,6 +11,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 __all__ = ["save", "restore", "latest_step", "AsyncCheckpointer"]
 
 _SEP = "/"
@@ -25,7 +27,12 @@ def _sweep_stale_tmp(ckpt_dir: Path) -> None:
     the atomic ``os.replace`` never ran, so the dir is garbage — but a
     LIVE writer's staging dir must not be touched.  Our own pid is always
     skipped (an ``AsyncCheckpointer`` worker thread may be mid-write), and
-    other pids are only reaped when the process is verifiably gone."""
+    other pids are only reaped when the process is verifiably gone.
+
+    Every reaped dir counts into ``checkpoint_stale_tmp_reaped_total`` on
+    the process-default metrics registry (``repro.obs``) — crash recovery
+    should be visible to operators, not silent."""
+    reaped = 0
     for p in ckpt_dir.iterdir():
         m = _TMP_RE.match(p.name)
         if m is None or not p.is_dir():
@@ -37,8 +44,14 @@ def _sweep_stale_tmp(ckpt_dir: Path) -> None:
             os.kill(pid, 0)          # signal 0: existence probe only
         except ProcessLookupError:
             shutil.rmtree(p, ignore_errors=True)
+            reaped += 1
         except PermissionError:
             pass                     # pid alive under another user
+    if reaped:
+        obs_metrics.get_default().counter(
+            "checkpoint_stale_tmp_reaped_total",
+            "dead writers' staging dirs reaped",
+        ).inc(reaped)
 
 
 def _flatten(tree):
@@ -174,6 +187,13 @@ class AsyncCheckpointer:
                     e.add_note(f"async checkpoint of step {step} failed")
                 except AttributeError:
                     pass
+                # count at FAILURE time, not at the next wait(): operators
+                # watching checkpoint_async_failures_total see the event
+                # even while training hasn't hit its next sync point yet
+                obs_metrics.get_default().counter(
+                    "checkpoint_async_failures_total",
+                    "async checkpoint worker failures",
+                ).inc()
                 self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)

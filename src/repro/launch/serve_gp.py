@@ -40,6 +40,15 @@ from repro.bank import BankRouter, FleetEngine, GPBank, TieredBank
 from repro.core import fagp
 from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
+from repro.obs import (
+    NULL,
+    NULL_TRACER,
+    MetricsRegistry,
+    Tracer,
+    serving_watchdog,
+    start_metrics_server,
+)
+from repro.obs import metrics as obs_metrics
 
 __all__ = ["serve_gp", "serve_fleet", "microbatched_mean_var"]
 
@@ -155,6 +164,9 @@ def serve_fleet(
     capacity: int | None = None,
     cold_dir: str | None = None,
     window: int = 0,
+    metrics=None,
+    tracer=None,
+    watchdog=None,
 ) -> dict:
     """Serve a fleet of ``tenants`` small independent GPs concurrently.
 
@@ -193,6 +205,13 @@ def serve_fleet(
     rank-k Cholesky downdate (masked-refit fallback on lost positive
     definiteness), so re-learned hyperparameters track the CURRENT regime
     instead of averaging over the tenant's whole history.
+
+    ``metrics`` / ``tracer`` / ``watchdog`` (``repro.obs``) thread fleet
+    telemetry through every stage: the router, the pipelined engine, the
+    tiered lifecycle, and stale-tenant re-optimization all emit into the
+    same registry and trace buffer.  All three default to the shared null
+    objects (zero overhead); pass real instances (or use the
+    ``--metrics-port`` / ``--trace-out`` CLI flags) to turn them on.
     """
     rng = np.random.default_rng(seed)
     spec = GPSpec.create(
@@ -228,12 +247,15 @@ def serve_fleet(
         raise ValueError(
             "capacity/window need a cold tier; pass cold_dir"
         )
+    metrics = NULL if metrics is None else metrics
+    tracer = NULL_TRACER if tracer is None else tracer
     t0 = time.perf_counter()
     tiered = None
     if cold_dir is not None:
         tiered = TieredBank.fit(
             jnp.asarray(Xb), jnp.asarray(yb), spec, cold_dir=cold_dir,
             capacity=capacity, window=window,
+            metrics=metrics, tracer=tracer,
         )
         bank = tiered.bank
     else:
@@ -242,13 +264,15 @@ def serve_fleet(
     t_fit = time.perf_counter() - t0
 
     router = BankRouter(bank, microbatch=microbatch,
-                        ingest_chunk=ingest_chunk)
+                        ingest_chunk=ingest_chunk,
+                        metrics=metrics, tracer=tracer)
     eng = None
     if engine == "pipelined":
         eng = FleetEngine(
             router, max_in_flight=max_in_flight,
             queue_budget=queue_budget, default_slo_s=slo_s,
             tiered=tiered,
+            metrics=metrics, tracer=tracer, watchdog=watchdog,
         )
     consumed = [n_train] * tenants
     history = []
@@ -381,6 +405,8 @@ def serve_fleet(
     }
     if eng is not None:
         out["latency"] = eng.metrics()
+    elif metrics is not NULL:
+        out["telemetry"] = metrics.snapshot()
     if tiered is not None:
         out["lifecycle"] = dict(
             tiered.stats, capacity=tiered.capacity,
@@ -423,18 +449,56 @@ def main():
                     help="sliding-window length: before each reopt, "
                          "forget rows older than each stale tenant's "
                          "newest W (rank-k downdate); needs --cold-dir")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus text at http://127.0.0.1:PORT"
+                         "/metrics while the fleet runs (0 = ephemeral "
+                         "port; fleet mode only)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write pipeline spans as Chrome-trace JSONL to "
+                         "FILE on exit (load in chrome://tracing or "
+                         "ui.perfetto.dev; fleet mode only)")
+    ap.add_argument("--watchdog", default=None,
+                    choices=["warn", "raise", "count"],
+                    help="arm the recompile watchdog over the serving "
+                         "executables (fleet mode only)")
     args = ap.parse_args()
     if args.fleet:
-        r = serve_fleet(
-            backend=args.backend, tenants=args.fleet,
-            n_train=args.n_train, p=args.p, n=args.n, rounds=args.rounds,
-            queries_per_round=args.queries,
-            observations_per_round=args.update_size,
-            microbatch=args.microbatch, reopt_every=args.reopt_every,
-            engine=args.engine, max_in_flight=args.max_in_flight,
-            slo_s=args.slo, capacity=args.capacity,
-            cold_dir=args.cold_dir, window=args.window,
-        )
+        obs_on = (args.metrics_port is not None or args.trace_out
+                  or args.watchdog)
+        reg = MetricsRegistry() if obs_on else None
+        tracer = Tracer() if args.trace_out else None
+        wd = (serving_watchdog(mode=args.watchdog, metrics=reg)
+              if args.watchdog else None)
+        server = None
+        if reg is not None:
+            # store.py counters (stale-tmp sweeps, async-checkpoint
+            # failures) publish to the process default — point it here so
+            # one scrape sees the whole fleet
+            obs_metrics.set_default(reg)
+        if args.metrics_port is not None:
+            server = start_metrics_server(reg, port=args.metrics_port)
+            print(f"metrics: {server.url}")
+        try:
+            r = serve_fleet(
+                backend=args.backend, tenants=args.fleet,
+                n_train=args.n_train, p=args.p, n=args.n,
+                rounds=args.rounds,
+                queries_per_round=args.queries,
+                observations_per_round=args.update_size,
+                microbatch=args.microbatch, reopt_every=args.reopt_every,
+                engine=args.engine, max_in_flight=args.max_in_flight,
+                slo_s=args.slo, capacity=args.capacity,
+                cold_dir=args.cold_dir, window=args.window,
+                metrics=reg, tracer=tracer, watchdog=wd,
+            )
+        finally:
+            if tracer is not None and args.trace_out:
+                n = tracer.write_jsonl(args.trace_out)
+                print(f"trace: {n} events -> {args.trace_out}")
+            if server is not None:
+                server.shutdown()
+            if reg is not None:
+                obs_metrics.set_default(NULL)
         print(
             f"fleet of {r['tenants']} fitted in {r['fit_s']*1e3:.1f} ms "
             f"(M={r['M']} each; {r['engine']} engine)"

@@ -1,0 +1,131 @@
+"""Runtime recompile watchdog.
+
+Every PR since the bucketed-router work pins the zero-recompile invariant
+in tests via the jitted-function ``_cache_size()`` idiom: warm the pow2
+ladder, snapshot cache sizes, churn, assert nothing grew.  This module
+promotes that idiom to a *production* guard: register the serving-path
+executables, :meth:`RecompileWatchdog.arm` after warmup, and
+:meth:`RecompileWatchdog.check` at block granularity — a serving-path
+call that silently compiled a new executable (a shape leak past the
+bucket ladder, a dtype drift, an accidental weak-type promotion) is
+surfaced immediately instead of as a mystery latency spike.
+
+Modes: ``"raise"`` (RecompileError — for tests and benches proving the
+invariant), ``"warn"`` (``warnings.warn`` once per growth event — the
+serving default), ``"count"`` (silent; read :attr:`recompiles`).  All
+modes count, and the count lands in the metrics registry when one is
+wired through (``serve_recompiles_total``).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Callable, Optional
+
+__all__ = ["RecompileError", "RecompileWatchdog", "serving_watchdog"]
+
+
+class RecompileError(RuntimeError):
+    """A registered executable compiled after the watchdog was armed."""
+
+
+def _cache_size(fn) -> int:
+    return int(fn._cache_size())
+
+
+class RecompileWatchdog:
+    """Snapshots per-executable jit cache sizes and reports growth.
+
+    ``register`` wants the *jitted callable* (anything exposing
+    ``_cache_size()``, i.e. the module-level ``jax.jit`` products the
+    bank keeps); ``arm()`` re-baselines after warmup so legitimate
+    first-compiles of the bucket ladder are not reported; ``check()``
+    compares and, per mode, raises / warns / counts.
+    """
+
+    def __init__(self, *, mode: str = "warn", counter=None) -> None:
+        if mode not in ("raise", "warn", "count"):
+            raise ValueError(f"mode must be raise|warn|count, got {mode!r}")
+        self.mode = mode
+        self._fns: dict = {}            # name -> jitted fn
+        self._baseline: dict = {}       # name -> cache size at arm()
+        self._counter = counter         # obs.metrics Counter (or None)
+        self.recompiles = 0             # total growth observed since arm()
+        self.events: list = []          # (context, {name: growth}) log
+
+    def register(self, name: str, fn: Callable) -> "RecompileWatchdog":
+        if not hasattr(fn, "_cache_size"):
+            raise TypeError(
+                f"{name!r}: object has no _cache_size() — register the "
+                f"jax.jit product itself, not a wrapper"
+            )
+        self._fns[name] = fn
+        self._baseline[name] = _cache_size(fn)
+        return self
+
+    def arm(self) -> "RecompileWatchdog":
+        """Re-baseline every registered executable (call after warmup —
+        compiles before arm() are expected, growth after is a leak)."""
+        for name, fn in self._fns.items():
+            self._baseline[name] = _cache_size(fn)
+        return self
+
+    def sizes(self) -> dict:
+        return {name: _cache_size(fn) for name, fn in self._fns.items()}
+
+    def check(self, context: str = "") -> dict:
+        """Compare cache sizes against the armed baseline.  Returns
+        ``{name: growth}`` for executables that grew (and advances the
+        baseline so each compile is reported once)."""
+        grew = {}
+        for name, fn in self._fns.items():
+            size = _cache_size(fn)
+            base = self._baseline[name]
+            if size > base:
+                grew[name] = size - base
+                self._baseline[name] = size
+        if grew:
+            n = sum(grew.values())
+            self.recompiles += n
+            self.events.append((context, grew))
+            if self._counter is not None:
+                self._counter.inc(n)
+            msg = (f"recompile detected ({context or 'serving path'}): "
+                   + ", ".join(f"{k} +{v}" for k, v in sorted(grew.items())))
+            if self.mode == "raise":
+                raise RecompileError(msg)
+            if self.mode == "warn":
+                warnings.warn(msg, RuntimeWarning, stacklevel=2)
+        return grew
+
+
+def serving_watchdog(*, mode: str = "warn", metrics=None,
+                     watchdog: Optional[RecompileWatchdog] = None
+                     ) -> RecompileWatchdog:
+    """A watchdog pre-registered with every serving-path executable the
+    stack dispatches through: the bank's scatter/gather kernels, the
+    posterior kernels, and the hyperopt lane step.  Imports lazily so
+    ``repro.obs`` itself stays importable without jax."""
+    from ..bank import bank as bank_mod
+    from ..core import fagp
+    from ..optim import gp_hyperopt
+
+    counter = None
+    if metrics is not None:
+        counter = metrics.counter(
+            "serve_recompiles_total",
+            "serving-path executables compiled after watchdog arm",
+        )
+    wd = watchdog or RecompileWatchdog(mode=mode, counter=counter)
+    for name, fn in (
+        ("bank_write_slot", bank_mod._write_slot),
+        ("bank_update_scatter", bank_mod._bank_update_scatter),
+        ("bank_update_scatter_donated", bank_mod._bank_update_scatter_donated),
+        ("bank_gathered_posterior", fagp._bank_gathered_posterior),
+        ("hetero_gathered_mean_var", bank_mod._hetero_gathered_mean_var),
+        ("bank_downdate_scatter", bank_mod._bank_downdate_scatter),
+        ("bank_refit_scatter", bank_mod._bank_refit_scatter),
+        ("hyperopt_lane_step", gp_hyperopt._lane_step),
+        ("hyperopt_lane_values", gp_hyperopt._lane_values),
+    ):
+        wd.register(name, fn)
+    return wd

@@ -225,6 +225,34 @@ def _lane_values(hp, Xb, yb, maskb, spec, idx):
     )
 
 
+def _compose_obs_callback(user_cb, metrics, tracer):
+    """Wrap the optimize_fleet progress-callback contract with telemetry:
+    the observer fires first (round counter + step/best-NLML gauges + a
+    ``hyperopt_progress`` instant event), then the user's callback, with
+    exactly the ``(step, vals, hp)`` arguments the contract specifies."""
+    counter = gauge_step = gauge_best = None
+    if metrics is not None:
+        counter = metrics.counter(
+            "hyperopt_rounds_total", "progress-callback firings")
+        gauge_step = metrics.gauge(
+            "hyperopt_step", "current optimizer step")
+        gauge_best = metrics.gauge(
+            "hyperopt_best_nlml", "best lane NLML/row at the last firing")
+
+    def cb(step, vals, hp):
+        if counter is not None:
+            counter.inc()
+            gauge_step.set(step)
+            gauge_best.set(float(np.min(vals)))
+        if tracer is not None:
+            tracer.instant("hyperopt_progress", step=int(step),
+                           best_nlml=float(np.min(vals)))
+        if user_cb is not None:
+            user_cb(step, vals, hp)
+
+    return cb
+
+
 def optimize_fleet(
     Xb: jax.Array,
     yb: jax.Array,
@@ -239,6 +267,8 @@ def optimize_fleet(
     seed: int = 0,
     init: Optional[dict] = None,
     callback: Optional[Callable] = None,
+    metrics=None,
+    tracer=None,
 ) -> HyperoptResult:
     """Batched NLML hyperparameter learning for B independent tenants with
     R random restarts each — every lane in one compiled AdamW step.
@@ -249,9 +279,19 @@ def optimize_fleet(
     once every lane froze.  ``callback(step, vals, hp)`` fires every ~10%
     with the (B, R) loss snapshot and the raw log-space lane parameters.
 
+    ``metrics`` / ``tracer`` (``repro.obs``) report per-round progress
+    THROUGH that same callback contract — an internal observer composed
+    in front of any user callback records a round counter, the current
+    step and best lane NLML as gauges, and a ``hyperopt_progress``
+    instant trace event per firing.  The optimization loop itself is
+    untouched (no extra device syncs: the observer reads the ``vals``
+    snapshot the callback already materializes).
+
     Returns a :class:`HyperoptResult` with the best restart per tenant
     selected by final NLML.
     """
+    if metrics is not None or tracer is not None:
+        callback = _compose_obs_callback(callback, metrics, tracer)
     Xb = jnp.asarray(Xb)
     yb = jnp.asarray(yb)
     if Xb.ndim != 3 or yb.ndim not in (2, 3) or yb.shape[:2] != Xb.shape[:2]:

@@ -63,7 +63,10 @@ except ModuleNotFoundError:
                 unique.append(c)
 
         def deco(fn):
-            return pytest.mark.parametrize(",".join(names), unique)(fn)
+            # single-strategy @given: parametrize wants scalars, not
+            # 1-tuples (a tuple value would reach the test as-is)
+            cases = [c[0] for c in unique] if len(names) == 1 else unique
+            return pytest.mark.parametrize(",".join(names), cases)(fn)
 
         return deco
 

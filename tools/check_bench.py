@@ -33,6 +33,7 @@ _ROW_FIELDS = {
     "BENCH_gp_bank.json": {"name", "seconds", "derived"},
     "BENCH_optimize.json": {"name", "seconds", "derived"},
     "BENCH_serve.json": {"name", "seconds", "derived"},
+    "BENCH_obs.json": {"name", "seconds", "derived"},
     "BENCH_lifecycle.json": {"name", "seconds", "derived"},
     "BENCH_expansions.json": {"bench", "expansion", "name", "seconds",
                               "derived"},

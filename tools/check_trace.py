@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""CI validator for Chrome-trace JSONL files written by --trace-out.
+
+Every line must be a standalone JSON object carrying the span schema
+(``name``/``ph``/``ts``/``pid``/``tid``), with ``ph`` either ``"X"``
+(complete span, requires numeric ``dur >= 0``) or ``"i"`` (instant).
+Complete spans on one ``(pid, tid)`` track must nest properly — a span
+that starts inside another must end inside it too; overlapping
+half-open spans mean the tracer emitted garbage timestamps and the
+chrome://tracing / Perfetto render would be misleading.
+
+  python tools/check_trace.py trace.jsonl
+  python tools/check_trace.py trace.jsonl --expect dispatch harvest
+
+``--expect`` names stages that must appear at least once — CI uses it
+to prove the smoke run exercised the full pipeline, not just that the
+file parses.  Exit code 1 on any violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SPAN_SCHEMA_KEYS = ("name", "ph", "ts", "pid", "tid")
+
+
+def check_trace(path: Path, expect=(), errors=None) -> list:
+    """Validate one JSONL trace file; returns the error list."""
+    errors = [] if errors is None else errors
+    try:
+        lines = path.read_text().splitlines()
+    except OSError as e:
+        errors.append(f"{path.name}: unreadable ({e})")
+        return errors
+    if not lines:
+        errors.append(f"{path.name}: empty trace")
+        return errors
+
+    seen_names = set()
+    # per-(pid,tid) list of (start, end) complete spans, in file order
+    tracks: dict = {}
+    for i, line in enumerate(lines, 1):
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"{path.name}:{i}: not JSON ({e})")
+            continue
+        if not isinstance(ev, dict):
+            errors.append(f"{path.name}:{i}: not an object")
+            continue
+        missing = [k for k in SPAN_SCHEMA_KEYS if k not in ev]
+        if missing:
+            errors.append(f"{path.name}:{i}: missing keys {missing}")
+            continue
+        if ev["ph"] not in ("X", "i"):
+            errors.append(f"{path.name}:{i}: unknown phase {ev['ph']!r}")
+            continue
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            errors.append(f"{path.name}:{i}: bad ts {ev['ts']!r}")
+            continue
+        seen_names.add(ev["name"])
+        if ev["ph"] == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"{path.name}:{i}: X span with bad dur "
+                              f"{dur!r}")
+                continue
+            tracks.setdefault((ev["pid"], ev["tid"]), []).append(
+                (float(ev["ts"]), float(ev["ts"]) + float(dur), i,
+                 ev["name"])
+            )
+
+    # nesting: on each track, any two spans either nest or are disjoint.
+    # spans arrive in completion order; a sort by (start, -end) puts
+    # parents before children, after which a stack walk finds overlaps.
+    for (pid, tid), spans in tracks.items():
+        spans.sort(key=lambda s: (s[0], -s[1]))
+        stack: list = []
+        for t0, t1, lineno, sname in spans:
+            while stack and stack[-1][1] <= t0:
+                stack.pop()
+            if stack and t1 > stack[-1][1]:
+                errors.append(
+                    f"{path.name}:{lineno}: span {sname!r} "
+                    f"[{t0:.0f},{t1:.0f}] overlaps {stack[-1][3]!r} "
+                    f"[{stack[-1][0]:.0f},{stack[-1][1]:.0f}] on track "
+                    f"pid={pid} tid={tid} without nesting"
+                )
+                break
+            stack.append((t0, t1, lineno, sname))
+
+    for name in expect:
+        if name not in seen_names:
+            errors.append(f"{path.name}: expected stage {name!r} never "
+                          f"traced (saw {sorted(seen_names)})")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", help="JSONL trace files")
+    ap.add_argument("--expect", nargs="*", default=[],
+                    help="span names that must appear at least once")
+    args = ap.parse_args()
+
+    errors: list = []
+    total = 0
+    for f in args.files:
+        p = Path(f)
+        if not p.exists():
+            errors.append(f"missing file: {f}")
+            continue
+        check_trace(p, expect=args.expect, errors=errors)
+        total += 1
+    if errors:
+        print("TRACE CHECK FAILED:")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"trace check OK: {total} file(s) validated")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
