@@ -155,6 +155,45 @@ def lifecycle_rows() -> str:
     return "\n".join(out)
 
 
+def shard_rows() -> str:
+    """Render BENCH_shard.json (the sharded mega-bank trajectory) as a
+    table + the gated claims, or a placeholder."""
+    path = ROOT / "BENCH_shard.json"
+    if not path.exists():
+        return ("*(no `BENCH_shard.json` yet — run "
+                "`PYTHONPATH=src python -m benchmarks.shard_scaling`)*")
+    try:
+        d = json.loads(path.read_text())
+    except json.JSONDecodeError:
+        return "*(BENCH_shard.json unreadable)*"
+    rows = d.get("results", [])
+    if not rows:
+        return "*(BENCH_shard.json present but empty)*"
+    out = ["| name | seconds | derived |", "|---|---|---|"]
+    for r in rows:
+        out.append(f"| {r['name']} | {r['seconds']:.4f} | {r['derived']} |")
+    proj = d.get("projected_speedup", {})
+    over = d.get("wall_overhead", {})
+    par = d.get("parity_abs", {})
+    worst = max((v for rec in par.values() for v in rec.values()),
+                default=float("nan"))
+    cfg = d.get("config", {})
+    out.append("")
+    out.append(
+        f"Projected per-device speedup at S=8 (critical path "
+        f"T_resident/T_slice on a {cfg.get('host_cores', '?')}-core host "
+        f"exposing {cfg.get('devices', '?')} devices): "
+        f"**{proj.get('serve_S8', float('nan')):.1f}× serving / "
+        f"{proj.get('fit_S8', float('nan')):.1f}× fit** (gate: ≥2.5, "
+        f"hard-failed by `tools/check_bench.py`); fused sharded wall "
+        f"overhead {over.get('serve_S8', float('nan')):.2f}× at S=8 "
+        f"(gate: ≤4.0 — S host devices time-slice this machine's core). "
+        f"Worst sharded-vs-resident / sharded-vs-loop serving parity: "
+        f"**{worst:g}** (gate: ≤1e-5, asserted in-benchmark)."
+    )
+    return "\n".join(out)
+
+
 def obs_rows() -> str:
     """Render BENCH_obs.json (the telemetry-overhead trajectory) as a
     table + the gated claims, or a placeholder."""
@@ -505,6 +544,32 @@ paged-vs-resident and downdate-vs-refit parities are HARD gates in
 
 {lifecycle_rows()}
 
+## §Sharded fleet (ShardedGPBank)
+
+The mega-bank sharded across a device mesh
+(`src/repro/bank/sharded.py::ShardedGPBank`): the stacked `FAGPState`'s
+leading tenant axis splits over an S-way 'bank' mesh axis (2-D
+`(bank, data)` meshes compose with the v2 row-sharded fit for large-N
+tenants), and every serving / ingest / churn executable runs SHARD-LOCAL
+— no cross-shard collective appears on the hot path, so per-device work
+divides by S.  Tenants place round-robin at fit, least-loaded on insert;
+`BankRouter.rebalance` migrates tenants off the fullest shard through the
+same traced-slot executables (zero recompiles, pinned in
+tests/test_shard_bank.py); `TieredBank` cold-restores land on the
+least-loaded shard.  Dispatch buckets per shard, so one hot shard does
+not pad-inflate the others:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.shard_scaling  # writes BENCH_shard.json
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m repro.launch.serve_gp --fleet 64 --shards 8
+
+Current trajectory (acceptance shape B=1024 over a 1/2/4/8 shard sweep;
+the projected-speedup, wall-overhead and parity claims are HARD gates in
+`tools/check_bench.py`):
+
+{shard_rows()}
+
 ## §Fleet telemetry (observability)
 
 The serving stack instrumented end to end (`src/repro/obs/`, stdlib-only):
@@ -514,7 +579,7 @@ tracing over every pipeline stage (admit → coalesce → bucket-select →
 dispatch → device-wait → harvest → expire, plus page-in / evict / age /
 downdate / checkpoint and hyperopt progress — `src/repro/obs/trace.py`),
 and a recompile watchdog that promotes the test suite's jit cache-size
-idiom to a production guard over the nine serving-path executables
+idiom to a production guard over the sixteen serving-path executables (including the seven shard-local ones)
 (`src/repro/obs/watchdog.py`).  Telemetry is strictly opt-in: every layer
 defaults to no-op implementations whose record paths allocate NOTHING
 (pinned with `tracemalloc` in tests/test_obs.py), and the fully-ON cost

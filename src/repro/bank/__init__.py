@@ -21,8 +21,10 @@ from .engine import (
 )
 from .lifecycle import TieredBank
 from .router import BankRouter
+from .sharded import ShardedGPBank
 
 __all__ = [
     "GPBank", "BankRouter", "FleetEngine", "LatencyStats", "QueueFull",
-    "TicketResult", "TieredBank", "TIMEOUT_MU", "TIMEOUT_VAR",
+    "ShardedGPBank", "TicketResult", "TieredBank", "TIMEOUT_MU",
+    "TIMEOUT_VAR",
 ]

@@ -200,6 +200,9 @@ class _InFlight:
     var: object             # device array, (bucket,)
     bucket: int
     t_dispatch: float
+    # sharded dispatch: entry i's result sits at packed position order[i]
+    # (per-shard packed layout); None for resident banks (identity)
+    order: object = None
 
 
 def _pow2_buckets(microbatch: int, max_coalesce: int = 1) -> tuple:
@@ -529,7 +532,23 @@ class FleetEngine:
             return self._dcache[1], self._dcache[2]
         sm = dict(bank.slots)
         stack, binv = bank.stack, bank._binv
-        if bank.hypers is not None:
+        if getattr(bank, "mesh", None) is not None:
+            # sharded bank: per-shard packed serving.  The call returns
+            # (mu, var, order) — results land in packed per-shard order
+            # and the harvest path unpacks host-side, so the hot path
+            # never pays a cross-shard device reorder.
+            tracer = self.tracer
+            C_l = bank.shard_capacity
+            S = bank.n_shards
+
+            def call(slots, Xq):
+                gslots = slots.astype(np.int64)
+                per_shard = np.bincount(gslots // C_l, minlength=S)
+                for s in np.flatnonzero(per_shard):
+                    tracer.instant("shard_dispatch", shard_id=int(s),
+                                   rows=int(per_shard[s]))
+                return bank._packed_mean_var(gslots, Xq)
+        elif bank.hypers is not None:
             eps_s, rho_s = bank.hypers.eps, bank.hypers.rho
 
             def call(slots, Xq):
@@ -554,9 +573,17 @@ class FleetEngine:
         Raises (e.g. ``KeyError`` for a tenant evicted from a swapped
         bank) without side effects — the caller requeues."""
         sm, call = self._dispatcher()
-        tenants, Xq = self.router._pack_block(entries, bucket)
+        if getattr(self.router.bank, "mesh", None) is not None:
+            # sharded: dispatch real rows only — the bank pads per shard
+            # (its microbatch buckets are per-shard), so padding to the
+            # global bucket here would just inflate the busiest shard
+            tenants = [t for _, t, _ in entries]
+            Xq = np.stack([x for _, _, x in entries])
+        else:
+            tenants, Xq = self.router._pack_block(entries, bucket)
         slots = np.array([sm[t] for t in tenants], np.int32)
-        return call(slots, Xq)
+        out = call(slots, Xq)
+        return out if len(out) == 3 else out + (None,)
 
     def _expire(self, ticket: int, tenant: Hashable, t_submit: float,
                 now: float) -> None:
@@ -598,12 +625,12 @@ class FleetEngine:
                 continue
             try:
                 with tr.span("dispatch", bucket=bucket, rows=len(entries)):
-                    mu, var = self._dispatch(entries, bucket)
+                    mu, var, order = self._dispatch(entries, bucket)
             except Exception:
                 self.router.requeue(entries)
                 raise
             self._in_flight.append(
-                _InFlight(entries, mu, var, bucket, now)
+                _InFlight(entries, mu, var, bucket, now, order)
             )
             self._rows_in_flight += len(entries)
             self.bucket_uses[bucket] += 1
@@ -638,7 +665,8 @@ class FleetEngine:
             _, t_sub, _ = self._meta.pop(ticket)
             lat = now - t_sub
             self.stats.record(tenant, lat)
-            out[ticket] = TicketResult(mu_l[i], var_l[i], False, lat)
+            j = i if blk.order is None else int(blk.order[i])
+            out[ticket] = TicketResult(mu_l[j], var_l[j], False, lat)
         self._completed += len(blk.entries)
         return out
 

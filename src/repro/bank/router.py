@@ -76,6 +76,10 @@ class BankRouter:
             "router_reopt_rounds_total", "batched reoptimize calls")
         self._c_reopt_tenants = reg.counter(
             "router_reopt_tenants_total", "tenants reoptimized")
+        self._c_rebalance = reg.counter(
+            "bank_rebalance_total", "cross-shard tenant moves applied by "
+            "rebalance")
+        reg.add_collector(self._publish_shards)
         self.bank = bank
         self.microbatch = int(microbatch)
         self.ingest_chunk = int(ingest_chunk)
@@ -91,6 +95,58 @@ class BankRouter:
         # rows absorbed per tenant since its hyperparameters were last
         # (re)optimized — the staleness signal for periodic re-optimization
         self._since_reopt: dict[Hashable, int] = {}
+
+    # -- shard placement awareness ------------------------------------------
+
+    @property
+    def _sharded(self) -> bool:
+        return getattr(self.bank, "mesh", None) is not None
+
+    def shard_backlogs(self) -> np.ndarray:
+        """(S,) pending query rows per shard (empty array when the bank is
+        not sharded) — the router-side load signal that pairs with the
+        bank's occupancy for placement decisions."""
+        if not self._sharded:
+            return np.zeros(0, np.int64)
+        depth = np.zeros(self.bank.n_shards, np.int64)
+        for _, tenant, _ in self._pending:
+            if tenant in self.bank.slots:
+                depth[self.bank.shard_of(tenant)] += 1
+        return depth
+
+    def _publish_shards(self) -> None:
+        """Scrape-time collector: per-shard occupancy and backlog gauges
+        (registered only while the bank is sharded)."""
+        if not self._sharded:
+            return
+        occ = self.bank.shard_occupancy()
+        backlog = self.shard_backlogs()
+        for s in range(self.bank.n_shards):
+            self.registry.gauge(
+                "bank_shard_occupancy", "active tenants on this shard",
+                shard=s,
+            ).set(int(occ[s]))
+            self.registry.gauge(
+                "bank_shard_backlog", "pending query rows bound for this "
+                "shard", shard=s,
+            ).set(int(backlog[s]))
+
+    def rebalance(self, *, threshold: int = 2,
+                  max_moves: Optional[int] = None) -> int:
+        """Even out per-shard occupancy when the spread reaches
+        ``threshold``: swap in a rebalanced bank
+        (:meth:`~repro.bank.ShardedGPBank.rebalance` — traced-slot moves,
+        zero recompiles) and count the moves.  No-op on resident banks and
+        balanced fleets; returns the number of tenants moved."""
+        if not self._sharded:
+            return 0
+        occ = self.bank.shard_occupancy()
+        if int(occ.max()) - int(occ.min()) < max(1, int(threshold)):
+            return 0
+        with self.tracer.span("rebalance", spread=int(occ.max() - occ.min())):
+            self.bank, moves = self.bank.rebalance(max_moves=max_moves)
+        self._c_rebalance.inc(moves)
+        return moves
 
     # -- query path ---------------------------------------------------------
 
@@ -233,18 +289,33 @@ class BankRouter:
                     yg.append(y)
                     mg.append(m)
                 # pad the group axis to a shape bucket (masked identity
-                # groups on distinct unused slots — GPBank._update_at_slots)
+                # groups on distinct unused slots — GPBank._update_at_slots).
+                # A sharded bank pads per shard internally (its microbatch
+                # buckets are per-shard), so global padding would only
+                # inflate the busiest shard's rung.
                 G = len(slots)
-                bucket = min(self.bank.capacity, 1 << (G - 1).bit_length())
-                if bucket > G:
-                    used = set(slots)
-                    free = (s for s in range(self.bank.capacity)
-                            if s not in used)
-                    for _ in range(bucket - G):
-                        slots.append(next(free))
-                        Xg.append(np.zeros((k, p), np.float32))
-                        yg.append(np.zeros((k,), np.float32))
-                        mg.append(np.zeros((k,), np.float32))
+                if self._sharded:
+                    shard_groups = np.bincount(
+                        np.asarray(slots) // self.bank.shard_capacity,
+                        minlength=self.bank.n_shards,
+                    )
+                    for s in np.flatnonzero(shard_groups):
+                        self.tracer.instant(
+                            "shard_ingest", shard_id=int(s),
+                            groups=int(shard_groups[s]),
+                        )
+                else:
+                    bucket = min(self.bank.capacity,
+                                 1 << (G - 1).bit_length())
+                    if bucket > G:
+                        used = set(slots)
+                        free = (s for s in range(self.bank.capacity)
+                                if s not in used)
+                        for _ in range(bucket - G):
+                            slots.append(next(free))
+                            Xg.append(np.zeros((k, p), np.float32))
+                            yg.append(np.zeros((k,), np.float32))
+                            mg.append(np.zeros((k,), np.float32))
                 self.bank = self.bank._update_at_slots(
                     jnp.asarray(np.array(slots, np.int32)),
                     jnp.asarray(np.stack(Xg)), jnp.asarray(np.stack(yg)),

@@ -36,7 +36,6 @@ form was deprecated for two releases and now raises TypeError.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
@@ -45,6 +44,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.parallel import hints
+from . import shardspec
 from .expansions import get_expansion
 from .fagp import (
     FAGPState,
@@ -58,21 +58,10 @@ from .fagp import (
 __all__ = ["fit_distributed", "predict_distributed", "lower_fit", "lower_predict"]
 
 
-def _spec_local(spec: GPSpec, eps, rho, omega) -> GPSpec:
-    """Rebuild the spec from shard-local leaves inside a shard_map body —
-    every data leaf is replaced, so no outer traced value leaks into the
-    body through the closure."""
-    return dataclasses.replace(
-        spec, eps=eps, rho=rho, noise=jnp.asarray(0.0, jnp.float32),
-        omega=omega,
-    )
-
-
-def _omega_args(spec: GPSpec) -> tuple:
-    """The spec's optional spectral-draw leaf as a *args tail (present only
-    when the expansion carries one — keeps the hermite schedules byte-
-    identical to before)."""
-    return () if spec.omega is None else (spec.omega,)
+# Shard-local spec rebuild + mesh probes live in core.shardspec so the
+# bank-axis sharding (bank.sharded) shares one copy with the v2 schedules.
+_spec_local = shardspec.spec_local
+_omega_args = shardspec.omega_args
 
 
 @partial(jax.jit, static_argnames=("nblk", "n_valid"))
@@ -366,8 +355,7 @@ def _abstract_spec(cfg, p: int) -> GPSpec:
     )
 
 
-def _n_chips(mesh) -> int:
-    return int(np.prod(list(mesh.shape.values())))
+_n_chips = shardspec.mesh_size
 
 
 def lower_fit(wl, mesh, *, schedule: str = "v2"):

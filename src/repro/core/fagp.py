@@ -359,6 +359,13 @@ def _leaf_equal(a, b) -> bool:
     if a is None or b is None:
         return a is None and b is None
     a, b = np.asarray(a), np.asarray(b)
+    # All device math is f32: a python-float leaf (f64 on the host, e.g.
+    # noise=0.1) and its f32 device/checkpoint round-trip are the same
+    # hyperparameter, so compare in the compute dtype.
+    if a.dtype == np.float64:
+        a = a.astype(np.float32)
+    if b.dtype == np.float64:
+        b = b.astype(np.float32)
     return a.shape == b.shape and np.array_equal(a, b)
 
 

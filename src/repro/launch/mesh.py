@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_bank_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -24,3 +24,24 @@ def make_local_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over however many devices this host exposes (tests)."""
     axis_types = (jax.sharding.AxisType.Auto,) * 2
     return jax.make_mesh((data, model), ("data", "model"), axis_types=axis_types)
+
+
+def make_bank_mesh(bank: int, data: int = 1) -> jax.sharding.Mesh:
+    """(bank, data) mesh for the sharded GP fleet: 'bank' splits the tenant
+    axis across devices (``ShardedGPBank``), 'data' optionally row-shards
+    large-N fits inside each bank shard.  Built on the plain ``Mesh``
+    constructor so it works on every jax this repo supports (the
+    AxisType/make_mesh API used above is newer); on CPU, export
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before the first
+    jax import to expose multiple host devices."""
+    n = bank * data
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(
+            f"make_bank_mesh(bank={bank}, data={data}) wants {n} devices; "
+            f"only {len(devs)} visible (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N before jax starts)"
+        )
+    import numpy as np
+    grid = np.asarray(devs[:n], dtype=object).reshape(bank, data)
+    return jax.sharding.Mesh(grid, ("bank", "data"))

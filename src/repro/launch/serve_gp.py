@@ -36,7 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.bank import BankRouter, FleetEngine, GPBank, TieredBank
+from repro.bank import (
+    BankRouter, FleetEngine, GPBank, ShardedGPBank, TieredBank,
+)
 from repro.core import fagp
 from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
@@ -164,6 +166,7 @@ def serve_fleet(
     capacity: int | None = None,
     cold_dir: str | None = None,
     window: int = 0,
+    shards: int = 0,
     metrics=None,
     tracer=None,
     watchdog=None,
@@ -206,6 +209,15 @@ def serve_fleet(
     definiteness), so re-learned hyperparameters track the CURRENT regime
     instead of averaging over the tenant's whole history.
 
+    ``shards > 0`` shards the fleet's tenant axis across a ``shards``-way
+    'bank' device mesh (:class:`~repro.bank.ShardedGPBank`): every serving
+    and ingest executable runs shard-local with no cross-shard collectives,
+    the router tracks per-shard occupancy/backlog, and paged-in tenants
+    land on the least-loaded shard.  Needs ``shards`` visible devices (on
+    CPU export ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before jax starts) and is homogeneous-only — incompatible with
+    ``reopt_every`` (per-tenant learned hyperparameters).
+
     ``metrics`` / ``tracer`` / ``watchdog`` (``repro.obs``) thread fleet
     telemetry through every stage: the router, the pipelined engine, the
     tiered lifecycle, and stale-tenant re-optimization all emit into the
@@ -247,6 +259,12 @@ def serve_fleet(
         raise ValueError(
             "capacity/window need a cold tier; pass cold_dir"
         )
+    if shards and reopt_every:
+        raise ValueError(
+            "a sharded fleet is homogeneous-only (one spec across all "
+            "shards); per-tenant re-optimization (reopt_every) needs the "
+            "resident bank"
+        )
     metrics = NULL if metrics is None else metrics
     tracer = NULL_TRACER if tracer is None else tracer
     t0 = time.perf_counter()
@@ -260,6 +278,13 @@ def serve_fleet(
         bank = tiered.bank
     else:
         bank = GPBank.fit(jnp.asarray(Xb), jnp.asarray(yb), spec)
+    if shards:
+        from repro.launch.mesh import make_bank_mesh
+        bank = ShardedGPBank.from_bank(
+            bank, make_bank_mesh(shards), pad_capacity=True
+        )
+        if tiered is not None:
+            tiered.adopt(bank)
     jax.block_until_ready(bank.stack.u)
     t_fit = time.perf_counter() - t0
 
@@ -403,6 +428,11 @@ def serve_fleet(
         "M": bank.n_features,
         "engine": engine,
     }
+    if shards:
+        out["shards"] = shards
+        out["shard_occupancy"] = [
+            int(c) for c in router.bank.shard_occupancy()
+        ]
     if eng is not None:
         out["latency"] = eng.metrics()
     elif metrics is not NULL:
@@ -445,6 +475,11 @@ def main():
     ap.add_argument("--cold-dir", default=None, metavar="DIR",
                     help="cold-tier checkpoint directory (enables the "
                          "TieredBank lifecycle; pipelined engine only)")
+    ap.add_argument("--shards", type=int, default=0, metavar="S",
+                    help="shard the fleet's tenant axis across an S-way "
+                         "'bank' device mesh (needs S visible devices; on "
+                         "CPU set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=S before launch)")
     ap.add_argument("--window", type=int, default=0, metavar="W",
                     help="sliding-window length: before each reopt, "
                          "forget rows older than each stale tenant's "
@@ -489,6 +524,7 @@ def main():
                 engine=args.engine, max_in_flight=args.max_in_flight,
                 slo_s=args.slo, capacity=args.capacity,
                 cold_dir=args.cold_dir, window=args.window,
+                shards=args.shards,
                 metrics=reg, tracer=tracer, watchdog=wd,
             )
         finally:
@@ -503,6 +539,11 @@ def main():
             f"fleet of {r['tenants']} fitted in {r['fit_s']*1e3:.1f} ms "
             f"(M={r['M']} each; {r['engine']} engine)"
         )
+        if "shards" in r:
+            print(
+                f"sharded across {r['shards']} devices; occupancy "
+                f"{r['shard_occupancy']}"
+            )
         for h in r["rounds"]:
             reopt = (
                 f"; reopt {h['reopt_tenants']} tenants "

@@ -106,6 +106,7 @@ def serving_watchdog(*, mode: str = "warn", metrics=None,
     posterior kernels, and the hyperopt lane step.  Imports lazily so
     ``repro.obs`` itself stays importable without jax."""
     from ..bank import bank as bank_mod
+    from ..bank import sharded as sharded_mod
     from ..core import fagp
     from ..optim import gp_hyperopt
 
@@ -126,6 +127,13 @@ def serving_watchdog(*, mode: str = "warn", metrics=None,
         ("bank_refit_scatter", bank_mod._bank_refit_scatter),
         ("hyperopt_lane_step", gp_hyperopt._lane_step),
         ("hyperopt_lane_values", gp_hyperopt._lane_values),
+        ("bank_shard_mean_var", sharded_mod._sh_mean_var),
+        ("bank_shard_update_scatter", sharded_mod._sh_update_scatter),
+        ("bank_shard_downdate_scatter", sharded_mod._sh_downdate_scatter),
+        ("bank_shard_refit_scatter", sharded_mod._sh_refit_scatter),
+        ("bank_shard_write_slot", sharded_mod._sh_write_slot),
+        ("bank_shard_read_slot", sharded_mod._sh_read_slot),
+        ("bank_shard_binv", sharded_mod._sh_binv),
     ):
         wd.register(name, fn)
     return wd

@@ -35,6 +35,7 @@ _ROW_FIELDS = {
     "BENCH_serve.json": {"name", "seconds", "derived"},
     "BENCH_obs.json": {"name", "seconds", "derived"},
     "BENCH_lifecycle.json": {"name", "seconds", "derived"},
+    "BENCH_shard.json": {"name", "seconds", "derived"},
     "BENCH_expansions.json": {"bench", "expansion", "name", "seconds",
                               "derived"},
 }
