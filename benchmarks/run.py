@@ -27,6 +27,7 @@ def main() -> None:
         serve_latency,
         streaming_fit,
         tenant_churn,
+        vecchia,
     )
 
     modules = [
@@ -40,6 +41,7 @@ def main() -> None:
         ("gp_hyperopt", gp_hyperopt),                # fleet hyperopt vs loop
         ("serve_latency", serve_latency),            # pipelined engine vs sync
         ("tenant_churn", tenant_churn),              # tiered paging + forgetting
+        ("vecchia", vecchia),                        # NN conditioning vs globals
         ("roofline_table", roofline_table),          # dry-run summary
     ]
     failed = 0

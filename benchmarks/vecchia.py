@@ -1,0 +1,201 @@
+"""Vecchia vs the global expansions and the exact GP — accuracy + wall-clock.
+
+Two claims land in ``BENCH_vecchia.json`` (hard-gated by
+tools/check_bench.py against BENCH_baselines.json):
+
+* **clustered-spatial accuracy** — on the short-lengthscale clustered 2-D
+  data of ``make_clustered_dataset`` (the regime the family exists for),
+  vecchia (k=32) beats EVERY registered global expansion at matched
+  hyperparameters and matched-or-lower serve wall-clock.  Recorded as
+  ``accuracy.global_over_vecchia_rmse`` (gated >= 1.0) and
+  ``accuracy.vecchia_over_best_global_seconds`` (gated <= 1.25).
+* **exact-GP agreement** — at full conditioning sets (k = N-1, N = 256)
+  vecchia prediction IS the exact GP for both reference kernels:
+  ``agreement.<kernel>.mu_abs``/``var_abs`` gated <= 1e-4 (measured
+  ~1e-6; both sides factorize the same matrix under different orders).
+
+Plus the scaling sweep: vecchia vs exact (O(N k^3) vs O(N^3), exact
+capped at N <= 5000) and vecchia vs RFF serve wall-clock at
+N = 2000..20000.
+
+  PYTHONPATH=src python -m benchmarks.vecchia [--smoke | --full]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import exact_gp
+from repro.core.gp import GP, GPSpec
+from repro.core.mercer import SEKernelParams
+from repro.data.gp_synthetic import make_clustered_dataset
+
+from .common import emit, time_loop
+
+ROOT = Path(__file__).resolve().parents[1]
+JSON_PATH = ROOT / "BENCH_vecchia.json"
+
+# the clustered-spatial workload (tests/test_vecchia.py pins the same
+# shape at N=1500): bump length scale 0.15 -> eps = 1/(sqrt(2) * 0.15)
+EPS = 4.714
+NOISE = 0.02
+K = 32
+DATA_KW = dict(extent=6.0, length_scale=0.15, noise=0.02, n_bumps=120)
+N_AGREE = 256
+EXACT_MAX_N = 5000  # O(N^3)/O(N^2): keep the exact baseline tractable
+
+
+def _data(N, seed=0):
+    return make_clustered_dataset(N, seed=seed, **DATA_KW)
+
+
+def _global_specs():
+    """One matched-hyperparameter spec per registered global expansion."""
+    eps = [EPS, EPS]
+    return {
+        "hermite": GPSpec.create(12, eps, noise=NOISE),
+        "rff_se": GPSpec.create_rff(eps, noise=NOISE, num_features=256,
+                                    seed=0),
+        "rff_matern52": GPSpec.create_rff(eps, noise=NOISE,
+                                          kernel="matern52",
+                                          num_features=256, seed=0),
+    }
+
+
+def _vecchia_spec(k=K, kernel="se"):
+    return GPSpec.create_vecchia([EPS, EPS], NOISE, kernel=kernel,
+                                 neighbors=k)
+
+
+def _fit_serve(spec, X, y, Xs):
+    mu, var = GP.fit(X, y, spec).mean_var(Xs)
+    jax.block_until_ready((mu, var))
+    return mu
+
+
+def _exact_fit_serve(X, y, Xs, kernel="se"):
+    params = SEKernelParams(
+        eps=jnp.asarray([EPS, EPS]), rho=jnp.asarray(2.0),
+        noise=jnp.asarray(NOISE),
+    )
+    st = exact_gp.fit(X, y, params, kernel)
+    mu, var = exact_gp.mean_var(st, Xs)
+    jax.block_until_ready((mu, var))
+    return mu, var
+
+
+def run(full: bool = False, smoke: bool = False):
+    n_acc = 4000 if smoke else (20000 if full else 10000)
+    sweep = ([2000, 5000] if smoke
+             else ([2000, 5000, 10000, 20000] if full else [2000, 5000,
+                                                            10000]))
+    repeats = 2 if smoke else 3
+
+    results = []
+
+    def record(name, seconds, derived=""):
+        results.append({"name": name, "seconds": seconds, "derived": derived})
+        emit(f"vecchia/{name}", seconds, derived)
+
+    # -- clustered-spatial accuracy at matched hyperparameters --------------
+    X, y, Xs, ys = _data(n_acc)
+
+    def rmse(mu):
+        return float(jnp.sqrt(jnp.mean((mu - ys) ** 2)))
+
+    tag = f"N={n_acc};k={K}"
+    mu_v = _fit_serve(_vecchia_spec(), X, y, Xs)
+    t_v = time_loop(lambda: _fit_serve(_vecchia_spec(), X, y, Xs),
+                    repeats=repeats)
+    r_v = rmse(mu_v)
+    record("vecchia-serve", t_v, f"{tag};rmse={r_v:.4f}")
+
+    global_rmse, global_secs = {}, {}
+    for name, spec in _global_specs().items():
+        mu_g = _fit_serve(spec, X, y, Xs)
+        t_g = time_loop(lambda: _fit_serve(spec, X, y, Xs), repeats=repeats)
+        global_rmse[name] = rmse(mu_g)
+        global_secs[name] = t_g
+        record(f"{name}-serve", t_g,
+               f"N={n_acc};rmse={global_rmse[name]:.4f}")
+
+    best_global = min(global_rmse, key=global_rmse.get)
+    accuracy = {
+        "vecchia_rmse": r_v,
+        "vecchia_seconds": t_v,
+        "global_rmse": global_rmse,
+        "best_global": best_global,
+        "best_global_rmse": global_rmse[best_global],
+        "global_over_vecchia_rmse": global_rmse[best_global] / r_v,
+        "vecchia_over_best_global_seconds": t_v / global_secs[best_global],
+    }
+    assert accuracy["global_over_vecchia_rmse"] >= 1.0, accuracy
+    assert accuracy["vecchia_over_best_global_seconds"] <= 1.25, accuracy
+
+    # -- exact-GP agreement at full conditioning sets -----------------------
+    Xa, ya, Xsa, _ = _data(N_AGREE, seed=0)
+    agreement = {}
+    for kernel in ("se", "matern52"):
+        spec = _vecchia_spec(k=N_AGREE - 1, kernel=kernel)
+        mu, var = GP.fit(Xa, ya, spec).mean_var(Xsa)
+        mu_e, var_e = _exact_fit_serve(Xa, ya, Xsa, kernel)
+        agreement[kernel] = {
+            "mu_abs": float(jnp.max(jnp.abs(mu - mu_e))),
+            "var_abs": float(jnp.max(jnp.abs(var - var_e))),
+        }
+        assert agreement[kernel]["mu_abs"] <= 1e-4, agreement
+        assert agreement[kernel]["var_abs"] <= 1e-4, agreement
+    record("agreement-checked", 0.0,
+           f"N={N_AGREE};k={N_AGREE - 1};"
+           f"max_mu_abs={max(a['mu_abs'] for a in agreement.values()):.2e}")
+
+    # -- scaling sweep: vecchia vs exact vs RFF -----------------------------
+    scaling = []
+    rff_spec = _global_specs()["rff_se"]
+    for N in sweep:
+        Xn, yn, Xsn, _ = _data(N, seed=1)
+        t_vn = time_loop(lambda: _fit_serve(_vecchia_spec(), Xn, yn, Xsn),
+                         repeats=repeats)
+        t_rn = time_loop(lambda: _fit_serve(rff_spec, Xn, yn, Xsn),
+                         repeats=repeats)
+        row = {"N": N, "vecchia_s": t_vn, "rff_se_s": t_rn}
+        record(f"vecchia-serve-N{N}", t_vn, f"k={K}")
+        record(f"rff_se-serve-N{N}", t_rn, "R=256")
+        if N <= EXACT_MAX_N:
+            t_en = time_loop(
+                lambda: _exact_fit_serve(Xn, yn, Xsn), repeats=repeats
+            )
+            row["exact_s"] = t_en
+            record(f"exact-serve-N{N}", t_en, "O(N^3)")
+        else:
+            record(f"exact-serve-N{N}", 0.0,
+                   f"skipped: N > {EXACT_MAX_N} (O(N^3) baseline capped)")
+        scaling.append(row)
+
+    payload = {
+        "schema": 1,
+        "smoke": bool(smoke),
+        "config": {"n_acc": n_acc, "k": K, "eps": EPS, "noise": NOISE,
+                   "sweep": sweep, "n_agree": N_AGREE,
+                   "exact_max_n": EXACT_MAX_N, "repeats": repeats,
+                   "data": DATA_KW},
+        "results": results,
+        "accuracy": accuracy,
+        "agreement": agreement,
+        "scaling": scaling,
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+def main():
+    run(full="--full" in sys.argv, smoke="--smoke" in sys.argv)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,10 +28,10 @@ import json
 from pathlib import Path
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fagp
+from repro.core.approximation import get_approximation
 from repro.core.fagp import FAGPState, GPSpec
 
 from . import store
@@ -41,9 +41,20 @@ __all__ = ["save_state", "load_state", "spec_manifest", "omega_hash"]
 FORMAT = "repro.gpstate"
 FORMAT_VERSION = 1
 
-# state leaves serialized for every session (b is guaranteed: bank-less
-# pre-PR-1 states without it are rejected at save time, like banks do)
-_LEAVES = ("lam", "sqrtlam", "chol", "u", "b")
+# the FAGP family's state leaves (b is guaranteed: bank-less pre-PR-1
+# states without it are rejected at save time, like banks do).  Kept as a
+# module constant for the tests that pin the on-disk layout; the live
+# source of truth is each family's ``ckpt_leaf_names`` hook.
+_LEAVES = fagp._CKPT_LEAVES
+
+# manifest keys added with the approximation protocol (PR 10); manifests
+# written before it lack them and load with these defaults — i.e. every
+# old checkpoint IS an "fagp" checkpoint, bit-exactly
+_SPEC_MANIFEST_DEFAULTS = {
+    "approximation": "fagp",
+    "kernel": None,
+    "neighbors": None,
+}
 
 
 def omega_hash(omega) -> Optional[str]:
@@ -64,6 +75,7 @@ def spec_manifest(spec: GPSpec) -> dict:
     to rebuild it at load time except the hyperparameter arrays (those are
     data leaves in the npz)."""
     return {
+        "approximation": spec.approximation,
         "expansion": spec.expansion,
         "n": int(spec.n),
         "index_set": spec.index_set,
@@ -72,6 +84,8 @@ def spec_manifest(spec: GPSpec) -> dict:
         "store_train": bool(spec.store_train),
         "backend": spec.backend,
         "omega_sha256": omega_hash(spec.omega),
+        "kernel": spec.kernel,
+        "neighbors": None if spec.neighbors is None else int(spec.neighbors),
     }
 
 
@@ -80,10 +94,13 @@ def _check_compatible(meta: dict, spec: GPSpec, who: str) -> None:
     — the serialized mirror of the with_spec / bank-admission checks."""
     ms = meta["spec"]
     for f in fagp._STRUCTURAL_FIELDS:
-        if ms[f] != getattr(spec, f):
+        have = ms.get(f, _SPEC_MANIFEST_DEFAULTS.get(f)) if (
+            f in _SPEC_MANIFEST_DEFAULTS
+        ) else ms[f]
+        if have != getattr(spec, f):
             raise ValueError(
                 f"{who}: checkpoint/spec mismatch: checkpoint was saved "
-                f"with {f}={ms[f]!r} but the target spec has "
+                f"with {f}={have!r} but the target spec has "
                 f"{f}={getattr(spec, f)!r}; structural choices are frozen "
                 f"into the factorization — refit instead of restoring"
             )
@@ -115,21 +132,21 @@ def save_state(
             "save_state needs a spec-carrying state (fit() bakes one in); "
             "attach one with state.with_spec(spec) first"
         )
-    if state.b is None:
-        raise ValueError(
-            "save_state: state lacks the raw moment vector b (a pre-PR-1 "
-            "fit path); refit before saving"
-        )
+    ap = get_approximation(spec.approximation)
     if step is None:
         last = store.latest_step(ckpt_dir)
         step = 0 if last is None else last + 1
     tree = {
-        "leaves": {f: getattr(state, f) for f in _LEAVES},
+        "leaves": ap.ckpt_leaves(state),
         "hypers": {"eps": spec.eps, "rho": spec.rho, "noise": spec.noise},
     }
     if spec.omega is not None:
         tree["omega"] = spec.omega
-    has_train = state.Phi is not None and state.y is not None
+    # stored-training-data sidecar (FAGP's store_train path; families whose
+    # leaves ARE the training data, like vecchia, never set it)
+    has_train = (
+        getattr(state, "Phi", None) is not None and state.y is not None
+    )
     if has_train:
         tree["train"] = {"Phi": state.Phi, "y": state.y}
     extra = dict(extra or {})
@@ -140,10 +157,9 @@ def save_state(
         "format_version": FORMAT_VERSION,
         "spec": spec_manifest(spec),
         "p": int(spec.p),
-        "M": int(state.n_features),
-        "n_tasks": int(state.n_tasks),
         "has_train": bool(has_train),
         "extra_keys": sorted(extra),
+        **ap.ckpt_meta(state),
     }
     store.save(ckpt_dir, step, tree, metadata=meta)
     return step
@@ -187,11 +203,18 @@ def load_state(
     if like_spec is not None:
         _check_compatible(meta, like_spec, "load_state")
 
+    ms = meta["spec"]
+    # manifests written before the approximation protocol carry no family
+    # tag: they ARE fagp checkpoints and load bit-exactly as such
+    ap = get_approximation(
+        ms.get("approximation", _SPEC_MANIFEST_DEFAULTS["approximation"])
+    )
+
     # rebuild a like-tree with the manifest's structure; restore() takes
     # array shapes from the npz, so placeholders carry structure only
     z = np.zeros(0, np.float32)
     like: dict = {
-        "leaves": {f: z for f in _LEAVES},
+        "leaves": {f: z for f in ap.ckpt_leaf_names()},
         "hypers": {"eps": z, "rho": z, "noise": z},
     }
     if meta["spec"]["omega_sha256"] is not None:
@@ -202,7 +225,6 @@ def load_state(
         like["extra"] = {k: z for k in meta["extra_keys"]}
     _, tree = store.restore(ckpt_dir, like, step=step)
 
-    ms = meta["spec"]
     spec = GPSpec(
         eps=tree["hypers"]["eps"], rho=tree["hypers"]["rho"],
         noise=tree["hypers"]["noise"], n=ms["n"],
@@ -210,6 +232,9 @@ def load_state(
         block_rows=ms["block_rows"], store_train=ms["store_train"],
         backend=ms["backend"], expansion=ms["expansion"],
         omega=tree.get("omega"),
+        approximation=ap.name,
+        kernel=ms.get("kernel", _SPEC_MANIFEST_DEFAULTS["kernel"]),
+        neighbors=ms.get("neighbors", _SPEC_MANIFEST_DEFAULTS["neighbors"]),
     )
     if like_spec is not None and require_hypers_match:
         for f in fagp._HYPER_FIELDS:
@@ -221,14 +246,7 @@ def load_state(
                     f"session under it (or restore into a heterogeneous "
                     f"bank)"
                 )
-    train = tree.get("train", {})
-    state = FAGPState(
-        idx=jnp.asarray(spec.indices()),
-        lam=tree["leaves"]["lam"], sqrtlam=tree["leaves"]["sqrtlam"],
-        chol=tree["leaves"]["chol"], u=tree["leaves"]["u"],
-        params=spec.params, Phi=train.get("Phi"), y=train.get("y"),
-        b=tree["leaves"]["b"], spec=spec,
-    )
+    state = ap.ckpt_rebuild(spec, tree["leaves"], tree.get("train"))
     extra = {
         k: np.asarray(v) for k, v in tree.get("extra", {}).items()
     }

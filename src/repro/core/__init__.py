@@ -5,8 +5,18 @@ Approximation in CUDA" — reimplemented TPU-natively in JAX.
 
 The public session API is the `GP` facade (`core.gp`): one self-describing
 object over fit/predict/update/nlml with the spec baked into the state.
+The approximation family behind the facade is pluggable
+(`core.approximation`): `"fagp"` (the paper's decomposed kernel, default)
+or `"vecchia"` (nearest-neighbor conditioning, `core.vecchia`).
 """
-from . import exact_gp, expansions, fagp, gp, mercer
+from . import approximation, exact_gp, expansions, fagp, gp, mercer, vecchia
+from .approximation import (
+    Approximation,
+    UnsupportedError,
+    available_approximations,
+    get_approximation,
+    register_approximation,
+)
 from .expansions import (
     KernelExpansion,
     available_expansions,
@@ -24,6 +34,7 @@ from .fagp import (
     predict_mean_var,
 )
 from .gp import GP
+from .vecchia import VecchiaState
 from .mercer import (
     SEKernelParams,
     eigenvalues_1d,

@@ -1,0 +1,180 @@
+"""Approximation registry — the pluggable family layer behind ``GP``.
+
+The paper's technique (FAGP: a decomposed kernel + Woodbury, Eqs. 8-12) is
+ONE way to approximate the exact GP posterior.  This module is the seam
+that makes it one of several: an :class:`Approximation` names a family
+(``"fagp"``, ``"vecchia"``), declares which facade operations it supports
+(capability flags), implements them against its own state type, and
+provides the checkpoint hooks ``repro.checkpoint.gpstate`` serializes
+through.  ``GPSpec`` carries the chosen family as the static
+``approximation`` field (default ``"fagp"``, so every pre-existing spec,
+checkpoint and call site is untouched) and ``core.gp.GP`` dispatches every
+method through :func:`get_approximation` — the facade is the contract, the
+families are plugins.
+
+Layering: this module imports NOTHING from the rest of ``repro.core`` (it
+is below ``fagp``/``vecchia``, which both import it).  Families register at
+import time exactly like kernel expansions (``core.expansions``) and
+execution backends (``fagp.register_backend``) do.
+
+Refusals are STRUCTURED: an operation a family (or an execution backend)
+cannot run raises :class:`UnsupportedError` carrying ``(layer, capability,
+spec)`` — one error vocabulary shared by the approximation capability
+flags and the backend registry's ``FitBackend.supports`` refusals (e.g.
+the pallas n>64 Hermite recurrence limit).  ``UnsupportedError`` subclasses
+``ValueError`` and its message always contains the phrase "does not
+support", so pre-existing ``except ValueError`` / message-matching callers
+keep working.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+__all__ = [
+    "Approximation",
+    "UnsupportedError",
+    "available_approximations",
+    "get_approximation",
+    "register_approximation",
+    "require_capability",
+]
+
+
+def _describe(spec: Any) -> str:
+    describe = getattr(spec, "describe", None)
+    return describe() if callable(describe) else repr(spec)
+
+
+class UnsupportedError(ValueError):
+    """A layer refused an operation it does not implement for this spec.
+
+    One structured vocabulary for every capability refusal in the stack:
+
+    layer:      which registry refused — ``"approximation"`` (a family's
+                capability flags) or ``"backend"`` (``FitBackend.supports``).
+    capability: what was asked of it — a facade operation name
+                (``"predict"``, ``"optimize"``, ...) for approximations,
+                the backend name for backend refusals.
+    spec:       the offending ``GPSpec``.
+
+    Subclasses ``ValueError`` (the pre-protocol refusal type) and the
+    message always contains "does not support".
+    """
+
+    def __init__(self, message: str, *, layer: str, capability: str,
+                 spec: Any = None):
+        super().__init__(message)
+        self.layer = layer
+        self.capability = capability
+        self.spec = spec
+
+
+class Approximation:
+    """One registered approximation family behind the ``GP`` facade.
+
+    Subclasses set ``name`` and ``capabilities`` and implement the
+    operations they declare; anything not declared is refused with a
+    structured :class:`UnsupportedError` (``GP`` checks the flags *before*
+    calling, so refusal happens at the facade boundary, not deep inside a
+    kernel launch).  The recognized capability flags are
+
+        fit / predict / mean_var / update / nlml / optimize / bank
+
+    (``bank`` marks the family as admissible to ``repro.bank.GPBank``'s
+    stacked-tenant machinery).
+
+    Checkpoint hooks (``repro.checkpoint.gpstate`` serializes any family
+    through these; the manifest records ``spec.approximation`` so a restore
+    resolves the right family — and manifests written before the protocol
+    existed load as ``"fagp"``):
+
+    ckpt_leaf_names: the ordered array-leaf names of the state.
+    ckpt_leaves:     state -> {name: array} for exactly those names.
+    ckpt_meta:       state -> extra manifest metadata (informational).
+    ckpt_rebuild:    (spec, leaves, train) -> state; ``train`` is the
+                     optional stored-training-data dict (FAGP's
+                     ``store_train`` path; None for families that keep
+                     training data among their leaves).
+    """
+
+    name: str = "abstract"
+    capabilities: frozenset = frozenset()
+
+    # -- spec validation (runs at GPSpec construction) ----------------------
+
+    def validate(self, spec: Any) -> None:
+        raise NotImplementedError
+
+    # -- facade operations --------------------------------------------------
+
+    def fit(self, X, y, spec):
+        self.refuse("fit", spec)
+
+    def predict(self, state, Xs, *, mode: str = "fused"):
+        self.refuse("predict", getattr(state, "spec", None))
+
+    def mean_var(self, state, Xs):
+        self.refuse("mean_var", getattr(state, "spec", None))
+
+    def update(self, state, X_new, y_new):
+        self.refuse("update", getattr(state, "spec", None))
+
+    def nlml(self, X, y, spec, *, mask=None):
+        self.refuse("nlml", spec)
+
+    def optimize(self, X, y, spec, **kwargs):
+        self.refuse("optimize", spec)
+
+    # -- checkpoint hooks ---------------------------------------------------
+
+    def ckpt_leaf_names(self) -> tuple:
+        raise NotImplementedError
+
+    def ckpt_leaves(self, state) -> dict:
+        raise NotImplementedError
+
+    def ckpt_meta(self, state) -> dict:
+        return {}
+
+    def ckpt_rebuild(self, spec, leaves: dict, train: Optional[dict]):
+        raise NotImplementedError
+
+    # -- refusal ------------------------------------------------------------
+
+    def refuse(self, capability: str, spec: Any) -> None:
+        """Raise the structured refusal for ``capability``."""
+        raise UnsupportedError(
+            f"approximation {self.name!r} does not support {capability!r} "
+            f"for {_describe(spec)}; its capabilities are "
+            f"{sorted(self.capabilities)}",
+            layer="approximation", capability=capability, spec=spec,
+        )
+
+
+_APPROXIMATIONS: dict = {}
+
+
+def register_approximation(approx: Approximation) -> None:
+    _APPROXIMATIONS[approx.name] = approx
+
+
+def get_approximation(name: str) -> Approximation:
+    try:
+        return _APPROXIMATIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown approximation {name!r}; registered: "
+            f"{available_approximations()}"
+        ) from None
+
+
+def available_approximations() -> list:
+    return sorted(_APPROXIMATIONS)
+
+
+def require_capability(approx: Approximation, capability: str,
+                       spec: Any) -> None:
+    """The facade-boundary capability gate: raise the family's structured
+    refusal unless it declares ``capability``."""
+    if capability not in approx.capabilities:
+        approx.refuse(capability, spec)

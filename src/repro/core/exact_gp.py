@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from .mercer import SEKernelParams, k_matern52_ard, k_se_ard
 
-__all__ = ["ExactGPState", "KERNELS", "fit", "predict", "nlml"]
+__all__ = ["ExactGPState", "KERNELS", "fit", "predict", "mean_var", "nlml"]
 
 # exact reference kernels by name; the KernelExpansion instances point at
 # these via ``exact_kernel`` so the parity tests share one oracle table
@@ -58,6 +58,19 @@ def predict(state: ExactGPState, Xs: jax.Array):
     Kss = k(Xs, Xs, state.params.eps)
     cov = Kss - V.T @ V                                    # Eq. 4
     return mu, cov
+
+
+@jax.jit
+def mean_var(state: ExactGPState, Xs: jax.Array):
+    """Posterior mean (N*,) and marginal variance (N*,) — the diagonal of
+    :func:`predict`'s covariance without forming the N* x N* matrix.  Both
+    reference kernels are unit-variance, so the prior diagonal is 1."""
+    k = KERNELS[state.kernel]
+    Ks = k(Xs, state.X, state.params.eps)                  # (N*, N)
+    mu = Ks @ state.alpha
+    V = jax.scipy.linalg.solve_triangular(state.chol, Ks.T, lower=True)
+    var = jnp.maximum(1.0 - jnp.sum(V * V, axis=0), 0.0)
+    return mu, var
 
 
 @partial(jax.jit, static_argnames=("kernel",))

@@ -117,7 +117,10 @@ class KernelExpansion:
     # -- Pallas tile contract (see kernels/hermite_phi.py) ------------------
 
     def pallas_supports(self, spec) -> Optional[str]:
-        """None when the Pallas tile path can run this spec, else a reason."""
+        """None when the Pallas tile path can run this spec, else a reason
+        string — surfaced by the backend registry as the structured
+        :class:`~repro.core.approximation.UnsupportedError` with
+        ``layer="backend"`` (e.g. the Hermite n > 64 recurrence limit)."""
         return None
 
     def pallas_prepare(self, idx_np: np.ndarray, spec):

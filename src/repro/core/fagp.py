@@ -105,6 +105,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .approximation import (
+    Approximation,
+    UnsupportedError,
+    get_approximation,
+    register_approximation,
+)
 from .expansions import (
     available_expansions,
     get_expansion,
@@ -173,7 +179,8 @@ class FAGPConfig:
     jax.tree_util.register_dataclass,
     data_fields=("eps", "rho", "noise", "omega"),
     meta_fields=("n", "index_set", "degree", "block_rows", "store_train",
-                 "backend", "expansion"),
+                 "backend", "expansion", "approximation", "kernel",
+                 "neighbors"),
 )
 @dataclasses.dataclass(frozen=True)
 class GPSpec:
@@ -203,6 +210,13 @@ class GPSpec:
     block_rows: row-block size for the streaming moment accumulation.
     store_train: keep (Phi, y) in the fitted state (needed for mode='paper').
     backend: execution backend name in the registry ('jnp' | 'pallas').
+    approximation: registered approximation family behind the GP facade
+            ('fagp' — this module, the paper's decomposed-kernel technique
+            — or 'vecchia'; see ``core.approximation``).  The default keeps
+            every pre-protocol spec, checkpoint and call site bit-exact.
+    kernel / neighbors: the Vecchia family's structure (exact reference
+            kernel name 'se' | 'matern52', conditioning-set size k); must
+            stay None on 'fagp' specs, whose structure is the expansion.
     """
 
     eps: jax.Array
@@ -216,6 +230,9 @@ class GPSpec:
     backend: str = "jnp"
     expansion: str = "hermite"
     omega: Optional[jax.Array] = None
+    approximation: str = "fagp"
+    kernel: Optional[str] = None
+    neighbors: Optional[int] = None
 
     @staticmethod
     def create(
@@ -233,12 +250,18 @@ class GPSpec:
         num_features: Optional[int] = None,
         seed: int = 0,
         omega=None,
+        approximation: str = "fagp",
+        kernel: Optional[str] = None,
+        neighbors: Optional[int] = None,
     ) -> "GPSpec":
         """Convenience constructor with scalar broadcasting: ``eps`` fixes
         p, scalars broadcast.  For non-deterministic expansions (the RFF
         families) the spectral base draws are drawn here from
         ``(num_features, seed)`` — or pass ``omega`` explicitly — and ride
-        on the spec as a data leaf."""
+        on the spec as a data leaf.  The spec is validated by its
+        approximation family HERE (an unknown ``approximation`` name or a
+        family-invalid field combination raises at construction, never at
+        fit time)."""
         eps = jnp.atleast_1d(jnp.asarray(eps, jnp.float32))
         rho = jnp.broadcast_to(jnp.asarray(rho, jnp.float32), eps.shape)
         if omega is None:
@@ -274,8 +297,10 @@ class GPSpec:
             block_rows=block_rows, store_train=store_train, backend=backend,
             expansion=expansion,
             omega=None if omega is None else jnp.asarray(omega, jnp.float32),
+            approximation=approximation, kernel=kernel,
+            neighbors=None if neighbors is None else int(neighbors),
         )
-        get_expansion(expansion).validate(spec)
+        get_approximation(approximation).validate(spec)
         return spec
 
     @staticmethod
@@ -298,6 +323,26 @@ class GPSpec:
             1, eps, rho, noise, block_rows=block_rows,
             store_train=store_train, backend=backend,
             expansion=f"rff_{kernel}", num_features=num_features, seed=seed,
+        )
+
+    @staticmethod
+    def create_vecchia(
+        eps,
+        noise=1e-2,
+        *,
+        kernel: str = "se",
+        neighbors: int = 32,
+        rho=2.0,
+        block_rows: int = 4096,
+        backend: str = "jnp",
+    ) -> "GPSpec":
+        """Sugar for the Vecchia nearest-neighbor family
+        (``core.vecchia``): ``kernel`` names the exact reference oracle
+        ('se' | 'matern52'), ``neighbors`` is the conditioning-set size k.
+        The expansion fields are inert for this family."""
+        return GPSpec.create(
+            1, eps, rho, noise, block_rows=block_rows, backend=backend,
+            approximation="vecchia", kernel=kernel, neighbors=neighbors,
         )
 
     @staticmethod
@@ -338,6 +383,12 @@ class GPSpec:
 
     def describe(self) -> str:
         """Short human-readable summary for error messages."""
+        if self.approximation != "fagp":
+            return (
+                f"GPSpec(approximation={self.approximation!r}, "
+                f"kernel={self.kernel!r}, neighbors={self.neighbors}, "
+                f"p={self.p}, backend={self.backend!r})"
+            )
         extra = (
             f"n={self.n}, index_set={self.index_set!r}, degree={self.degree}"
             if self.expansion == "hermite"
@@ -350,8 +401,10 @@ class GPSpec:
 
 
 # spec fields frozen into the factorization: with_spec calls may not change
-# these on a fitted state (idx, lam, chol all depend on them)
-_STRUCTURAL_FIELDS = ("expansion", "n", "index_set", "degree")
+# these on a fitted state (idx, lam, chol all depend on them; for vecchia
+# the kernel/neighbor structure likewise defines the session)
+_STRUCTURAL_FIELDS = ("approximation", "expansion", "n", "index_set",
+                      "degree", "kernel", "neighbors")
 _HYPER_FIELDS = ("eps", "rho", "noise", "omega")
 
 
@@ -724,14 +777,29 @@ def available_backends() -> list[str]:
 
 def _check_backend_support(spec: "GPSpec") -> FitBackend:
     """Resolve spec.expansion and spec.backend, validate the spec against
-    the expansion, and enforce the backend's declared capabilities."""
+    the expansion, and enforce the backend's declared capabilities.
+
+    Refusals are the structured :class:`UnsupportedError` shared with the
+    approximation capability flags: a backend declining a spec (e.g. the
+    pallas Hermite recurrence depth limit) raises with ``layer="backend"``
+    and ``capability=spec.backend``; a non-FAGP spec reaching these entry
+    points at all raises with ``layer="approximation"`` (route through
+    ``core.gp.GP``, which dispatches by ``spec.approximation``)."""
+    if spec.approximation != "fagp":
+        raise UnsupportedError(
+            f"the fagp module does not support {spec.describe()}: its "
+            f"entry points run the 'fagp' family only — dispatch through "
+            f"repro.core.gp.GP, which routes by spec.approximation",
+            layer="approximation", capability="fagp", spec=spec,
+        )
     get_expansion(spec.expansion).validate(spec)
     backend = get_backend(spec.backend)
     reason = backend.supports(spec)
     if reason is not None:
-        raise ValueError(
+        raise UnsupportedError(
             f"backend {spec.backend!r} does not support {spec.describe()}: "
-            f"{reason} (registered backends: {available_backends()})"
+            f"{reason} (registered backends: {available_backends()})",
+            layer="backend", capability=spec.backend, spec=spec,
         )
     return backend
 
@@ -1325,3 +1393,113 @@ def nlml(X, y, spec: GPSpec, idx=None, n_max: Optional[int] = None,
                 f"nlml mask must be (N,) = ({X.shape[0]},), got {mask.shape}"
             )
     return _nlml_jit(X, y, spec, mask)
+
+
+# ---------------------------------------------------------------------------
+# The registered approximation family — FAGP as one plugin behind the GP
+# facade (core.approximation).  Everything above stays the module-level
+# expert API; the protocol adapter below is what ``GP`` dispatches through,
+# and what makes Vecchia (core.vecchia) a true sibling rather than a fork.
+# ---------------------------------------------------------------------------
+
+
+_CKPT_LEAVES = ("lam", "sqrtlam", "chol", "u", "b")
+
+
+class _FagpApproximation(Approximation):
+    """``spec.approximation == "fagp"``: the paper's decomposed-kernel
+    family.  Full capability surface, including bank admission."""
+
+    name = "fagp"
+    capabilities = frozenset(
+        {"fit", "predict", "mean_var", "update", "nlml", "optimize", "bank"}
+    )
+    state_type = FAGPState
+
+    def validate(self, spec: "GPSpec") -> None:
+        if spec.kernel is not None or spec.neighbors is not None:
+            raise ValueError(
+                f"kernel=/neighbors= are vecchia-only spec fields but "
+                f"approximation='fagp'; the FAGP family's structure is its "
+                f"expansion — use GPSpec.create_vecchia for the Vecchia "
+                f"family ({spec.describe()})"
+            )
+        get_expansion(spec.expansion).validate(spec)
+
+    def fit(self, X, y, spec):
+        return fit(X, y, spec)
+
+    def predict(self, state, Xs, *, mode: str = "fused"):
+        return predict(state, Xs, mode=mode)
+
+    def mean_var(self, state, Xs):
+        return predict_mean_var(state, Xs)
+
+    def update(self, state, X_new, y_new):
+        return fit_update(state, X_new, y_new)
+
+    def nlml(self, X, y, spec, *, mask=None):
+        return nlml(X, y, spec, mask=mask)
+
+    def optimize(self, X, y, spec, *, steps: int = 100, lr: float = 5e-2,
+                 restarts: int = 1, tol: Optional[float] = None,
+                 jitter: float = 0.3, seed: int = 0, callback=None):
+        """Gradient NLML hyperparameter learning on the fleet lane engine
+        (``repro.optim.gp_hyperopt``), then a fit at the learned
+        hyperparameters — the body behind ``GP.optimize``."""
+        from repro.optim import gp_hyperopt
+
+        def cb(step, vals, hp):
+            if callback is None:
+                return
+            r = int(np.argmin(vals[0]))
+            lane = {f: leaf[0, r] for f, leaf in hp.items()}
+            callback(
+                step, float(vals[0, r]),
+                dataclasses.replace(
+                    spec,
+                    eps=jnp.exp(lane["log_eps"]),
+                    rho=jnp.exp(lane["log_rho"]),
+                    noise=jnp.exp(lane["log_noise"]),
+                ),
+            )
+
+        result = gp_hyperopt.optimize_restarts(
+            X, y, spec, restarts=restarts, steps=steps, lr=lr, tol=tol,
+            jitter=jitter, seed=seed, callback=cb,
+        )
+        return fit(X, y, result.spec_for(spec, 0))
+
+    # -- checkpoint hooks (repro.checkpoint.gpstate) ------------------------
+
+    def ckpt_leaf_names(self) -> tuple:
+        return _CKPT_LEAVES
+
+    def ckpt_leaves(self, state: FAGPState) -> dict:
+        if state.b is None:
+            raise ValueError(
+                "save_state: state lacks the raw moment vector b (a "
+                "pre-PR-1 fit path); refit before saving"
+            )
+        return {f: getattr(state, f) for f in _CKPT_LEAVES}
+
+    def ckpt_meta(self, state: FAGPState) -> dict:
+        return {"M": int(state.n_features), "n_tasks": int(state.n_tasks)}
+
+    def ckpt_rebuild(self, spec, leaves: dict, train) -> FAGPState:
+        train = train or {}
+        return FAGPState(
+            idx=jnp.asarray(spec.indices()),
+            lam=leaves["lam"], sqrtlam=leaves["sqrtlam"],
+            chol=leaves["chol"], u=leaves["u"], params=spec.params,
+            Phi=train.get("Phi"), y=train.get("y"), b=leaves["b"],
+            spec=spec,
+        )
+
+
+register_approximation(_FagpApproximation())
+
+# importing the sibling family registers it; must come AFTER this module's
+# definitions (vecchia pulls _STRUCTURAL_FIELDS etc. lazily, never at its
+# module scope — see the layering note in core/vecchia.py)
+from . import vecchia as _vecchia  # noqa: E402,F401  (registration import)

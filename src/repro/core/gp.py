@@ -16,21 +16,40 @@ object instead of six free functions that each re-take configuration:
 
     gp.with_spec(backend="pallas")       # serve-time backend swap (validated)
 
-`GP` is an immutable pytree wrapping the fitted :class:`FAGPState`; every
-method returns results or a new `GP`.  Multi-output targets ``y`` of shape
-``(N, T)`` share one M x M Cholesky factorization with per-task mean
-weights — ``predict``/``mean_var`` then return ``(N*, T)`` means and a
-shared variance.  `serve_gp`, `core.distributed` and the benchmarks all
-speak this one interface.
+`GP` is an immutable pytree wrapping a fitted state; every method returns
+results or a new `GP`.  Multi-output targets ``y`` of shape ``(N, T)``
+share one factorization with per-task mean weights — ``predict``/
+``mean_var`` then return ``(N*, T)`` means and a shared variance.
+`serve_gp`, `core.distributed` and the benchmarks all speak this one
+interface.
 
-The kernel decomposition is pluggable (``spec.expansion`` names a
-registered :class:`~repro.core.expansions.KernelExpansion`): the same
-facade serves the paper's Hermite-Mercer eigen-expansion (default) and the
-random-Fourier families —
+TWO things are pluggable behind the facade, at different layers:
 
-    spec = GPSpec.create_rff([0.8, 0.8], kernel="matern52",
-                             num_features=256, seed=0)
-    gp = GP.fit(X, y, spec)              # same calls, different kernel
+* the APPROXIMATION FAMILY (``spec.approximation``, a registered
+  :class:`~repro.core.approximation.Approximation`): every method below
+  dispatches through the family's protocol adapter.  ``"fagp"`` (default)
+  is the paper's decomposed-kernel technique with its expansion/backend
+  machinery; ``"vecchia"`` (``core.vecchia``) is nearest-neighbor
+  conditioning for the clustered-spatial regime —
+
+      spec = GPSpec.create_vecchia([2.0, 2.0], 0.1, kernel="matern52",
+                                   neighbors=32)
+      gp = GP.fit(X, y, spec)          # same calls, different family
+      mu, var = gp.mean_var(Xs)
+
+  A family declares capability flags; calling a method it does not
+  implement (e.g. ``predict``/``optimize`` on vecchia) raises the
+  structured :class:`~repro.core.approximation.UnsupportedError` at the
+  facade boundary, before any compute.
+
+* within the FAGP family, the KERNEL EXPANSION (``spec.expansion`` names a
+  registered :class:`~repro.core.expansions.KernelExpansion`): the same
+  facade serves the paper's Hermite-Mercer eigen-expansion (default) and
+  the random-Fourier families —
+
+      spec = GPSpec.create_rff([0.8, 0.8], kernel="matern52",
+                               num_features=256, seed=0)
+      gp = GP.fit(X, y, spec)          # same calls, different kernel
 
 ``GP.optimize`` learns RFF lengthscales exactly like Mercer ones (the
 spectral draws are data leaves on the spec; eps scales them inside the
@@ -40,16 +59,29 @@ two releases and now raise TypeError (README §Migration).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from . import fagp
+from . import fagp  # noqa: F401  (fagp registers both families on import)
+from .approximation import (
+    Approximation,
+    UnsupportedError,
+    get_approximation,
+    require_capability,
+)
 from .fagp import FAGPState, GPSpec
 
-__all__ = ["GP", "GPSpec"]
+__all__ = ["GP", "GPSpec", "Approximation", "UnsupportedError"]
+
+
+def _approx_for(spec: Optional[GPSpec]) -> Approximation:
+    if spec is None:
+        raise ValueError(
+            "state has no baked GPSpec; attach one with "
+            "state.with_spec(spec) first"
+        )
+    return get_approximation(spec.approximation)
 
 
 @jax.tree_util.register_dataclass
@@ -57,11 +89,14 @@ __all__ = ["GP", "GPSpec"]
 class GP:
     """A fitted GP session: the state (with its spec baked in) plus methods.
 
-    Construct with :meth:`fit`, :meth:`optimize`, or :meth:`from_state`; the
-    default constructor is for internal use.
+    ``state`` is whatever the spec's approximation family fits —
+    :class:`~repro.core.fagp.FAGPState` for ``"fagp"``,
+    :class:`~repro.core.vecchia.VecchiaState` for ``"vecchia"``.  Construct
+    with :meth:`fit`, :meth:`optimize`, or :meth:`from_state`; the default
+    constructor is for internal use.
     """
 
-    state: FAGPState
+    state: Any
 
     # -- constructors -------------------------------------------------------
 
@@ -69,10 +104,12 @@ class GP:
     def fit(cls, X: jax.Array, y: jax.Array, spec: GPSpec) -> "GP":
         """Fit the posterior; y is (N,) or (N, T) for T tasks sharing one
         factorization.  The spec is baked into the session."""
-        return cls(state=fagp.fit(X, y, spec))
+        ap = _approx_for(spec)
+        require_capability(ap, "fit", spec)
+        return cls(state=ap.fit(X, y, spec))
 
     @classmethod
-    def from_state(cls, state: FAGPState) -> "GP":
+    def from_state(cls, state) -> "GP":
         """Wrap an existing fitted state (e.g. from ``fit_distributed``)."""
         if state.spec is None:
             raise ValueError(
@@ -111,29 +148,16 @@ class GP:
 
         ``callback(step, nlml_per_row, current_spec)`` is invoked every 10%
         of the run with the currently-best lane's loss and hyperparameters.
+
+        Families that do not declare the ``optimize`` capability (vecchia,
+        for now) refuse here with a structured ``UnsupportedError``.
         """
-        from repro.optim import gp_hyperopt
-
-        def cb(step, vals, hp):
-            if callback is None:
-                return
-            r = int(np.argmin(vals[0]))
-            lane = {f: leaf[0, r] for f, leaf in hp.items()}
-            callback(
-                step, float(vals[0, r]),
-                dataclasses.replace(
-                    spec,
-                    eps=jnp.exp(lane["log_eps"]),
-                    rho=jnp.exp(lane["log_rho"]),
-                    noise=jnp.exp(lane["log_noise"]),
-                ),
-            )
-
-        result = gp_hyperopt.optimize_restarts(
-            X, y, spec, restarts=restarts, steps=steps, lr=lr, tol=tol,
-            jitter=jitter, seed=seed, callback=cb,
-        )
-        return cls.fit(X, y, result.spec_for(spec, 0))
+        ap = _approx_for(spec)
+        require_capability(ap, "optimize", spec)
+        return cls(state=ap.optimize(
+            X, y, spec, steps=steps, lr=lr, restarts=restarts, tol=tol,
+            jitter=jitter, seed=seed, callback=callback,
+        ))
 
     # -- introspection ------------------------------------------------------
 
@@ -142,8 +166,14 @@ class GP:
         return self.state.spec
 
     @property
+    def approximation(self) -> Approximation:
+        """The session's registered approximation family."""
+        return _approx_for(self.spec)
+
+    @property
     def n_features(self) -> int:
-        """M, the number of Mercer features (size of the fitted system)."""
+        """M, the number of Mercer features (size of the fitted system);
+        FAGP-family sessions only."""
         return self.state.n_features
 
     @property
@@ -154,19 +184,28 @@ class GP:
 
     def predict(self, Xs: jax.Array, *, mode: str = "fused"):
         """Posterior mean and full covariance at Xs (paper Eqs. 11-12)."""
-        return fagp.predict(self.state, Xs, mode=mode)
+        ap = self.approximation
+        require_capability(ap, "predict", self.spec)
+        return ap.predict(self.state, Xs, mode=mode)
 
     def mean_var(self, Xs: jax.Array):
         """Posterior mean and marginal variance — the serving path."""
-        return fagp.predict_mean_var(self.state, Xs)
+        ap = self.approximation
+        require_capability(ap, "mean_var", self.spec)
+        return ap.mean_var(self.state, Xs)
 
     def update(self, X_new: jax.Array, y_new: jax.Array) -> "GP":
-        """Absorb new observations via the rank-k Cholesky update."""
-        return GP(state=fagp.fit_update(self.state, X_new, y_new))
+        """Absorb new observations (FAGP: rank-k Cholesky update; vecchia:
+        exact concatenation into the conditioning pool)."""
+        ap = self.approximation
+        require_capability(ap, "update", self.spec)
+        return GP(state=ap.update(self.state, X_new, y_new))
 
     def nlml(self, X: jax.Array, y: jax.Array):
         """NLML of (X, y) under this session's spec."""
-        return fagp.nlml(X, y, self.spec)
+        ap = self.approximation
+        require_capability(ap, "nlml", self.spec)
+        return ap.nlml(X, y, self.spec)
 
     def with_spec(self, spec: Optional[GPSpec] = None, **overrides) -> "GP":
         """Serve-time escape hatch: swap execution knobs (backend,
@@ -179,9 +218,10 @@ class GP:
     def save(self, ckpt_dir, *, step: Optional[int] = None) -> int:
         """Serialize this session under ``ckpt_dir`` (versioned: each save
         lands as ``step_<version>``; ``step=None`` auto-increments).  The
-        manifest records the spec's structure — expansion, truncation, an
-        omega hash — so :meth:`load` round-trips bit-exactly and a restore
-        into an incompatible spec raises.  Returns the version written."""
+        manifest records the spec's structure — approximation family,
+        expansion, truncation, an omega hash — so :meth:`load` round-trips
+        bit-exactly and a restore into an incompatible spec raises.
+        Returns the version written."""
         from repro.checkpoint import gpstate
 
         return gpstate.save_state(ckpt_dir, self.state, step=step)
@@ -191,9 +231,11 @@ class GP:
              spec: Optional[GPSpec] = None) -> "GP":
         """Restore a session saved by :meth:`save` (``step=None`` loads the
         newest version).  The spec is rebuilt from the checkpoint itself —
-        hyperparameter leaves, omega draws and all.  Passing ``spec``
-        validates the checkpoint against it (structure AND
-        hyperparameters, like ``with_spec``) and raises on mismatch."""
+        hyperparameter leaves, omega draws, approximation tag and all
+        (manifests from before the approximation protocol load as
+        ``"fagp"``).  Passing ``spec`` validates the checkpoint against it
+        (structure AND hyperparameters, like ``with_spec``) and raises on
+        mismatch."""
         from repro.checkpoint import gpstate
 
         _, state, _ = gpstate.load_state(

@@ -10,8 +10,10 @@ gram        — fused scaled Gram  B = I + D Phi^T Phi D / sig2
 phi_gram    — streaming fused fit: feature tiles generated inside the Gram
               accumulation (Phi never in HBM); B and b in one pass
 diag_quad   — predictive-variance diagonal without the N* x N* covariance
+knn         — blocked streaming top-k neighbor search (the Vecchia
+              conditioning-set builder; no N x N distance matrix)
 """
-from . import diag_quad, gram, hermite_phi, ops, phi_gram, ref, rff_phi
+from . import diag_quad, gram, hermite_phi, knn, ops, phi_gram, ref, rff_phi
 from .ops import expansion_phi as expansion_phi_op        # noqa: F401
 from .ops import hermite_phi as hermite_phi_op            # noqa: F401
 from .ops import diag_quad as diag_quad_op                # noqa: F401

@@ -8,10 +8,15 @@ Pins the contracts of the `GP` facade / `GPSpec` redesign:
      independent single-output fits on both backends;
   4. the public surface of `repro.core.gp` is snapshot so future PRs cannot
      change it silently;
-  5. backends declare capabilities: an unsupported spec is refused with a
-     clear error at dispatch, not a crash deep in kernel preparation.
+  5. backends declare capabilities: an unsupported spec is refused with the
+     structured UnsupportedError at dispatch, not a crash deep in kernel
+     preparation;
+  6. the approximation field is backward compatible: pre-protocol specs and
+     checkpoints (no ``approximation`` anywhere) are the ``"fagp"`` family,
+     bit-exactly, and an unknown family name raises at spec construction.
 """
 import dataclasses
+import json
 import warnings
 
 import numpy as np
@@ -19,6 +24,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import fagp, mercer
+from repro.core.approximation import UnsupportedError
 from repro.core.gp import GP, GPSpec
 from repro.data import make_gp_dataset
 
@@ -31,11 +37,13 @@ def _problem(N=200, p=2, n=6, seed=0, **kw):
 
 class TestPublicSurface:
     def test_public_api_snapshot(self):
-        """The session API is exactly GP + GPSpec; widening or renaming it is
-        a deliberate act, not a drive-by."""
+        """The session API is GP + GPSpec plus the approximation-protocol
+        types; widening or renaming it is a deliberate act, not a drive-by."""
         import repro.core.gp as gpmod
 
-        assert sorted(gpmod.__all__) == ["GP", "GPSpec"]
+        assert sorted(gpmod.__all__) == [
+            "Approximation", "GP", "GPSpec", "UnsupportedError",
+        ]
 
     def test_facade_method_surface(self):
         expected = {"fit", "from_state", "optimize", "predict", "mean_var",
@@ -280,10 +288,61 @@ class TestMultiOutput:
                                    rtol=1e-5, atol=1e-6)
 
 
+class TestApproximationField:
+    """Satellite: the pluggable-family spec field is backward compatible."""
+
+    def test_default_spec_is_fagp(self):
+        """Every pre-protocol construction path yields the fagp family with
+        the vecchia-only fields unset — old code is untouched."""
+        _, _, _, spec = _problem()
+        assert spec.approximation == "fagp"
+        assert spec.kernel is None and spec.neighbors is None
+        rff = GPSpec.create_rff([0.8, 0.8], noise=0.05, num_features=16,
+                                seed=0)
+        assert rff.approximation == "fagp"
+
+    def test_unknown_approximation_raises_at_construction(self):
+        """A typo'd family name fails at GPSpec.create, listing the
+        registry — not at fit time deep in dispatch."""
+        with pytest.raises(ValueError, match="unknown approximation"):
+            GPSpec.create(6, eps=[0.8, 0.8], approximation="vechia")
+
+    def test_vecchia_only_fields_rejected_on_fagp(self):
+        with pytest.raises(ValueError, match="vecchia-only"):
+            GPSpec.create(6, eps=[0.8, 0.8], kernel="se")
+        with pytest.raises(ValueError, match="vecchia-only"):
+            GPSpec.create(6, eps=[0.8, 0.8], neighbors=16)
+
+    def test_old_style_checkpoint_loads_as_fagp_bit_exactly(self, tmp_path):
+        """A manifest written before the approximation protocol (no
+        approximation/kernel/neighbors keys) restores as an fagp session
+        with identical leaves."""
+        X, y, Xs, spec = _problem()
+        gp = GP.fit(X, y, spec)
+        gp.save(tmp_path)
+        # age the manifest: strip every protocol-era key, as a pre-PR-10
+        # writer would have produced
+        mf = tmp_path / "step_0000000000" / "manifest.json"
+        m = json.loads(mf.read_text())
+        for k in ("approximation", "kernel", "neighbors"):
+            m["metadata"]["spec"].pop(k, None)
+        mf.write_text(json.dumps(m))
+        re = GP.load(tmp_path)
+        assert re.spec.approximation == "fagp"
+        assert re.spec.kernel is None and re.spec.neighbors is None
+        for leaf in ("lam", "sqrtlam", "chol", "u", "b"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(re.state, leaf)),
+                np.asarray(getattr(gp.state, leaf)),
+            )
+        np.testing.assert_array_equal(np.asarray(re.mean_var(Xs)[0]),
+                                      np.asarray(gp.mean_var(Xs)[0]))
+
+
 class TestBackendCapabilities:
     def test_pallas_refuses_deep_recurrence(self):
-        """supports() refuses at dispatch with a clear error instead of
-        crashing inside kernel preparation."""
+        """supports() refuses at dispatch with the structured
+        UnsupportedError instead of crashing inside kernel preparation."""
         from repro.core import expansions
 
         X, y, _, _ = _problem(p=1, n=4)
@@ -291,6 +350,14 @@ class TestBackendCapabilities:
                              backend="pallas")
         with pytest.raises(ValueError, match="does not support"):
             fagp.fit(X, y, deep)
+        # the refusal is one structured type across the whole codebase,
+        # carrying where it came from and what was missing
+        with pytest.raises(UnsupportedError) as ei:
+            fagp.fit(X, y, deep)
+        assert ei.value.layer == "backend"
+        assert ei.value.capability == "pallas"
+        assert ei.value.spec is deep
+        assert isinstance(ei.value, ValueError)  # old handlers keep working
 
     def test_restricted_plugin_refused_cleanly(self):
         """A third-party backend declaring a capability limit is refused at

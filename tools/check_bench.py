@@ -36,6 +36,7 @@ _ROW_FIELDS = {
     "BENCH_obs.json": {"name", "seconds", "derived"},
     "BENCH_lifecycle.json": {"name", "seconds", "derived"},
     "BENCH_shard.json": {"name", "seconds", "derived"},
+    "BENCH_vecchia.json": {"name", "seconds", "derived"},
     "BENCH_expansions.json": {"bench", "expansion", "name", "seconds",
                               "derived"},
 }
